@@ -1,0 +1,52 @@
+"""Paper Fig. 11 reproduction: PULP-OPEN vs ARM Cortex-M4.
+
+Sequential ratio = M4 predicted cycles / PULP-FPU predicted cycles;
+parallel ratio adds the 8-core split. Compared against the paper's
+per-kernel Fig. 11 bars.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_tables import FIG11_M4, HEADLINE
+from repro.core.amdahl import analyze_parallel
+from repro.core.precision import BACKENDS, PAPER_CENSUSES, predicted_cycles
+
+KERNELS = ("svm", "lr", "gnb", "knn", "kmeans_iter", "rf")
+PAPER_KEY = {"kmeans_iter": "kmeans"}
+ITERS = {"kmeans_iter": 40.0}
+
+
+def run(csv_rows: list, fitted=None):
+    # NOTE: the M4 comparison always uses the literature-SEEDED vectors for
+    # both platforms — the Table-2 refit only covers the PULP backends, and
+    # a ratio between a fitted and an unfitted vector would be meaningless.
+    del fitted
+    fpu = BACKENDS["fpu"]
+    m4 = BACKENDS["cortex-m4"]
+    print("\n== Cortex-M4 comparison (paper Fig. 11) ==")
+    print(f"{'kernel':12s} {'seq pred':>9s} {'seq paper':>10s} "
+          f"{'par pred':>9s} {'par paper':>10s}")
+    for kname in KERNELS:
+        pk = PAPER_KEY.get(kname, kname)
+        it = ITERS.get(kname, 1.0)
+        m4_cycles = predicted_cycles(PAPER_CENSUSES[kname], m4) * it
+        pulp_cycles = predicted_cycles(PAPER_CENSUSES[kname], fpu) * it
+        seq_ratio = m4_cycles / pulp_cycles
+        par = analyze_parallel(PAPER_CENSUSES[kname], fpu, 8, kernel=kname,
+                               iters=it)
+        par_ratio = m4_cycles / par.predicted_cycles_n
+        print(f"{kname:12s} {seq_ratio:9.2f} {FIG11_M4['sequential'][pk]:10.2f} "
+              f"{par_ratio:9.2f} {FIG11_M4['parallel'][pk]:10.2f}")
+        csv_rows.append((f"cortex_m4/{kname}/sequential", seq_ratio,
+                         f"paper={FIG11_M4['sequential'][pk]}"))
+        csv_rows.append((f"cortex_m4/{kname}/parallel", par_ratio,
+                         f"paper={FIG11_M4['parallel'][pk]}"))
+    lo, hi = HEADLINE["m4_sequential_range"]
+    print(f"-- paper sequential range {lo}-{hi}x, parallel "
+          f"{HEADLINE['m4_parallel_range'][0]}-{HEADLINE['m4_parallel_range'][1]}x")
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)

@@ -1,0 +1,467 @@
+"""Post-SPMD HLO analysis for the roofline: loop-weighted FLOPs, HBM bytes,
+and collective bytes.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body ONCE, so for
+scan-over-layers programs it underestimates per-step work by ~n_layers.
+This module re-derives the three roofline numerators from the optimized HLO
+text, multiplying ops inside while bodies by the loop trip count
+(``known_trip_count`` backend_config, falling back to the constant in the
+loop-condition compare).
+
+All reported quantities are PER-DEVICE PER-STEP (the post-SPMD module is the
+per-device program), matching roofline terms computed against per-chip peaks.
+
+  - flops: dot ops = 2 * prod(result_dims) * prod(lhs contracting dims);
+    elementwise/fusion ops = 1 flop per output element (reported separately).
+  - bytes: sum of (operand bytes + result bytes) of every materialised op
+    (fusion boundaries = HBM round-trips; parameters/constants/tuples and
+    control-flow wrappers excluded).
+  - collective_bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute / collective-broadcast.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "s4": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+# bytes-on-the-wire per operand byte (ring algorithms, large N):
+# all-reduce = reduce-scatter + all-gather = 2(N-1)/N ~ 2; the others ~ 1.
+WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=\s*%?([\w\.\-]+),\s*body=\s*%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|branch_computations|called_computations)="
+                       r"\{?\s*%?([\w\.\-,% ]+)\}?")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_TRIP_HINT_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPNAME_RE = re.compile(r"^([a-z][a-z0-9\-]*)\(")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "custom-call",
+}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class OpInfo:
+    name: str
+    op: str
+    result_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    table: Dict[str, List[Tuple[str, List[int]]]] = field(default_factory=dict)
+    params: Dict[int, str] = field(default_factory=dict)  # parameter(i) -> name
+    root: Optional[OpInfo] = None
+
+
+@dataclass
+class HloStats:
+    flops_dot: float = 0.0
+    flops_ew: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_kind: Dict[str, float] = field(default_factory=dict)
+    top_collectives: List[Tuple[str, float]] = field(default_factory=list)
+    top_bytes: List[Tuple[str, float]] = field(default_factory=list)
+    top_flops: List[Tuple[str, float]] = field(default_factory=list)
+
+    @property
+    def flops(self) -> float:
+        return self.flops_dot + self.flops_ew
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_dot": self.flops_dot,
+            "flops_ew": self.flops_ew,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "per_kind": dict(self.per_kind),
+            "top_collectives": [list(t) for t in self.top_collectives[:12]],
+            "top_bytes": [list(t) for t in self.top_bytes[:12]],
+            "top_flops": [list(t) for t in self.top_flops[:12]],
+        }
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and "->" in line and ("(" in line):
+            is_entry = line.startswith("ENTRY")
+            name_part = line[5:] if is_entry else line
+            name_part = name_part.strip()
+            if name_part.startswith("%"):
+                name_part = name_part[1:]
+            name = name_part.split(" ", 1)[0].split("(", 1)[0]
+            cur = Computation(name=name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # entry header params have shapes -> seed the table
+            for m in re.finditer(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))",
+                                 line):
+                pname, pshape = m.group(1), m.group(2)
+                shapes = _parse_shapes(pshape)
+                if shapes:
+                    cur.table[pname] = shapes
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        is_root = line.lstrip().startswith("ROOT ")
+        name, rhs = m.group(1), m.group(2)
+        # result shape(s): text before the op name
+        om = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        op = om.group(1) if om else ""
+        result_text = rhs[: om.start()] if om else rhs
+        result_shapes = _parse_shapes(result_text)
+        # operands: %names inside the op parens
+        operands: List[str] = []
+        if om:
+            depth = 0
+            end = len(rhs)
+            for i in range(om.end() - 1, len(rhs)):
+                if rhs[i] == "(":
+                    depth += 1
+                elif rhs[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(rhs[om.end(): end])
+        info = OpInfo(name=name, op=op, result_shapes=result_shapes,
+                      operands=operands, line=line, is_root=is_root)
+        cur.ops.append(info)
+        cur.table[name] = result_shapes
+        if is_root:
+            cur.root = info
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                cur.params[int(pm.group(1))] = name
+    return comps, entry
+
+
+def _elems(shapes) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _trip_count(comp: Optional[Computation], line: str) -> int:
+    m = _TRIP_HINT_RE.search(line)
+    if m:
+        return int(m.group(1))
+    if comp is not None:
+        consts = [int(c) for op in comp.ops for c in _CONST_RE.findall(op.line)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "power", "negate", "abs", "select",
+    "compare", "convert", "reduce", "fusion", "and", "or", "xor",
+}
+
+
+def analyze(hlo: str) -> HloStats:
+    comps, entry = parse_module(hlo)
+    stats = HloStats(per_kind={})
+    coll_sizes: Dict[str, float] = {}
+    byte_sizes: Dict[str, float] = {}
+    flop_sizes: Dict[str, float] = {}
+
+    def _key(op: OpInfo) -> str:
+        return op.line[:100]
+
+    def add_bytes(op: OpInfo, b: float):
+        stats.bytes += b
+        byte_sizes[_key(op)] = byte_sizes.get(_key(op), 0.0) + b
+
+    def add_flops(op: OpInfo, f: float, dot: bool):
+        if dot:
+            stats.flops_dot += f
+        else:
+            stats.flops_ew += f
+        flop_sizes[_key(op)] = flop_sizes.get(_key(op), 0.0) + f
+
+    def operand_bytes(comp: Computation, op: OpInfo) -> int:
+        total = 0
+        for o in op.operands:
+            shapes = comp.table.get(o)
+            if shapes:
+                total += _shape_bytes(shapes)
+        return total
+
+    _FUSION_CALL_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+    def _fusion_bytes(comp: Computation, op: OpInfo) -> Optional[int]:
+        """Inspect the fused computation: operands consumed only through
+        dynamic-slice are charged at slice size (a scan body slicing one
+        layer out of a stacked (L, ...) parameter reads one layer, not L);
+        a dynamic-update-slice root writes the update region in place."""
+        m = _FUSION_CALL_RE.search(op.line)
+        body = comps.get(m.group(1)) if m else None
+        if body is None:
+            return None
+        # pass-through aliases inside the body (convert/bitcast/copy/... of a
+        # parameter are free inside a fusion — nothing materialises but the
+        # root), so slice/update matching must look through them
+        PASS = ("convert", "bitcast", "copy", "reshape", "transpose",
+                "broadcast")
+        alias = {bop.name: bop.operands[0] for bop in body.ops
+                 if bop.op in PASS and len(bop.operands) == 1}
+
+        def base(n: str) -> str:
+            seen = set()
+            while n in alias and n not in seen:
+                seen.add(n)
+                n = alias[n]
+            return n
+
+        # effective output bytes; the root may be a pass-through wrapper
+        # (e.g. ROOT convert(dynamic-update-slice(...)) on the CPU backend)
+        out_b = _shape_bytes(op.result_shapes)
+        dus_target_param = None
+        root_eff = body.root
+        name_to_op = {bop.name: bop for bop in body.ops}
+        while root_eff is not None and root_eff.op in PASS and \
+                len(root_eff.operands) == 1:
+            root_eff = name_to_op.get(root_eff.operands[0])
+        if root_eff is not None and root_eff.op == "dynamic-update-slice":
+            upd = body.table.get(base(root_eff.operands[1])) if \
+                len(root_eff.operands) > 1 else None
+            if upd:
+                out_b = 2 * _shape_bytes(upd)   # read-modify-write the slice
+            if root_eff.operands:
+                dus_target_param = base(root_eff.operands[0])
+        total = out_b
+        for i, oname in enumerate(op.operands):
+            full_shapes = comp.table.get(oname)
+            if not full_shapes:
+                continue
+            full = _shape_bytes(full_shapes)
+            pdef = body.params.get(i)
+            if pdef is None:
+                total += full
+                continue
+            if pdef == dus_target_param:
+                continue                         # aliased in-place target
+            ds_bytes = 0
+            only_ds = True
+            consumed = False
+            for bop in body.ops:
+                if bop.op in PASS:
+                    continue                     # looked through via alias
+                for o in bop.operands:
+                    if base(o) == pdef:
+                        consumed = True
+                        if bop.op == "dynamic-slice":
+                            ds_bytes += _shape_bytes(bop.result_shapes)
+                        else:
+                            only_ds = False
+                        break
+            if consumed and only_ds and ds_bytes:
+                total += min(ds_bytes, full)
+            else:
+                total += full
+        return total
+
+    def materialized_bytes(comp: Computation, op: OpInfo) -> int:
+        """Operand+result bytes with in-place slice-update correction.
+
+        dynamic-update-slice executes in place on TPU: traffic is the slice
+        read+write, not the full aliased buffer (same for dynamic-slice
+        reads). Without this fix a scan-carried activation stash counts its
+        whole buffer once per layer.
+        """
+        res = _shape_bytes(op.result_shapes)
+        ob = operand_bytes(comp, op)
+        if op.op == "fusion":
+            fb = _fusion_bytes(comp, op)
+            if fb is not None:
+                return fb
+        if "dynamic-update-slice" in op.line or op.op == "scatter" or \
+                "scatter" in op.line.split("(")[0]:
+            # drop the aliased big operand (same bytes as result); remaining
+            # operands ~= indices + update slice; traffic = read + write
+            slice_ob = ob - res if ob >= res else ob
+            return 2 * max(slice_ob, 0)
+        if "dynamic-slice" in op.line:
+            return 2 * res
+        return ob + res
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            kind = op.op
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if base_kind in COLLECTIVE_KINDS:
+                ob = operand_bytes(comp, op) or _shape_bytes(op.result_shapes)
+                if base_kind == "all-gather" and ob >= _shape_bytes(
+                        op.result_shapes) and _shape_bytes(op.result_shapes):
+                    # all-gather result >= operand; if lookup failed take result
+                    ob = min(ob, _shape_bytes(op.result_shapes))
+                b = ob * mult * WIRE_FACTOR[base_kind]
+                stats.collective_bytes += b
+                stats.per_kind[base_kind] = stats.per_kind.get(base_kind, 0.0) + b
+                key = f"{base_kind} {op.line[:80]}"
+                coll_sizes[key] = coll_sizes.get(key, 0.0) + b
+                add_bytes(op, materialized_bytes(comp, op) * mult)
+                continue
+            if kind == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trips = _trip_count(comps.get(cond), op.line)
+                    walk(body, mult * trips)
+                continue
+            if kind in ("conditional", "call"):
+                for grp in _CALLS_RE.findall(op.line):
+                    for tgt in re.findall(r"[\w\.\-]+", grp):
+                        walk(tgt, mult)
+                continue
+            if kind == "dot":
+                res = _elems(op.result_shapes)
+                cm = _CDIMS_RE.search(op.line)
+                contract = 1
+                if cm and op.operands:
+                    lhs_shapes = comp.table.get(op.operands[0])
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci:
+                                i = int(ci)
+                                if i < len(dims):
+                                    contract *= dims[i]
+                add_flops(op, 2.0 * res * contract * mult, dot=True)
+                add_bytes(op, materialized_bytes(comp, op) * mult)
+                continue
+            if kind == "convolution":
+                # approx: 2 * out_elems * (rhs_elems / out_channels)
+                res = _elems(op.result_shapes)
+                rhs = comp.table.get(op.operands[1]) if len(op.operands) > 1 else None
+                k = _elems(rhs) if rhs else 1
+                out_ch = op.result_shapes[0][1][-1] if op.result_shapes and \
+                    op.result_shapes[0][1] else 1
+                add_flops(op, 2.0 * res * max(k // max(out_ch, 1), 1) * mult,
+                          dot=True)
+                add_bytes(op, materialized_bytes(comp, op) * mult)
+                continue
+            if kind in SKIP_BYTES_OPS:
+                continue
+            # CPU-backend artifact: bf16 dot operands are legalised through
+            # f32 converts; TPU MXUs read bf16 directly (f32 accumulate), so
+            # pure dtype-change fusions are free on the target hardware.
+            if kind == "fusion" and "convert" in op.name:
+                res_elems = _elems(op.result_shapes)
+                op_elems = sum(_elems(comp.table.get(o, []))
+                               for o in op.operands)
+                if res_elems and res_elems == op_elems and \
+                        op.result_shapes[0][0] == "f32":
+                    continue
+            # generic materialised op: 1 flop/elem, operand+result bytes
+            if kind in EW_OPS or kind:
+                add_flops(op, _elems(op.result_shapes) * mult, dot=False)
+                add_bytes(op, materialized_bytes(comp, op) * mult)
+
+    if entry:
+        walk(entry, 1.0)
+    stats.top_collectives = sorted(coll_sizes.items(), key=lambda kv: -kv[1])
+    stats.top_bytes = sorted(byte_sizes.items(), key=lambda kv: -kv[1])
+    stats.top_flops = sorted(flop_sizes.items(), key=lambda kv: -kv[1])
+    return stats
+
+
+# ------------------------------------------------------------------
+# Back-compat helpers (used by dryrun/roofline)
+# ------------------------------------------------------------------
+
+
+def collective_bytes(hlo: str) -> Tuple[int, Dict[str, int]]:
+    st = analyze(hlo)
+    return int(st.collective_bytes), {k: int(v) for k, v in st.per_kind.items()}
+
+
+def cost_summary(cost_analysis) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() output across jax versions."""
+    ca = cost_analysis
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {"flops": 0.0, "bytes_accessed": 0.0}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes_accessed": bytes_accessed}

@@ -1,0 +1,67 @@
+"""Pallas BlockSpec analysis: VMEM working set + MXU alignment per kernel.
+
+No wall-clock on CPU — this is the structural reasoning the dry-run perf
+loop uses for kernels (assignment: "BlockSpec shapes determine the VMEM
+footprint you claim; pick them so the working set fits VMEM and the MXU
+matmul dims are multiples of 128").
+"""
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 2 ** 20   # ~16 MiB/core budget (conservative)
+MXU = 128
+
+
+def gemm_working_set(bm: int, bn: int, bk: int, bytes_in: int = 2,
+                     acc_bytes: int = 4) -> dict:
+    """Double-buffered input tiles + f32 accumulator."""
+    a = bm * bk * bytes_in * 2         # 2x: grid pipeline double buffering
+    b = bk * bn * bytes_in * 2
+    acc = bm * bn * acc_bytes
+    out = bm * bn * bytes_in
+    total = a + b + acc + out
+    return {
+        "tiles": f"A({bm}x{bk}) B({bk}x{bn}) acc({bm}x{bn})",
+        "vmem_bytes": total,
+        "fits": total <= VMEM_BYTES,
+        "mxu_aligned": bm % MXU == 0 and bn % MXU == 0 and bk % MXU == 0,
+        "arith_intensity": (2 * bm * bn * bk) /
+                           ((bm * bk + bk * bn) * bytes_in + bm * bn * bytes_in),
+    }
+
+
+def flash_working_set(bq: int, bk: int, d: int, bytes_in: int = 2) -> dict:
+    q = bq * d * bytes_in
+    kv = 2 * bk * d * bytes_in * 2
+    s = bq * bk * 4
+    stats = bq * (2 + d) * 4
+    total = q + kv + s + stats
+    return {"vmem_bytes": total, "fits": total <= VMEM_BYTES,
+            "mxu_aligned": bq % MXU == 0 and bk % MXU == 0}
+
+
+def run(csv_rows: list):
+    print("\n== Kernel BlockSpec analysis (VMEM budget 16 MiB, MXU 128) ==")
+    print(f"{'kernel':8s} {'blocks':26s} {'VMEM':>10s} {'fits':>5s} "
+          f"{'aligned':>8s} {'AI (flop/B)':>12s}")
+    best = None
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 256), (512, 512, 256),
+                       (512, 1024, 512), (1024, 1024, 512)]:
+        w = gemm_working_set(bm, bn, bk)
+        print(f"{'gemm':8s} {w['tiles']:26s} {w['vmem_bytes']/2**20:9.2f}M "
+              f"{str(w['fits']):>5s} {str(w['mxu_aligned']):>8s} "
+              f"{w['arith_intensity']:12.1f}")
+        if w["fits"] and w["mxu_aligned"]:
+            best = (bm, bn, bk, w["arith_intensity"])
+    print(f"-- best fitting gemm tile: {best[:3]}, arithmetic intensity "
+          f"{best[3]:.0f} flop/B (ridge point at 197e12/819e9 = 241)")
+    for bq, bk in [(128, 128), (256, 512), (512, 1024)]:
+        w = flash_working_set(bq, bk, 128)
+        print(f"{'flash':8s} bq={bq} bk={bk} d=128{'':11s}"
+              f"{w['vmem_bytes']/2**20:9.2f}M {str(w['fits']):>5s} "
+              f"{str(w['mxu_aligned']):>8s}")
+    csv_rows.append(("kernel_blocks/gemm_best", 0.0,
+                     f"tile={best[:3]};ai={best[3]:.0f}"))
+
+
+if __name__ == "__main__":
+    run([])

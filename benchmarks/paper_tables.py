@@ -1,0 +1,47 @@
+"""The paper's measured numbers (Tables 2-3, Figures 9-11), used as
+calibration/validation targets by the benchmark harness."""
+
+# Table 2: single-core cycles per inference
+TABLE2_CYCLES = {
+    "libgcc": {"svm": 1.01e6, "lr": 1.04e6, "gnb": 22.1e6, "knn": 8.31e6,
+               "kmeans": 265e6, "rf": 16.8e3},
+    "rvfplib": {"svm": 594e3, "lr": 607e3, "gnb": 15.8e6, "knn": 4.38e6,
+                "kmeans": 168e6, "rf": 12.4e3},
+    "fpu": {"svm": 39.4e3, "lr": 40.5e3, "gnb": 778e3, "knn": 259e3,
+            "kmeans": 8.72e6, "rf": 6.76e3},
+}
+
+# Table 3: measured 1-vs-8-core speedups (and the paper's Amdahl bounds)
+TABLE3_SPEEDUP = {
+    "libgcc": {"svm": 7.03, "lr": 7.07, "gnb": 7.49, "knn": 7.59,
+               "kmeans": 7.47, "rf": 6.66},
+    "rvfplib": {"svm": 6.83, "lr": 6.83, "gnb": 7.64, "knn": 7.51,
+                "kmeans": 7.29, "rf": 6.70},
+    "fpu": {"svm": 7.05, "lr": 6.63, "gnb": 6.56, "knn": 6.65,
+            "kmeans": 6.98, "rf": 6.82},
+}
+TABLE3_THEORETICAL = {
+    "libgcc": {"svm": 7.94, "lr": 7.88, "gnb": 7.89, "knn": 7.94,
+               "kmeans": 8.0, "rf": 7.92},
+    "rvfplib": {"svm": 7.94, "lr": 7.95, "gnb": 7.96, "knn": 7.93,
+                "kmeans": 8.0, "rf": 7.90},
+    "fpu": {"svm": 7.83, "lr": 7.88, "gnb": 7.91, "knn": 7.59,
+            "kmeans": 8.0, "rf": 7.81},
+}
+
+# Headline claims (abstract / §5)
+HEADLINE = {
+    "rvfplib_avg_speedup": 1.61,          # vs libgcc, single core
+    "fpu_max_speedup": 32.09,             # vs libgcc, single core (kNN)
+    "parallel_speedup_range": (6.56, 7.64),
+    "m4_sequential_range": (1.36, 2.39),  # PULP-OPEN 1-core vs Cortex-M4
+    "m4_parallel_range": (9.27, 15.85),   # PULP-OPEN 8-core vs Cortex-M4
+}
+
+# Fig. 11 per-kernel M4 comparisons (PULP-OPEN speedup over Cortex-M4)
+FIG11_M4 = {
+    "sequential": {"svm": 2.39, "lr": 2.30, "gnb": 1.74, "knn": 1.94,
+                   "kmeans": 1.94, "rf": 1.36},
+    "parallel": {"svm": 15.85, "lr": 14.65, "gnb": 11.43, "knn": 12.87,
+                 "kmeans": 13.47, "rf": 9.27},
+}

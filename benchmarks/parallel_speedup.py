@@ -1,0 +1,54 @@
+"""Paper Fig. 10 / Table 3 reproduction: 1-vs-8-core parallel speedup.
+
+Amdahl bound from the implementation's own parallel/sequential op split
+(Eq. 15), plus the barrier/I$ non-ideality model, compared against the
+paper's measured speedups per kernel x backend.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_tables import (
+    HEADLINE,
+    TABLE3_SPEEDUP,
+    TABLE3_THEORETICAL,
+)
+from repro.core.amdahl import analyze_parallel
+from repro.core.precision import BACKENDS, PAPER_CENSUSES
+
+KERNELS = ("svm", "lr", "gnb", "knn", "kmeans_iter", "rf")
+PAPER_KEY = {"kmeans_iter": "kmeans"}
+ITERS = {"kmeans_iter": 40.0}
+
+
+def run(csv_rows: list, fitted=None):
+    backends = fitted or BACKENDS
+    print("\n== Parallel speedup (paper Fig.10 / Table 3), 8 cores ==")
+    print(f"{'kernel':12s} {'backend':10s} {'p':>6s} {'amdahl':>7s} "
+          f"{'paper_thr':>9s} {'pred':>6s} {'paper':>6s} {'err':>7s}")
+    errs = []
+    for kname in KERNELS:
+        pk = PAPER_KEY.get(kname, kname)
+        for bname in ("libgcc", "rvfplib", "fpu"):
+            b = backends.get(bname, BACKENDS[bname])
+            m = analyze_parallel(PAPER_CENSUSES[kname], b, n_cores=8,
+                                 kernel=kname, iters=ITERS.get(kname, 1.0))
+            paper_meas = TABLE3_SPEEDUP[bname][pk]
+            paper_thr = TABLE3_THEORETICAL[bname][pk]
+            err = m.predicted_speedup / paper_meas - 1.0
+            errs.append(err)
+            print(f"{kname:12s} {bname:10s} {m.p:6.3f} "
+                  f"{m.theoretical_speedup:7.2f} {paper_thr:9.2f} "
+                  f"{m.predicted_speedup:6.2f} {paper_meas:6.2f} {err:+7.1%}")
+            csv_rows.append((f"parallel_speedup/{kname}/{bname}",
+                             m.predicted_speedup,
+                             f"paper={paper_meas}"))
+    lo, hi = HEADLINE["parallel_speedup_range"]
+    print(f"-- paper range {lo}-{hi}x; mean |err| = "
+          f"{float(np.mean(np.abs(errs))):.1%}")
+    return errs
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)

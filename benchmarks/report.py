@@ -1,0 +1,114 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json (markdown emitters; the narrative lives in
+EXPERIMENTS.md itself).
+
+  PYTHONPATH=src python -m benchmarks.report [--refresh]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import analyze_record, load_records, model_flops
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(mesh: str, tag: str = "baseline") -> str:
+    lines = [
+        f"| arch | shape | status | compile_s | HLO FLOPs/chip | "
+        f"HBM bytes/chip | collective/chip | param bytes/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh, tag):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | SKIP "
+                         f"(sub-quadratic-only) | — | — | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | "
+                         f"ERROR | — | — | — | — | — |")
+            continue
+        hs = rec["hlo_stats"]
+        pbytes = rec["params"] * 2 / rec["n_devices"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | {rec['compile_s']} | "
+            f"{hs['flops_dot']:.2e} | {fmt_bytes(hs['bytes'])} | "
+            f"{fmt_bytes(hs['collective_bytes'])} | {fmt_bytes(pbytes)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "single", tag: str = "baseline") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful | MFU_bound | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh, tag):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"SKIP | — | — | — | sub-quadratic-only shape |")
+            continue
+        r = analyze_record(rec)
+        if not r:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu_bound']:.1%} | "
+            f"{r['advice'][:60]}... |")
+    return "\n".join(lines)
+
+
+def perf_compare_table(cells, tags) -> str:
+    """Before/after table for the hillclimbed cells."""
+    lines = ["| cell | tag | compute_s | memory_s | collective_s | dominant | "
+             "step_lb_s | MFU_bound |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch, shape in cells:
+        for tag in tags:
+            recs = [r for r in load_records("single", tag)
+                    if r["arch"] == arch and r["shape"] == shape]
+            if not recs or recs[0].get("status") != "ok":
+                continue
+            r = analyze_record(recs[0])
+            lines.append(
+                f"| {arch}/{shape} | {tag} | {r['compute_s']:.3f} | "
+                f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                f"{r['dominant']} | {r['step_time_lb_s']:.3f} | "
+                f"{r['mfu_bound']:.1%} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true",
+                    help="re-run the HLO analyzer on cached .hlo.zst files")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    if args.refresh:
+        from benchmarks.roofline import refresh_from_hlo
+        for mesh in ("single", "multi"):
+            n = refresh_from_hlo(mesh, args.tag)
+            print(f"refreshed {n} {mesh} records", file=sys.stderr)
+    print("### Dry-run (single-pod 16x16)\n")
+    print(dryrun_table("single", args.tag))
+    print("\n### Dry-run (multi-pod 2x16x16)\n")
+    print(dryrun_table("multi", args.tag))
+    print("\n### Roofline (single-pod)\n")
+    print(roofline_table("single", args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts in experiments/dryrun/.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. All dry-run quantities are per-device per-step (the
+post-SPMD module is the per-device program), so:
+
+  compute_term    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_term     = HLO_bytes_per_device / HBM_BW
+  collective_term = collective_bytes_per_device / LINK_BW
+
+  step_time_lb = max(terms)          (perfect compute/comm overlap)
+  MODEL_FLOPS  = 6*N*D (train) | 2*N_active*tokens (prefill/decode)
+  mfu_bound    = MODEL_FLOPS/chips/PEAK / step_time_lb
+  useful_ratio = MODEL_FLOPS/chips / HLO_FLOPs  (remat/redundancy waste)
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DRYRUN_DIR = REPO_ROOT / "experiments" / "dryrun"
+
+ADVICE = {
+    "compute": ("increase arithmetic efficiency: larger per-chip tiles "
+                "(less TP for small models), fused kernels, bf16 end-to-end"),
+    "memory": ("cut HBM round-trips: fuse elementwise chains, avoid f32 "
+               "materialisation, flash-style attention, KV-cache dtype"),
+    "collective": ("reshape the sharding: fewer TP all-reduces (reduce-"
+                   "scatter + column/row split pairing), bf16 collectives, "
+                   "overlap with compute"),
+}
+
+
+def load_records(mesh: str = "single", tag: str = "baseline") -> List[dict]:
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(f"{mesh}__*__{tag}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def refresh_from_hlo(mesh: str = "single", tag: str = "baseline") -> int:
+    """Re-run the (possibly updated) HLO analyzer on the compressed HLO
+    cached by the dry-run — no recompiles needed."""
+    import zstandard
+
+    from benchmarks.hlo_analysis import analyze
+
+    n = 0
+    for f in sorted(DRYRUN_DIR.glob(f"{mesh}__*__{tag}.json")):
+        hlo_f = f.with_suffix("").with_suffix("")  # strip .json
+        hlo_f = f.parent / (f.stem + ".hlo.zst")
+        if not hlo_f.exists():
+            continue
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            hlo_f.read_bytes()).decode()
+        stats = analyze(hlo)
+        rec["hlo_stats"] = stats.as_dict()
+        rec["collective_bytes"] = int(stats.collective_bytes)
+        f.write_text(json.dumps(rec, indent=2))
+        n += 1
+    return n
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens
+    tokens = rec["global_batch"]  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    hs = rec["hlo_stats"]
+    chips = rec["n_devices"]
+    flops = hs["flops_dot"] + hs["flops_ew"]
+    compute = flops / PEAK_FLOPS
+    memory = hs["bytes"] / HBM_BW
+    collective = hs["collective_bytes"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    step_lb = max(terms.values())
+    mf = model_flops(rec)
+    mfu = (mf / chips / PEAK_FLOPS) / step_lb if step_lb > 0 else 0.0
+    useful = (mf / chips) / flops if flops > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("tag", "baseline"),
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "step_time_lb_s": step_lb,
+        "model_flops": mf,
+        "mfu_bound": mfu,
+        "useful_ratio": useful,
+        "advice": ADVICE[dominant],
+    }
+
+
+def table(mesh: str = "single", tag: str = "baseline") -> List[dict]:
+    rows = []
+    for rec in load_records(mesh, tag):
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "skipped": rec["reason"]})
+            continue
+        r = analyze_record(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def print_table(rows: List[dict], csv_rows: Optional[list] = None):
+    print("\n== Roofline (per-chip terms, seconds/step) ==")
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'coll':>10s} {'dom':>6s} {'MFU_bd':>7s} {'useful':>7s}")
+    print(hdr)
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"-- skipped: sub-quadratic-only shape --")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['dominant'][:6]:>6s} {r['mfu_bound']:7.1%} "
+              f"{r['useful_ratio']:7.2f}")
+        if csv_rows is not None:
+            csv_rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                             r["step_time_lb_s"] * 1e6,
+                             f"dom={r['dominant']};mfu={r['mfu_bound']:.3f}"))
+
+
+def run(csv_rows: list):
+    rows = table("single")
+    print_table(rows, csv_rows)
+    ok = [r for r in rows if "skipped" not in r]
+    if ok:
+        from collections import Counter
+        doms = Counter(r["dominant"] for r in ok)
+        print(f"-- dominant-term distribution: {dict(doms)}")
+        worst = sorted(ok, key=lambda r: r["mfu_bound"])[:3]
+        print("-- worst MFU-bound cells: "
+              + ", ".join(f"{r['arch']}/{r['shape']}={r['mfu_bound']:.1%}"
+                          for r in worst))
+    return rows
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    csv_rows: list = []
+
+    from benchmarks import cortex_m4, fp_backends, kernel_blocks
+    from benchmarks import parallel_speedup, roofline, sorting
+
+    fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
+    parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
+    cortex_m4.run(csv_rows)                     # Fig. 11
+    sorting.run(csv_rows)                       # Eq. 14
+    kernel_blocks.run(csv_rows)                 # Pallas BlockSpec analysis
+    roofline.run(csv_rows)                      # deliverable (g)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

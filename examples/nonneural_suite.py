@@ -1,0 +1,29 @@
+"""End-to-end reproduction of the paper's experimental section: train all
+six kernels, then regenerate Tables 2-3 and Figures 9-11 analytically from
+the implementation's own op censuses (see DESIGN.md §6).
+
+  PYTHONPATH=src python examples/nonneural_suite.py
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+
+def main():
+    rows = []
+    from benchmarks import cortex_m4, fp_backends, parallel_speedup, sorting
+
+    fitted = fp_backends.run(rows)        # Fig. 9 / Table 2
+    parallel_speedup.run(rows, fitted)    # Fig. 10 / Table 3
+    cortex_m4.run(rows)                   # Fig. 11
+    sorting.run(rows)                     # Eq. 14
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the paper's six Non-Neural ML kernels with the 8-core PULP
+parallelisation schemes, on synthetic stand-ins for the paper's datasets.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm_based as G
+from repro.core import gnb as NB
+from repro.core import kmeans as KM
+from repro.core import knn as KNN
+from repro.core import random_forest as RF
+from repro.data.datasets import asd_like, digits_like, mnist_like
+
+N_CORES = 8   # the PULP cluster
+
+def main():
+    print(f"devices: {jax.devices()}  (cluster semantics via VirtualCluster,"
+          f" n_cores={N_CORES})")
+
+    # -- GEMM-based (LR / SVM) + GNB on the MNIST-like set ------------------
+    X, y = mnist_like(1500)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    lr = G.train_lr(Xj, yj, 10, steps=150)
+    svm = G.train_svm(Xj, yj, 10, steps=150)
+    gnb = NB.fit_gnb(Xj, yj, 10)
+    print(f"LR  (Fig.4 OP1/OP2/OP3) acc = "
+          f"{float(jnp.mean(G.lr_predict_batch(lr, Xj, N_CORES) == yj)):.3f}")
+    print(f"SVM (Fig.4)             acc = "
+          f"{float(jnp.mean(G.svm_predict_batch(svm, Xj, N_CORES) == yj)):.3f}")
+    print(f"GNB (Fig.5)             acc = "
+          f"{float(jnp.mean(NB.gnb_predict_batch(gnb, Xj, N_CORES) == yj)):.3f}")
+
+    # -- MS-based (kNN / K-Means) on the ASD-like set -----------------------
+    Xa, ya = asd_like(1000, n_class=2)
+    Xaj, yaj = jnp.asarray(Xa), jnp.asarray(ya)
+    knn = KNN.KNNModel(A=Xaj, labels=yaj, n_class=2)
+    acc = float(jnp.mean(KNN.knn_predict_batch(knn, Xaj[:200], k=4,
+                                               n_cores=N_CORES) == yaj[:200]))
+    print(f"kNN (Fig.6, k=4, local SS + global merge) acc = {acc:.3f}")
+
+    st, ids = KM.kmeans_fit(Xaj, 2, n_cores=N_CORES)
+    print(f"k-Means (Fig.7, k=2) converged in {int(st.n_iter)} iters, "
+          f"inertia = {float(KM.inertia(Xaj, st.centroids, ids)):.1f}")
+
+    # -- IT-based (RF) on the digits-like set -------------------------------
+    Xd, yd = digits_like(1000)
+    rf = RF.train_forest(Xd, yd, 10, n_trees=16, max_depth=8)
+    accs = float(jnp.mean(RF.forest_predict_batch(
+        rf, jnp.asarray(Xd[:300]), N_CORES) == yd[:300]))
+    print(f"RF  (Fig.8, 16 DTs over {N_CORES} cores, array-encoded) "
+          f"acc = {accs:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched LM serving (the paper's kind is inference, so this is the
+end-to-end driver): prefill a batch of prompts, decode with the KV/SSM
+cache, report tokens/s. Uses the reduced qwen3-MoE config — the router runs
+the paper's local-selection + global-merge top-k.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-moe-30b-a3b]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:] or ["--arch", "qwen3-moe-30b-a3b"]
+    serve.main(argv + ["--smoke", "--batch", "8", "--prompt-len", "64",
+                       "--new-tokens", "32"])
+
+
+if __name__ == "__main__":
+    main()

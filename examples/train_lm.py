@@ -1,0 +1,25 @@
+"""LM training with the full production loop: sharded params, AdamW+ZeRO-1,
+grad accumulation, async checkpointing with resume, straggler monitoring.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch stablelm-3b]
+
+On a real pod, drop --smoke, set a mesh, and pass the XLA latency-hiding
+flags listed in repro/launch/train.py.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:] or ["--arch", "stablelm-3b"]
+    train.main(argv + ["--smoke", "--steps", "200", "--batch", "8",
+                       "--seq", "128", "--microbatches", "2",
+                       "--ckpt-every", "50", "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

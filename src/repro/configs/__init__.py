@@ -1,0 +1,18 @@
+from repro.configs.base import (  # noqa: F401
+    AttnConfig,
+    EncoderConfig,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ServeConfig,
+    SSMConfig,
+    TrainConfig,
+    VisionConfig,
+    reduced,
+)
+from repro.configs.shapes import (  # noqa: F401
+    ALL_SHAPE_NAMES,
+    SHAPES,
+    ShapeConfig,
+    shape_applicable,
+)

@@ -1,0 +1,322 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input shapes are
+``ShapeConfig`` (see ``shapes.py``); distribution is ``MeshConfig``; training
+and serving knobs live in ``TrainConfig`` / ``ServeConfig``.
+
+Configs are plain frozen dataclasses so they hash, compare, and print cleanly,
+and so jitted step functions can close over them as static state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts settings.
+
+    The router's distributed top-k is implemented with the paper's
+    local-selection + global-merge scheme (core/topk.py) when the expert axis
+    is sharded.
+    """
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    every: int = 1            # apply MoE on layers where (layer_idx % every == every-1)
+    router_dtype: str = "float32"
+    load_balance_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD settings (arXiv:2405.21060)."""
+
+    d_state: int = 128        # N
+    head_dim: int = 64        # P
+    expand: int = 2           # d_inner = expand * d_model
+    chunk: int = 256          # SSD chunk length (intra-chunk quadratic -> MXU)
+    conv_width: int = 4
+    n_groups: int = 1         # B/C groups (GQA-analogue for SSM)
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    rope_theta: float = 10_000.0
+    head_dim: Optional[int] = None      # explicit override (gemma: 256)
+    causal: bool = True
+    logits_softcap: Optional[float] = None
+    qk_norm: bool = False               # qwen3-style per-head RMSNorm on q/k
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec (whisper) archs. Frontend is a stub: the
+    data pipeline / input_specs provide precomputed frame embeddings."""
+
+    n_layers: int
+    n_ctx: int = 1500          # whisper: 30s audio -> 1500 frames after conv stub
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """VLM stub frontend: precomputed patch embeddings are concatenated in
+    front of the token embeddings (phi-3-vision style)."""
+
+    num_patches: int = 576
+    patch_dim: Optional[int] = None   # None -> d_model (pre-projected stub)
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                    # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    mlp_type: str = "swiglu"       # swiglu | geglu | squared_relu | gelu
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn: AttnConfig = field(default_factory=AttnConfig)
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionConfig] = None
+    # Hybrid (jamba): within each block of ``hybrid_block`` layers, layer
+    # index ``hybrid_attn_pos`` is attention, the rest are mamba.
+    hybrid_block: int = 0
+    hybrid_attn_pos: int = 0
+    dtype: str = "bfloat16"        # activation/param compute dtype at scale
+    use_pallas: bool = False       # swap in Pallas kernels (TPU only)
+    sub_quadratic: bool = False    # supports long_500k decode (SSM/hybrid)
+
+    # ---- derived ----
+    @property
+    def head_dim(self) -> int:
+        return self.attn.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        assert self.ssm is not None
+        return self.d_inner // self.ssm.head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have an autoregressive decoder
+
+    def attn_layer_indices(self) -> Tuple[int, ...]:
+        """Which layer indices run attention (vs mamba) — hybrid archs."""
+        if self.family == "ssm":
+            return ()
+        if self.hybrid_block:
+            return tuple(
+                i for i in range(self.n_layers)
+                if i % self.hybrid_block == self.hybrid_attn_pos
+            )
+        return tuple(range(self.n_layers))
+
+    def moe_layer_indices(self) -> Tuple[int, ...]:
+        if self.moe is None:
+            return ()
+        e = self.moe.every
+        return tuple(i for i in range(self.n_layers) if i % e == e - 1)
+
+    # ---- parameter counts (for roofline MODEL_FLOPS) ----
+    def param_count(self) -> int:
+        """Total parameters (embedding included)."""
+        return _count_params(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k experts only)."""
+        return _count_params(self, active_only=True)
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    mult = 3 if gated else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    return cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    c = cfg.ssm
+    d_in = cfg.d_inner
+    nheads = cfg.ssm_heads
+    # in_proj -> [z, x, B, C, dt]
+    in_proj = cfg.d_model * (2 * d_in + 2 * c.n_groups * c.d_state + nheads)
+    out_proj = d_in * cfg.d_model
+    conv = c.conv_width * (d_in + 2 * c.n_groups * c.d_state)
+    extra = 3 * nheads  # A_log, D, dt_bias
+    return in_proj + out_proj + conv + extra
+
+
+def _count_params(cfg: ModelConfig, active_only: bool) -> int:
+    total = cfg.vocab_size * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * cfg.d_model  # unembed
+    attn_layers = set(cfg.attn_layer_indices())
+    moe_layers = set(cfg.moe_layer_indices())
+    for i in range(cfg.n_layers):
+        total += 2 * cfg.d_model  # norms
+        if cfg.family == "ssm" or (cfg.hybrid_block and i not in attn_layers):
+            total += _ssm_params(cfg)
+        else:
+            total += _attn_params(cfg)
+        if i in moe_layers:
+            m = cfg.moe
+            n_used = m.top_k if active_only else m.num_experts
+            total += n_used * _mlp_params(cfg, m.d_ff_expert)
+            total += cfg.d_model * m.num_experts  # router
+        elif cfg.family != "ssm" or cfg.d_ff:
+            if cfg.d_ff:
+                total += _mlp_params(cfg, cfg.d_ff)
+    if cfg.encoder is not None:
+        for _ in range(cfg.encoder.n_layers):
+            total += 2 * cfg.d_model + _attn_params(cfg) + _mlp_params(cfg, cfg.d_ff)
+        # decoder cross-attention blocks
+        total += cfg.n_layers * (_attn_params(cfg) + cfg.d_model)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Mesh / Train / Serve configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh description. ``multi_pod`` adds the leading pod axis."""
+
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.pods > 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.multi_pod else (self.data, self.model)
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """Axes carrying data parallelism (batch sharding)."""
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1            # grad accumulation (scan)
+    remat: str = "dots"              # none | dots | full
+    zero1: bool = True               # shard optimizer moments over data axis
+    grad_compression: str = "none"   # none | int8
+    label_smoothing: float = 0.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 32_768
+    decode_microbatch: int = 0       # 0 = whole batch at once
+    kv_dtype: str = "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# Reduced ("smoke") configs
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A tiny config of the same *family* for CPU smoke tests.
+
+    Keeps the structural features (GQA ratio, gating type, MoE, hybrid
+    interleave, enc-dec) while shrinking every dimension.
+    """
+    kw = dict(
+        n_layers=min(cfg.n_layers, cfg.hybrid_block or 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(4, 4 * cfg.n_kv_heads // max(cfg.n_heads, 1)) or 1),
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=128,
+        dtype="float32",
+        use_pallas=False,
+    )
+    if cfg.attn.head_dim is not None:
+        kw["attn"] = replace(cfg.attn, head_dim=16)
+    if cfg.moe is not None:
+        kw["moe"] = replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64,
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = replace(cfg.ssm, d_state=16, head_dim=16, chunk=32)
+    if cfg.encoder is not None:
+        kw["encoder"] = replace(cfg.encoder, n_layers=2, n_ctx=16)
+    if cfg.vision is not None:
+        kw["vision"] = replace(cfg.vision, num_patches=4)
+    if cfg.hybrid_block:
+        kw["hybrid_block"] = 4
+        kw["hybrid_attn_pos"] = min(cfg.hybrid_attn_pos, 3)
+        kw["n_layers"] = 4
+    return replace(cfg, **kw)
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

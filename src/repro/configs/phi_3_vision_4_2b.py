@@ -1,0 +1,22 @@
+"""phi-3-vision-4.2b — phi3-mini backbone + CLIP frontend (stubbed)
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+32L, d_model=3072, 32H (kv=32 -> MHA), d_ff=8192, vocab=32064. The vision
+frontend is a STUB per assignment: input_specs() provides precomputed patch
+embeddings of shape (batch, num_patches, d_model), prepended to the tokens.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_064,
+    mlp_type="swiglu",
+    attn=AttnConfig(rope_theta=10_000.0),
+    vision=VisionConfig(num_patches=576),
+)

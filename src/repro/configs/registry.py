@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, reduced
+from repro.configs import (
+    mamba2_780m,
+    stablelm_3b,
+    nemotron_4_340b,
+    gemma_7b,
+    deepseek_67b,
+    jamba_1_5_large_398b,
+    phi3_5_moe_42b,
+    qwen3_moe_30b_a3b,
+    phi_3_vision_4_2b,
+    whisper_large_v3,
+)
+
+_MODULES = (
+    mamba2_780m,
+    stablelm_3b,
+    nemotron_4_340b,
+    gemma_7b,
+    deepseek_67b,
+    jamba_1_5_large_398b,
+    phi3_5_moe_42b,
+    qwen3_moe_30b_a3b,
+    phi_3_vision_4_2b,
+    whisper_large_v3,
+)
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+ALL_ARCH_IDS = tuple(ARCHS)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ALL_ARCH_IDS)}"
+        ) from None
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return reduced(get_config(arch_id))

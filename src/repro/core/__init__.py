@@ -1,0 +1,13 @@
+"""The paper's contribution: six Non-Neural ML kernels with the PULP-cluster
+parallelisation schemes, adapted to TPU meshes (see DESIGN.md §2)."""
+from repro.core import (  # noqa: F401
+    cluster,
+    distribution,
+    gemm_based,
+    gmm,
+    gnb,
+    kmeans,
+    knn,
+    random_forest,
+    topk,
+)

@@ -1,0 +1,89 @@
+"""K-Means (paper §4.4.2, Fig. 7).
+
+Per iteration: OP1 horizontal chunking of A, per-core distances to all k
+centroids into e (N, k); OP2 per-core nearest-centroid assignment (Selection
+Sort with k=1, i.e. argmin) into id (N,); OP3 per-core local centroid
+accumulate + count over its chunk; OP4 global combine (each core merges the
+locals for its centroid) and divide. Iterate until max centroid shift is
+below threshold (paper picks the first k samples as initial centroids).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distribution import pad_to_multiple, split_chunks
+
+
+class KMeansState(NamedTuple):
+    centroids: jax.Array   # (k, d)
+    shift: jax.Array       # () max centroid movement (L2)
+    n_iter: jax.Array      # () int32
+
+
+def _pairwise_sq_dist(chunk, centroids):
+    """(m, d), (k, d) -> (m, k) via the MXU-friendly expansion."""
+    an = jnp.sum(chunk * chunk, axis=1, keepdims=True)        # (m, 1)
+    cn = jnp.sum(centroids * centroids, axis=1)[None, :]      # (1, k)
+    return an - 2.0 * (chunk @ centroids.T) + cn
+
+
+def kmeans_iteration(A, centroids, n_cores: int = 8):
+    """One Fig. 7 iteration. A: (N, d); centroids: (k, d)."""
+    k, d = centroids.shape
+    Ap, N = pad_to_multiple(A, n_cores, axis=0)
+    chunks = split_chunks(Ap, n_cores, axis=0)                # (c, N/c, d)
+    chunk_len = Ap.shape[0] // n_cores
+    valid = (jnp.arange(Ap.shape[0]) < N).reshape(n_cores, chunk_len)
+
+    # OP1 + OP2 — per-core distances and cluster-ID assignment
+    def op12(a_chunk):
+        e = _pairwise_sq_dist(a_chunk, centroids)             # (N/c, k)
+        return e, jnp.argmin(e, axis=1)                       # SS with k=1
+
+    e, ids = jax.vmap(op12)(chunks)                           # (c,N/c,k) (c,N/c)
+
+    # OP3 — local centroid update (accumulate + count) per core
+    def op3(a_chunk, id_chunk, v_chunk):
+        onehot = jax.nn.one_hot(id_chunk, k) * v_chunk[:, None]
+        sums = onehot.T @ a_chunk                             # (k, d)
+        counts = jnp.sum(onehot, axis=0)                      # (k,)
+        return sums, counts
+
+    U_local, counts_local = jax.vmap(op3)(chunks, ids, valid)
+
+    # OP4 — global centroid update (merge per-core locals, divide)
+    sums = jnp.sum(U_local, axis=0)
+    counts = jnp.sum(counts_local, axis=0)
+    new_centroids = jnp.where(counts[:, None] > 0,
+                              sums / jnp.maximum(counts[:, None], 1.0),
+                              centroids)
+    return new_centroids, ids.reshape(-1)[:N]
+
+
+def kmeans_fit(A, k: int, *, threshold: float = 1e-4, max_iters: int = 100,
+               n_cores: int = 8) -> Tuple[KMeansState, jax.Array]:
+    """Iterate Fig. 7 until convergence. Initial centroids = first k rows
+    (paper §4.4.2). Returns (state, assignments)."""
+    init = KMeansState(centroids=A[:k], shift=jnp.inf,
+                       n_iter=jnp.zeros((), jnp.int32))
+
+    def cond(st: KMeansState):
+        return jnp.logical_and(st.shift > threshold, st.n_iter < max_iters)
+
+    def body(st: KMeansState):
+        new_c, _ = kmeans_iteration(A, st.centroids, n_cores)
+        shift = jnp.max(jnp.linalg.norm(new_c - st.centroids, axis=1))
+        return KMeansState(centroids=new_c, shift=shift, n_iter=st.n_iter + 1)
+
+    final = jax.lax.while_loop(cond, body, init)
+    _, ids = kmeans_iteration(A, final.centroids, n_cores)
+    return final, ids
+
+
+def inertia(A, centroids, ids):
+    """Sum of squared distances to assigned centroids (quality metric)."""
+    diff = A - centroids[ids]
+    return jnp.sum(diff * diff)

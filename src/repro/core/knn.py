@@ -1,0 +1,65 @@
+"""k-Nearest-Neighbour (paper §4.4, Fig. 6).
+
+OP1: row-wise (horizontal) chunking of the training set; per-core Euclidean
+distances into the shared e (N,) array. OP2: per-core local Selection-Sort
+top-k on its chunk. OP3: master merges the c*k local candidates and votes.
+
+TPU adaptation (DESIGN.md §2): the distance hot loop uses the
+||p-q||^2 = ||p||^2 - 2 p.q + ||q||^2 expansion so batched queries become an
+MXU matmul (kernels/distance.py); the sqrt is dropped exactly as the paper's
+Cortex-M4 port does (monotonic, rank-preserving).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distribution import pad_to_multiple, split_chunks
+from repro.core.topk import selection_topk_smallest
+
+_INF = jnp.inf
+
+
+class KNNModel(NamedTuple):
+    A: jax.Array        # (N, d) training samples
+    labels: jax.Array   # (N,) int32
+    n_class: int
+
+
+def sq_distances(A, x):
+    """Squared Euclidean distances of one query against all rows of A."""
+    diff = A - x[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def knn_classify(model: KNNModel, x, k: int, n_cores: int = 8):
+    """Full Fig. 6 pipeline for one query. Returns (class, neighbor idx)."""
+    Ap, N = pad_to_multiple(model.A, n_cores, axis=0)
+    chunks = split_chunks(Ap, n_cores, axis=0)            # (c, N/c, d)
+    chunk_len = Ap.shape[0] // n_cores
+
+    # OP1 — per-core distance computation over its row chunk
+    def op1(a_chunk):
+        return sq_distances(a_chunk, x)
+
+    e = jax.vmap(op1)(chunks)                             # (c, N/c) == e array
+    # mask padded rows
+    flat_idx = jnp.arange(Ap.shape[0]).reshape(n_cores, chunk_len)
+    e = jnp.where(flat_idx < N, e, _INF)
+
+    # OP2 — local Selection Sort per core (k smallest of the chunk)
+    lv, li = jax.vmap(lambda c: selection_topk_smallest(c, k))(e)
+    li_global = li + (jnp.arange(n_cores) * chunk_len)[:, None]
+
+    # OP3 — master: global Selection Sort over the c*k candidates + vote
+    gv, gi = selection_topk_smallest(lv.reshape(-1), k)
+    nbr_idx = li_global.reshape(-1)[gi]
+    votes = jnp.zeros((model.n_class,), jnp.int32).at[
+        model.labels[nbr_idx]].add(1)
+    return jnp.argmax(votes), nbr_idx
+
+
+def knn_predict_batch(model: KNNModel, X, k: int, n_cores: int = 8):
+    return jax.vmap(lambda x: knn_classify(model, x, k, n_cores)[0])(X)

@@ -1,0 +1,211 @@
+"""FP backend cost model (paper §3.4 / §5.2).
+
+The paper runs identical IEEE-754 FP32 algorithms under three backends —
+libgcc soft-float, RVfplib optimised soft-float, FPU-native — plus a
+Cortex-M4 port. A TPU has no FP-emulation analogue (MXU/VPU are native
+bf16/f32), so the *reproduction* of Figures 9-11 / Tables 2-3 is analytic
+(DESIGN.md §6):
+
+  1. ``census_*`` — per-kernel FP-op counts (add/mul/div/cmp/exp) and
+     inner-loop element counts derived from the algorithm structure of OUR
+     implementation, split into parallel and sequential (OP3) sections —
+     the software analogue of the paper's per-core performance counters.
+  2. ``BACKENDS`` — cycles-per-op vectors for each backend (seeded from the
+     RVfplib paper and FPnew latencies).
+  3. ``fit_backend`` — least-squares refit of a backend's cost vector
+     against the paper's measured single-core cycles (Table 2), so the
+     claim "one cost vector explains all kernels" is testable; benchmarks
+     report per-kernel relative error and cross-backend speedup ratios.
+
+Cycle cost = sum_op census[op] * cost[op] + census[elem] * cost[overhead]
+           + census[ielem] * cost[ielem].
+
+``ielem`` is INTEGER traversal work (pointer chasing, index compare/branch —
+RF's node walk): it does not shrink when the FP backend improves, which is
+exactly the paper's "RF has 6.39% FLOP intensity, hence only 2.48x from the
+FPU" observation (§5.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+OPS = ("add", "mul", "div", "cmp", "exp", "elem", "ielem")
+
+
+@dataclass(frozen=True)
+class BackendCosts:
+    """Cycles per FP32 op. ``elem`` = per-inner-loop-element overhead
+    (loads, index arithmetic, branches; PULP hardware loops make it small);
+    ``ielem`` = integer-dominated per-node work (FP-backend invariant)."""
+
+    name: str
+    add: float
+    mul: float
+    div: float
+    cmp: float
+    exp: float     # transcendental (expf/logf class)
+    elem: float
+    ielem: float = 8.0
+
+    def vector(self) -> np.ndarray:
+        return np.array([self.add, self.mul, self.div, self.cmp,
+                         self.exp, self.elem, self.ielem], dtype=np.float64)
+
+
+# Seeds: libgcc/RVfplib soft-float latencies from the RVfplib paper (SAMOS'21)
+# incl. calling-convention overhead; FPU from FPnew (shared, 1 pipe stage);
+# M4 from the Cortex-M4 TRM (FPv4-SP: 1c add/mul, 14c div; no HW loops or
+# post-increment addressing -> bigger per-element overhead).
+BACKENDS: Dict[str, BackendCosts] = {
+    "libgcc": BackendCosts("libgcc", add=85, mul=70, div=140, cmp=25,
+                           exp=2400, elem=8, ielem=8),
+    "rvfplib": BackendCosts("rvfplib", add=45, mul=38, div=160, cmp=12,
+                            exp=2000, elem=8, ielem=8),
+    "fpu": BackendCosts("fpu", add=1, mul=1, div=11, cmp=1, exp=75, elem=2,
+                        ielem=7),
+    "cortex-m4": BackendCosts("cortex-m4", add=1, mul=1, div=14, cmp=1.5,
+                              exp=140, elem=7, ielem=9.5),
+}
+
+
+@dataclass
+class Census:
+    """Op counts for one kernel inference: parallel + sequential sections."""
+
+    name: str
+    parallel: Dict[str, float]
+    sequential: Dict[str, float]
+
+    def total(self) -> Dict[str, float]:
+        return {op: self.parallel.get(op, 0.0) + self.sequential.get(op, 0.0)
+                for op in OPS}
+
+    def vector(self, section: str = "total") -> np.ndarray:
+        src = (self.total() if section == "total"
+               else getattr(self, section))
+        return np.array([src.get(op, 0.0) for op in OPS], dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel censuses (paper datasets: MNIST d=784 C=10 for GEMM/GNB;
+# ASD N=1000 d=21 for MS-based, k-Means k=2, kNN k=4; digits for RF)
+# ---------------------------------------------------------------------------
+
+
+def census_svm(d: int = 784, n_class: int = 10) -> Census:
+    return Census(
+        "svm",
+        parallel={"mul": d * n_class, "add": d * n_class + n_class,
+                  "elem": d * n_class},
+        sequential={"cmp": 2 * n_class, "elem": n_class},  # sign + argmax
+    )
+
+
+def census_lr(d: int = 784, n_class: int = 10) -> Census:
+    return Census(
+        "lr",
+        parallel={"mul": d * n_class, "add": d * n_class + n_class,
+                  "elem": d * n_class},
+        # softmax (exp, sum, div) + argmax on the master core
+        sequential={"exp": n_class, "add": n_class, "div": n_class,
+                    "cmp": n_class, "elem": 3 * n_class},
+    )
+
+
+def census_gnb(d: int = 784, n_class: int = 10) -> Census:
+    # paper's formulation: per (class, feature): sub, 2 mul, div, exp
+    per = d * n_class
+    return Census(
+        "gnb",
+        parallel={"add": per, "mul": 2 * per, "div": per, "exp": per,
+                  "elem": per},
+        sequential={"mul": n_class, "cmp": n_class, "elem": n_class},
+    )
+
+
+def census_knn(n: int = 1000, d: int = 21, k: int = 4,
+               n_cores: int = 1) -> Census:
+    # distances: per element sub, mul, add; local SS: (n/c)*k cmps per core
+    # (all cores concurrently); global merge: c*k cmps sequential
+    return Census(
+        "knn",
+        parallel={"add": 2 * n * d, "mul": n * d, "elem": n * d,
+                  "cmp": n * k},
+        sequential={"cmp": n_cores * k * k + k, "elem": n_cores * k},
+    )
+
+
+def census_kmeans_iter(n: int = 1000, d: int = 21, k: int = 2) -> Census:
+    # one Fig. 7 iteration: distances n*k*d, assign n*k cmp, local update
+    # n*d add; global update k*d div (parallel over cores in OP4)
+    return Census(
+        "kmeans_iter",
+        parallel={"add": 2 * n * k * d + n * d, "mul": n * k * d,
+                  "cmp": n * k, "div": k * d, "elem": n * k * d},
+        sequential={"add": k * d, "cmp": k, "elem": k},  # convergence check
+    )
+
+
+def census_rf(n_trees: int = 48, depth: int = 7, n_class: int = 10) -> Census:
+    """Forest size is not given in the paper; (48 trees x depth 7) is fitted
+    to the libgcc cycle budget (16.8k) and then held fixed — the other five
+    backend/parallel numbers are predictions. Node traversal is integer work
+    (gathers + branch), hence ``ielem``; only the threshold compare is FP."""
+    per_tree = depth
+    return Census(
+        "rf",
+        parallel={"cmp": n_trees * per_tree, "ielem": 3 * n_trees * per_tree},
+        sequential={"cmp": n_class, "ielem": n_class},  # vote argmax (master)
+    )
+
+
+PAPER_CENSUSES = {
+    "svm": census_svm(),
+    "lr": census_lr(),
+    "gnb": census_gnb(),
+    "knn": census_knn(),
+    "kmeans_iter": census_kmeans_iter(),
+    "rf": census_rf(),
+}
+
+
+# ---------------------------------------------------------------------------
+# Cost evaluation + refit against measured cycles
+# ---------------------------------------------------------------------------
+
+
+def predicted_cycles(census: Census, backend: BackendCosts,
+                     section: str = "total") -> float:
+    return float(census.vector(section) @ backend.vector())
+
+
+def fit_backend(censuses, measured_cycles, seed: BackendCosts,
+                iters: int = 2000, lr: float = 0.05) -> BackendCosts:
+    """Refit a backend cost vector to measured per-kernel cycles.
+
+    Multiplicative-update least squares in log space (costs stay positive,
+    start from the literature seed). censuses: list[Census]; measured:
+    list[float] (same order).
+    """
+    A = np.stack([c.vector() for c in censuses])           # (K, OPS)
+    y = np.asarray(measured_cycles, dtype=np.float64)      # (K,)
+    logc = np.log(seed.vector())
+    for _ in range(iters):
+        c = np.exp(logc)
+        pred = A @ c
+        # relative-error gradient (kernels span 4 orders of magnitude)
+        resid = (pred - y) / y
+        grad = (A * c[None, :]).T @ (resid / y)            # d/dlogc
+        logc -= lr * grad / (np.linalg.norm(grad) + 1e-12)
+    c = np.exp(logc)
+    return BackendCosts(seed.name + "-fit", *c)
+
+
+def relative_errors(censuses, measured_cycles, backend: BackendCosts):
+    A = np.stack([c.vector() for c in censuses])
+    y = np.asarray(measured_cycles, dtype=np.float64)
+    pred = A @ backend.vector()
+    return pred, (pred - y) / y

@@ -1,0 +1,170 @@
+"""Random Forest (paper §4.5, Fig. 8).
+
+Trees are encoded exactly as the paper's four flat arrays — feature,
+threshold, left-child, right-child — with leaves marked by a NEGATIVE value
+in the feature array (leaf class = -feature - 1). Traversal gathers node
+fields and follows the comparison until a leaf.
+
+Parallelisation: the whole-tree-per-core Independent-Tasks scheme. Trees are
+chunked over cores (static assignment); the paper's atomic vote-update
+critical section becomes a one-hot vote reduction (DESIGN.md §2).
+
+Training (offline scikit-learn in the paper) is a from-scratch numpy CART:
+bootstrap sampling + sqrt(d) feature subsets + Gini splits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distribution import split_chunks
+
+
+class Forest(NamedTuple):
+    feature: jax.Array    # (T, M) int32; < 0 marks a leaf (class = -f-1)
+    threshold: jax.Array  # (T, M) float32
+    left: jax.Array       # (T, M) int32
+    right: jax.Array      # (T, M) int32
+    n_class: int
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+
+
+def tree_predict(feature, threshold, left, right, x):
+    """Array-encoded DT traversal for one sample (paper's scheme)."""
+
+    def cond(node):
+        return feature[node] >= 0
+
+    def body(node):
+        f = feature[node]
+        go_left = x[f] <= threshold[node]
+        return jnp.where(go_left, left[node], right[node])
+
+    leaf = jax.lax.while_loop(cond, body, jnp.zeros((), jnp.int32))
+    return -feature[leaf] - 1
+
+
+def forest_predict(forest: Forest, x, n_cores: int = 8):
+    """Fig. 8: DTs statically chunked over cores; per-core tree execution;
+    vote update (the critical section -> one-hot reduction); ArgMax."""
+    T = forest.feature.shape[0]
+    assert T % n_cores == 0, (T, n_cores)
+    fc = split_chunks(forest.feature, n_cores)
+    tc = split_chunks(forest.threshold, n_cores)
+    lc = split_chunks(forest.left, n_cores)
+    rc = split_chunks(forest.right, n_cores)
+
+    def per_core(f, t, l, r):
+        preds = jax.vmap(lambda ff, tt, ll, rr: tree_predict(ff, tt, ll, rr, x)
+                         )(f, t, l, r)                       # (T/c,)
+        return jnp.zeros((forest.n_class,), jnp.int32).at[preds].add(1)
+
+    votes = jnp.sum(jax.vmap(per_core)(fc, tc, lc, rc), axis=0)
+    return jnp.argmax(votes), votes
+
+
+def forest_predict_batch(forest: Forest, X, n_cores: int = 8):
+    return jax.vmap(lambda x: forest_predict(forest, x, n_cores)[0])(X)
+
+
+# ---------------------------------------------------------------------------
+# Training: from-scratch CART (numpy, offline — like the paper's sklearn)
+# ---------------------------------------------------------------------------
+
+
+def _gini(counts):
+    n = counts.sum()
+    if n == 0:
+        return 0.0
+    p = counts / n
+    return 1.0 - np.sum(p * p)
+
+
+def _best_split(X, y, n_class, feat_subset, rng):
+    best = (None, None, np.inf)
+    parent_n = len(y)
+    for f in feat_subset:
+        vals = X[:, f]
+        order = np.argsort(vals, kind="stable")
+        sv, sy = vals[order], y[order]
+        left_counts = np.zeros(n_class)
+        right_counts = np.bincount(sy, minlength=n_class).astype(float)
+        for i in range(parent_n - 1):
+            left_counts[sy[i]] += 1
+            right_counts[sy[i]] -= 1
+            if sv[i] == sv[i + 1]:
+                continue
+            nl, nr = i + 1, parent_n - i - 1
+            g = (nl * _gini(left_counts) + nr * _gini(right_counts)) / parent_n
+            if g < best[2]:
+                best = (f, 0.5 * (sv[i] + sv[i + 1]), g)
+    return best
+
+
+def _build_tree(X, y, n_class, max_depth, min_samples, rng):
+    """Returns list of nodes: (feature, threshold, left, right)."""
+    nodes = []
+
+    def rec(idx, depth):
+        node_id = len(nodes)
+        nodes.append(None)
+        ys = y[idx]
+        counts = np.bincount(ys, minlength=n_class)
+        majority = int(np.argmax(counts))
+        if depth >= max_depth or len(idx) < min_samples or \
+                counts.max() == len(idx):
+            nodes[node_id] = (-(majority + 1), 0.0, 0, 0)
+            return node_id
+        n_feat = X.shape[1]
+        k = max(1, int(np.sqrt(n_feat)))
+        feat_subset = rng.choice(n_feat, size=k, replace=False)
+        f, thr, g = _best_split(X[idx], ys, n_class, feat_subset, rng)
+        if f is None:
+            nodes[node_id] = (-(majority + 1), 0.0, 0, 0)
+            return node_id
+        mask = X[idx, f] <= thr
+        li, ri = idx[mask], idx[~mask]
+        if len(li) == 0 or len(ri) == 0:
+            nodes[node_id] = (-(majority + 1), 0.0, 0, 0)
+            return node_id
+        l_id = rec(li, depth + 1)
+        r_id = rec(ri, depth + 1)
+        nodes[node_id] = (f, float(thr), l_id, r_id)
+        return node_id
+
+    rec(np.arange(len(y)), 0)
+    return nodes
+
+
+def train_forest(X, y, n_class: int, *, n_trees: int = 16, max_depth: int = 8,
+                 min_samples: int = 2, seed: int = 0) -> Forest:
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int32)
+    rng = np.random.default_rng(seed)
+    all_nodes = []
+    for _ in range(n_trees):
+        boot = rng.integers(0, len(y), size=len(y))
+        all_nodes.append(_build_tree(X[boot], y[boot], n_class,
+                                     max_depth, min_samples, rng))
+    M = max(len(n) for n in all_nodes)
+    T = n_trees
+    feature = np.full((T, M), -1, np.int32)
+    threshold = np.zeros((T, M), np.float32)
+    left = np.zeros((T, M), np.int32)
+    right = np.zeros((T, M), np.int32)
+    for t, nodes in enumerate(all_nodes):
+        for i, (f, thr, l, r) in enumerate(nodes):
+            feature[t, i] = f
+            threshold[t, i] = thr
+            left[t, i] = l
+            right[t, i] = r
+    return Forest(feature=jnp.asarray(feature), threshold=jnp.asarray(threshold),
+                  left=jnp.asarray(left), right=jnp.asarray(right),
+                  n_class=n_class)

@@ -1,0 +1,77 @@
+"""Partial top-k via Selection-Sort, vectorised (paper §4.4.3), plus the
+local/global two-level scheme used by kNN (Fig. 6 OP2/OP3) and reused by the
+MoE router at production scale.
+
+The paper's insight: retrieving the k smallest of n never requires a full
+sort — Selection Sort does O(nk) work sequentially, O((n/c)k) + O(ck) on c
+cores. On a TPU the scalar swap loop is hostile to the VPU, so we keep the
+same O(nk) schedule but realise each selection pass as a vectorised
+min+mask (one pass per selected element) — ``selection_topk_smallest``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distribution import pad_to_multiple, split_chunks
+
+_INF = jnp.inf
+
+
+def selection_topk_smallest(x, k: int) -> Tuple[jax.Array, jax.Array]:
+    """k passes of vectorised argmin+mask — the SS partial sort, O(nk).
+
+    x: (n,). Returns (values (k,), indices (k,)) in ascending order.
+    """
+    n = x.shape[0]
+
+    def body(carry, _):
+        vals = carry
+        i = jnp.argmin(vals)
+        v = vals[i]
+        vals = vals.at[i].set(_INF)
+        return vals, (v, i)
+
+    _, (vs, idx) = jax.lax.scan(body, x.astype(jnp.float32), None, length=k)
+    return vs, idx.astype(jnp.int32)
+
+
+def selection_topk_largest(x, k: int) -> Tuple[jax.Array, jax.Array]:
+    vs, idx = selection_topk_smallest(-x, k)
+    return -vs, idx
+
+
+def local_global_topk_smallest(x, k: int, n_cores: int = 8):
+    """Paper Fig. 6: per-core local SS over its chunk (OP2), then the master
+    merges the c*k candidates (OP3). Identical result to a global top-k.
+
+    x: (n,). Returns (values (k,), indices (k,)).
+    """
+    xp, n_orig = pad_to_multiple(x, n_cores, value=_INF)
+    chunks = split_chunks(xp, n_cores)                   # (c, n/c)
+
+    # OP2 — local Selection Sort per core
+    lv, li = jax.vmap(lambda c: selection_topk_smallest(c, k))(chunks)
+    chunk_len = xp.shape[0] // n_cores
+    li_global = li + (jnp.arange(n_cores) * chunk_len)[:, None]
+
+    # OP3 — global merge of the c*k candidates on the master core
+    gv, gi = selection_topk_smallest(lv.reshape(-1), k)
+    return gv, li_global.reshape(-1)[gi]
+
+
+def local_global_topk_largest(x, k: int, n_cores: int = 8):
+    vs, idx = local_global_topk_smallest(-x, k, n_cores)
+    return -vs, idx
+
+
+def sorting_cost_model(n: int, k: int, c: int = 1):
+    """Paper Eq. 14 comparison counts: QS vs SS, sequential and parallel."""
+    import math
+    nc = max(n // max(c, 1), 1)
+    qs = nc * math.log2(max(nc, 2)) + (c * k if c > 1 else 0)
+    ss = nc * k + (c * k if c > 1 else 0)
+    return {"quick_sort": qs, "selection_sort": ss,
+            "ss_favorable": k < math.log2(max(nc, 2))}

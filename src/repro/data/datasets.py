@@ -1,0 +1,58 @@
+"""Synthetic datasets standing in for the paper's corpora (offline container:
+no downloads). Shapes/statistics mirror the real ones:
+
+  - mnist_like:  (N, 784) in [0,1], 10 classes — GEMM-based + GNB benchmarks
+  - asd_like:    (N, 21) mixed-scale features, 2-3 classes — kNN / k-Means
+  - digits_like: (N, 64) in [0,16], 10 classes — RF benchmark
+  - token_stream: deterministic LM token stream for train_4k runs
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def _blobs(rng, n: int, d: int, n_class: int, spread: float, scale: float):
+    centers = rng.normal(size=(n_class, d)) * spread
+    y = rng.integers(0, n_class, size=n)
+    X = centers[y] + rng.normal(size=(n, d)) * scale
+    return X.astype(np.float32), y.astype(np.int32)
+
+
+def mnist_like(n: int = 2000, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    X, y = _blobs(rng, n, 784, 10, spread=0.8, scale=0.35)
+    X = 1.0 / (1.0 + np.exp(-X))          # squash into [0,1] like pixels
+    return X.astype(np.float32), y
+
+
+def asd_like(n: int = 1000, n_class: int = 2, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    X, y = _blobs(rng, n, 21, n_class, spread=2.0, scale=1.0)
+    # mixed integer/float features like the ASD screening set
+    X[:, :8] = np.round(X[:, :8])
+    return X.astype(np.float32), y
+
+
+def digits_like(n: int = 1797, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    X, y = _blobs(rng, n, 64, 10, spread=2.5, scale=1.2)
+    X = np.clip((X - X.min()) / (X.max() - X.min()) * 16.0, 0, 16)
+    return X.astype(np.float32), y
+
+
+def token_stream(n_tokens: int, vocab_size: int, seed: int = 3) -> np.ndarray:
+    """Deterministic pseudo-corpus with a Zipfian unigram distribution and a
+    short-range bigram structure (so CE actually decreases in training)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size + 1)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    base = rng.choice(vocab_size, size=n_tokens, p=probs)
+    # bigram structure: with p=0.5, next token = f(prev)
+    follow = rng.permutation(vocab_size)
+    coin = rng.random(n_tokens) < 0.5
+    out = base.copy()
+    out[1:][coin[1:]] = follow[out[:-1][coin[1:]]]
+    return out.astype(np.int32)

@@ -1,0 +1,102 @@
+"""Host-side input pipeline: deterministic sharded batching with prefetch.
+
+Each host slices the global batch by its data-parallel coordinate (the
+paper's horizontal split at cluster scale), double-buffering batches onto
+device — the L2->L1 double-buffer wrapper writ large (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenBatcher:
+    """Deterministic LM batches from a token stream.
+
+    Produces {tokens (B, S), targets (B, S)} with next-token targets;
+    step-indexed addressing makes resume-after-restart exact (the batch for
+    step N is a pure function of (stream, N) — checkpoint restores mid-epoch
+    without replaying the iterator).
+    """
+
+    def __init__(self, stream: np.ndarray, batch: int, seq_len: int,
+                 host_index: int = 0, host_count: int = 1):
+        assert batch % host_count == 0
+        self.stream = stream
+        self.batch = batch
+        self.local_batch = batch // host_count
+        self.seq = seq_len
+        self.host_index = host_index
+        self.host_count = host_count
+        self.tokens_per_step = batch * (seq_len + 1)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        n = len(self.stream)
+        span = self.seq + 1
+        out_t = np.empty((self.local_batch, self.seq), np.int32)
+        out_y = np.empty((self.local_batch, self.seq), np.int32)
+        for i in range(self.local_batch):
+            row = self.host_index * self.local_batch + i
+            start = (step * self.batch + row) * span % (n - span - 1)
+            window = self.stream[start:start + span]
+            out_t[i] = window[:-1]
+            out_y[i] = window[1:]
+        return {"tokens": out_t, "targets": out_y}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread double buffering of host batches onto device."""
+
+    def __init__(self, it: Iterator, size: int = 2, sharding=None):
+        self._it = it
+        self._sharding = sharding
+        self._q: collections.deque = collections.deque()
+        self._size = size
+        self._lock = threading.Lock()
+        self._stop = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _put(self, batch):
+        if self._sharding is not None:
+            batch = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), batch, self._sharding)
+        else:
+            batch = jax.tree.map(jnp.asarray, batch)
+        with self._lock:
+            self._q.append(batch)
+
+    def _fill(self):
+        for batch in self._it:
+            while True:
+                if self._stop:
+                    return
+                with self._lock:
+                    if len(self._q) < self._size:
+                        break
+                threading.Event().wait(0.001)
+            self._put(batch)
+
+    def __next__(self):
+        while True:
+            with self._lock:
+                if self._q:
+                    return self._q.popleft()
+            threading.Event().wait(0.001)
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop = True

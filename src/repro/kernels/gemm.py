@@ -1,0 +1,52 @@
+"""Blocked GEMM Pallas kernel — the compute hot-spot of the paper's
+GEMM-based kernels (LR/SVM batched inference) and of every LM matmul.
+
+TPU mapping: (bm x bk) x (bk x bn) tiles staged HBM->VMEM by the pallas_call
+grid pipeline (the hardware analogue of the paper's L2->L1 double-buffering
+wrapper), MXU-aligned tile sizes (multiples of 128), f32 VMEM accumulator
+across the K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool = False):
+    """C = A @ B. Shapes must tile exactly (ops.py pads)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    kernel = functools.partial(_matmul_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

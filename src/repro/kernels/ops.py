@@ -1,0 +1,97 @@
+"""Jit'd public wrappers for the Pallas kernels: shape padding, block-size
+selection, and the interpret fallback (this container is CPU-only; on a TPU
+``interpret=False`` compiles the same kernels to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance as _distance
+from repro.kernels import flash_attention as _flash
+from repro.kernels import gemm as _gemm
+from repro.kernels import gnb_score as _gnb
+from repro.kernels import topk_select as _topk
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_dim(x, mult: int, axis: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    M, K = a.shape
+    N = b.shape[1]
+    bm = min(bm, max(8, M)) if M < bm else bm
+    ap = _pad_dim(_pad_dim(a, bm, 0), bk, 1)
+    bp = _pad_dim(_pad_dim(b, bk, 0), bn, 1)
+    out = _gemm.matmul(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def pairwise_sq_dist(a, c, *, bn: int = 256, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    N = a.shape[0]
+    bn = min(bn, max(8, N))
+    ap = _pad_dim(a, bn, 0)
+    out = _distance.pairwise_sq_dist(ap, c, bn=bn, interpret=interpret)
+    return out[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def gnb_scores(x, mu, var, log_prior, *, bd: int = 128,
+               interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    d = x.shape[0]
+    bd = min(bd, d)
+    xp = _pad_dim(x, bd, 0)
+    mup = _pad_dim(mu, bd, 1)
+    varp = _pad_dim(var, bd, 1, value=1.0)
+    # padded features: x=0, mu=0, var=1 adds a constant -0.5*log(2*pi) per
+    # pad to every class — subtract it back out
+    import math
+    n_pad = xp.shape[0] - d
+    out = _gnb.gnb_scores(xp, mup, varp, log_prior, bd=bd,
+                          interpret=interpret)
+    return out + 0.5 * math.log(2.0 * math.pi) * n_pad
+
+
+@functools.partial(jax.jit, static_argnames=("k", "br", "interpret"))
+def topk_smallest(x, k: int, *, br: int = 8, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    R, n = x.shape
+    br = min(br, R)
+    xp = _pad_dim(x, br, 0, value=jnp.inf)
+    vals, idx = _topk.topk_smallest(xp, k, br=br, interpret=interpret)
+    return vals[:R], idx[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None):
+    """q/k/v: (B, H, S, d). GQA callers expand KV heads beforehand."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, H, S, d = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+    out = _flash.flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out.reshape(B, H, S, d)

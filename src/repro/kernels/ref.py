@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C = A @ B with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def pairwise_sq_dist(a, c):
+    """(N, d), (K, d) -> (N, K) squared Euclidean distances."""
+    an = jnp.sum(a.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    cn = jnp.sum(c.astype(jnp.float32) ** 2, axis=1)[None, :]
+    cross = jnp.dot(a, c.T, preferred_element_type=jnp.float32)
+    return an - 2.0 * cross + cn
+
+
+def gnb_scores(x, mu, var, log_prior):
+    """(d,), (C, d), (C, d), (C,) -> (C,) joint log-likelihood."""
+    import math
+    t = -0.5 * ((x[None, :] - mu) ** 2 / var + jnp.log(var)
+                + math.log(2.0 * math.pi))
+    return jnp.sum(t, axis=1) + log_prior
+
+
+def topk_smallest(x, k: int):
+    """(R, n) -> values (R, k), indices (R, k), ascending."""
+    nv, ni = jax.lax.top_k(-x, k)
+    return -nv, ni
+
+
+def attention(q, k, v, causal: bool = True):
+    """(B, H, S, hd) x3 -> (B, H, S, hd), f32 softmax."""
+    S = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

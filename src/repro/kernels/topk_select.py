@@ -1,0 +1,56 @@
+"""Selection-Sort partial top-k Pallas kernel (paper §4.4.3).
+
+The paper's insight — k smallest of n needs only O(nk) work — maps to the
+VPU as k passes of vectorised min+mask over a row block held in VMEM (the
+scalar swap loop of Selection Sort is hostile to 8x128 vregs; the masked-min
+pass has identical asymptotics and full lane utilisation; DESIGN.md §2).
+
+Rows are tiled across the grid: one (br x n) block per step, k selection
+passes in registers, (br x k) values+indices out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INF = float("inf")
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)               # (br, n)
+    br, n = x.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
+
+    def pass_body(j, carry):
+        x_cur, = carry
+        m = jnp.min(x_cur, axis=1)                    # (br,) selection pass j
+        # first index attaining the minimum (stable, matches SS order)
+        is_min = x_cur == m[:, None]
+        first = jnp.min(jnp.where(is_min, cols, n), axis=1)
+        vals_ref[:, j] = m.astype(vals_ref.dtype)
+        idx_ref[:, j] = first.astype(jnp.int32)
+        x_cur = jnp.where(cols == first[:, None], _INF, x_cur)
+        return (x_cur,)
+
+    jax.lax.fori_loop(0, k, pass_body, (x,))
+
+
+def topk_smallest(x, k: int, *, br: int = 8, interpret: bool = False):
+    """x (R, n) -> (values (R, k), indices (R, k)), ascending per row."""
+    R, n = x.shape
+    assert R % br == 0, (R, br)
+    kernel = functools.partial(_topk_kernel, k=k)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((br, k), lambda i: (i, 0)),
+                   pl.BlockSpec((br, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((R, k), jnp.float32),
+                   jax.ShapeDtypeStruct((R, k), jnp.int32)),
+        interpret=interpret,
+    )(x)
+    return vals, idx

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles abstract inputs (ShapeDtypeStructs — zero allocation),
+  3. jit-lowers the train/prefill/decode step with explicit NamedShardings,
+  4. compiles, prints memory_analysis / cost_analysis,
+  5. parses the post-SPMD HLO for collective bytes,
+  6. writes a JSON record to experiments/dryrun/ for the roofline harness.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch stablelm-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi            # all cells
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.models import factory, transformer
+from repro.sharding.partitioning import to_pspec
+from repro.training import optimizer as opt_mod
+from repro.training import trainer
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+OUT_DIR = REPO_ROOT / "experiments" / "dryrun"
+
+
+def _ns(mesh, tree_pspecs):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: transformer.init_params(
+        jax.random.PRNGKey(0), cfg))
+
+
+def build_cell(cfg, shape, mesh, mesh_cfg, train_cfg, variant=None):
+    """Returns (fn, args, in_shardings, out_shardings, donate).
+
+    ``variant``: optimization knobs for §Perf hillclimbs —
+      two_phase_moe: explicit shard_map MoE (paper OP1/OP2 schedule)
+      attn_threshold: chunked-attention cutover sequence length
+      decode_seq_shard: shard KV cache sequence over the model axis
+    """
+    variant = variant or {}
+    plan = None
+    if variant.get("two_phase_moe") and cfg.moe is not None:
+        from repro.sharding.partitioning import ParallelPlan
+        plan = ParallelPlan(mesh=mesh, dp_axes=mesh_cfg.dp_axes,
+                            model_axis="model")
+    if variant.get("attn_threshold"):
+        from repro.models import attention as attn_mod
+        attn_mod.CHUNKED_ATTN_THRESHOLD = int(variant["attn_threshold"])
+    factory.DECODE_SEQ_SHARD = bool(variant.get("decode_seq_shard"))
+    if variant.get("ssm_chunk") and cfg.ssm is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm,
+                                         chunk=int(variant["ssm_chunk"])))
+    rules = None
+    if variant.get("no_tp"):
+        # replicate model-axis weight shards (small archs: TP overhead beats
+        # the FLOP savings; the model axis then carries only vocab/embed)
+        rules = {"d_inner": (), "ssm_heads": (), "qkv": (), "mlp": (),
+                 "state": ()}
+
+    p_shape = abstract_params(cfg)
+    p_specs = factory.param_pspecs(cfg, mesh_cfg, p_shape, rules=rules)
+    b_shape = factory.make_batch(cfg, shape, abstract=True)
+    b_specs = factory.batch_pspecs(cfg, shape, mesh_cfg)
+
+    if shape.kind == "train":
+        o_shape = jax.eval_shape(opt_mod.init_opt_state, p_shape)
+        o_specs = opt_mod.opt_state_pspecs(p_specs, p_shape, mesh_cfg,
+                                           zero1=train_cfg.zero1)
+        step = trainer.make_train_step(cfg, train_cfg, plan=plan)
+        metrics_specs = {k: PartitionSpec() for k in
+                         ("loss", "ce", "aux", "grad_norm", "lr")}
+        return (step, (p_shape, o_shape, b_shape),
+                (p_specs, o_specs, b_specs),
+                (p_specs, o_specs, metrics_specs), (0, 1))
+
+    if shape.kind == "prefill":
+        step = trainer.make_prefill_step(cfg, max_seq=shape.seq_len, plan=plan)
+        logits_spec = to_pspec(("batch", "vocab"), mesh_cfg,
+                               shape=(shape.global_batch, cfg.vocab_size))
+        c_specs = factory.cache_pspecs(cfg, shape, mesh_cfg)
+        return (step, (p_shape, b_shape), (p_specs, b_specs),
+                (logits_spec, c_specs), ())
+
+    # decode
+    step = trainer.make_decode_step(cfg, plan=plan)
+    c_shape = factory.cache_shapes(cfg, shape)
+    c_specs = factory.cache_pspecs(cfg, shape, mesh_cfg)
+    tok_shape = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = to_pspec(("batch", "seq"), mesh_cfg,
+                        shape=(shape.global_batch, 1))
+    logits_spec = to_pspec(("batch", "vocab"), mesh_cfg,
+                           shape=(shape.global_batch, cfg.vocab_size))
+    return (step, (p_shape, c_shape, tok_shape),
+            (p_specs, c_specs, tok_spec),
+            (logits_spec, c_specs), (1,))
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             train_cfg=None, tag: str = "baseline", cfg=None,
+             variant=None) -> dict:
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    remat = (variant or {}).get("remat") or "dots"
+    train_cfg = train_cfg or TrainConfig(remat=remat, zero1=True)
+    mesh_cfg = mesh_config(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    fn, args, in_specs, out_specs, donate = build_cell(
+        cfg, shape, mesh, mesh_cfg, train_cfg, variant=variant)
+    jfn = jax.jit(fn,
+                  in_shardings=_ns(mesh, in_specs),
+                  out_shardings=_ns(mesh, out_specs),
+                  donate_argnums=donate)
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---- analyses ----
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        } if mem is not None else None
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem_rec = {"error": repr(e)}
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        ca = {"error": repr(e)}
+
+    sys.path.insert(0, str(REPO_ROOT))
+    from benchmarks.hlo_analysis import analyze, cost_summary
+
+    hlo = compiled.as_text()
+    stats = analyze(hlo)
+    cost = cost_summary(ca if not isinstance(ca, dict) or "error" not in ca
+                        else {})
+
+    rec.update(
+        status="ok",
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        kind=shape.kind,
+        n_devices=mesh_cfg.n_devices,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory_analysis=mem_rec,
+        xla_cost_analysis=cost,        # raw (while bodies counted once)
+        hlo_stats=stats.as_dict(),     # loop-weighted per-device per-step
+        collective_bytes=int(stats.collective_bytes),
+        hlo_bytes=len(hlo),
+    )
+    rec["_hlo"] = hlo        # popped by the caller and cached compressed
+    return rec
+
+
+def save_record(rec: dict, hlo: str = None):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    stem = f"{rec['mesh']}__{rec['arch']}__{rec['shape']}__{rec['tag']}"
+    (OUT_DIR / f"{stem}.json").write_text(json.dumps(rec, indent=2))
+    if hlo is not None:
+        try:
+            import zstandard
+            (OUT_DIR / f"{stem}.hlo.zst").write_bytes(
+                zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+        except Exception:
+            pass  # HLO cache is best-effort (analysis is already in rec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--two-phase-moe", action="store_true")
+    ap.add_argument("--attn-threshold", type=int, default=0)
+    ap.add_argument("--decode-seq-shard", action="store_true")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--no-tp", action="store_true")
+    ap.add_argument("--remat", default="", choices=("", "none", "dots", "full"))
+    args = ap.parse_args()
+    variant = {"two_phase_moe": args.two_phase_moe,
+               "attn_threshold": args.attn_threshold,
+               "decode_seq_shard": args.decode_seq_shard,
+               "ssm_chunk": args.ssm_chunk,
+               "no_tp": args.no_tp,
+               "remat": args.remat}
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "multi" if multi else "single"
+                out = OUT_DIR / f"{mesh_name}__{arch}__{shape}__{args.tag}.json"
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip] {mesh_name} {arch} {shape} (cached)")
+                        continue
+                print(f"[cell] mesh={mesh_name} arch={arch} shape={shape} ...",
+                      flush=True)
+                hlo_text = None
+                try:
+                    rec = run_cell(arch, shape, multi, tag=args.tag,
+                                   variant=variant)
+                    hlo_text = rec.pop("_hlo", None)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "tag": args.tag, "status": "error",
+                           "error": repr(e)[:2000]}
+                    failures += 1
+                save_record(rec, hlo_text)
+                if rec["status"] == "ok":
+                    hs = rec["hlo_stats"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops={hs['flops_dot']:.3e} "
+                          f"bytes={hs['bytes']:.3e} "
+                          f"coll={rec['collective_bytes']:.3e}B", flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+                jax.clear_caches()
+    print(f"done, failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, factory, layers, moe, ssm, transformer  # noqa: F401

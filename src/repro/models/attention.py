@@ -1,0 +1,217 @@
+"""Attention: GQA/MHA with RoPE, memory-efficient chunked softmax (the pure-JAX
+flash pattern: running max / running denominator — itself a two-phase
+local→global combine, cf. DESIGN.md §2), and single-token decode against a KV
+cache.
+
+GQA is computed with *grouped* einsums — q is reshaped to
+(B, S, Hkv, G, hd) so KV heads broadcast inside the contraction instead of
+being materialised with ``jnp.repeat`` (which would double the HBM traffic
+that the roofline memory term charges us for).
+
+Shapes:  x (B, S, d_model); q (B, S, Hq, hd); k/v (B, S, Hkv, hd).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm_vec
+
+NEG_INF = -1e30
+CHUNKED_ATTN_THRESHOLD = 4096  # use chunked softmax above this sequence length
+ATTN_CHUNK = 1024
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+    if cfg.attn.qk_norm and not cross:
+        params["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        params["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    return params
+
+
+def attention_logical(cfg: ModelConfig, cross: bool = False):
+    lg = {
+        "wq": ("embed", "qkv"),
+        "wk": ("embed", "qkv"),
+        "wv": ("embed", "qkv"),
+        "wo": ("qkv", "embed"),
+    }
+    if cfg.attn.qk_norm and not cross:
+        lg["q_norm"] = ("head_dim",)
+        lg["k_norm"] = ("head_dim",)
+    return lg
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, rope: bool = True):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = rms_norm_vec(q, params["q_norm"])
+        k = rms_norm_vec(k, params["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        k = apply_rope(k, positions, cfg.attn.rope_theta)
+    return q, k, v
+
+
+def _group_q(q, n_kv: int):
+    """(B, S, Hq, hd) -> (B, S, Hkv, G, hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def full_attention(q, k, v, cfg: ModelConfig, causal: bool,
+                   q_offset: int = 0, kv_len_mask: Optional[jax.Array] = None):
+    """Materialised-scores attention (small S, and single-token decode)."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qg = _group_q(q, Hkv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # bf16 operands + f32 accumulation (MXU-native); never materialise f32
+    # copies of Q/K in HBM
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, cfg.attn.logits_softcap)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len_mask is not None:
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, causal: bool,
+                      chunk: int = ATTN_CHUNK):
+    """Memory-efficient attention: scan over KV chunks with running
+    (max, denominator) statistics — O(S·chunk) live memory instead of O(S²).
+
+    This is the flash-attention schedule in pure JAX; on TPU hardware the
+    Pallas kernel (kernels/flash_attention.py) implements the same contract
+    with explicit VMEM BlockSpecs.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    assert Skv % chunk == 0, (Skv, chunk)
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = _group_q(q, Hkv)                               # (B, Sq, Hkv, G, hd)
+    n_chunks = Skv // chunk
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, cfg.attn.logits_softcap)
+        if causal:
+            kpos = idx * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        # probabilities re-quantised to the value dtype for the PV matmul
+        # (flash-attention practice); accumulator stays f32
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)       # (B, Hkv, G, Sq, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def apply_attention(params, x, cfg: ModelConfig, positions=None,
+                    causal: Optional[bool] = None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    causal = cfg.attn.causal if causal is None else causal
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if S > CHUNKED_ATTN_THRESHOLD and S % ATTN_CHUNK == 0:
+        out = chunked_attention(q, k, v, cfg, causal)
+    else:
+        out = full_attention(q, k, v, cfg, causal)
+    out = out.reshape(B, S, cfg.q_dim)
+    return out @ params["wo"], (k, v)
+
+
+def apply_cross_attention(params, x, memory_kv, cfg: ModelConfig):
+    """Decoder cross-attention into precomputed encoder memory (k, v)."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k, v = memory_kv
+    out = full_attention(q, k, v, cfg, causal=False)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+
+def encode_cross_kv(params, memory, cfg: ModelConfig):
+    B, S, _ = memory.shape
+    k = (memory @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     aligned: bool = True):
+    """One-token decode: update the KV cache at ``pos`` and attend to it.
+
+    x: (B, 1, d_model); cache_k/v: (B, S_max, Hkv, hd); pos: (B,) int32.
+
+    ``aligned=True`` (all sequences at the same position — the assigned decode
+    shapes) writes with a single dynamic_update_slice, which GSPMD partitions
+    over the batch axis without gathers; ``aligned=False`` is the ragged
+    continuous-batching path (per-sequence scatter).
+    Returns (out (B, 1, d_model), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg, pos[:, None])
+    if aligned:
+        p0 = pos[0]
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, p0, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, p0, 0, 0))
+    else:
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    Skv = cache_k.shape[1]
+    valid = jnp.arange(Skv)[None, :] <= pos[:, None]           # (B, Skv)
+    out = full_attention(q, cache_k, cache_v, cfg, causal=False,
+                         kv_len_mask=valid)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ params["wo"], cache_k, cache_v

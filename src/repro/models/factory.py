@@ -1,0 +1,132 @@
+"""Model factory: config -> (init, forward, prefill, decode_step) plus
+logical sharding specs and input pytrees for every assigned shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeshConfig, ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import transformer
+from repro.sharding.partitioning import to_pspec, tree_to_pspecs
+
+_LOGICAL_LEAF = lambda x: (isinstance(x, tuple)
+                           and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def init_params(key, cfg: ModelConfig):
+    return transformer.init_params(key, cfg)
+
+
+def params_logical(cfg: ModelConfig):
+    return transformer.params_logical(cfg)
+
+
+def param_pspecs(cfg: ModelConfig, mesh_cfg: MeshConfig, params_shape=None,
+                 rules=None):
+    """Pytree of PartitionSpec matching init_params' structure.
+
+    When ``params_shape`` (a ShapeDtypeStruct tree) is given, divisibility is
+    checked per-leaf and non-divisible axes are dropped (DESIGN.md §5).
+    ``rules``: logical-rule overrides (e.g. no-TP for small archs).
+    """
+    logical = params_logical(cfg)
+    if params_shape is None:
+        return tree_to_pspecs(logical, mesh_cfg, rules=rules)
+    return jax.tree.map(
+        lambda lg, sh: to_pspec(lg, mesh_cfg, shape=sh.shape, rules=rules),
+        logical, params_shape, is_leaf=_LOGICAL_LEAF)
+
+
+# ---------------------------------------------------------------------------
+# Model inputs per shape (ShapeDtypeStructs for dry-run; real arrays for runs)
+# ---------------------------------------------------------------------------
+
+
+def _token_split(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM archs spend part of the sequence budget on patch embeddings."""
+    if cfg.vision is not None:
+        return seq_len - cfg.vision.num_patches
+    return seq_len
+
+
+def batch_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    lg: Dict[str, Any] = {}
+    if shape.kind == "train":
+        lg["tokens"] = ("batch", "seq")
+        lg["targets"] = ("batch", "seq")
+    elif shape.kind == "prefill":
+        lg["tokens"] = ("batch", "seq")
+    else:
+        lg["tokens"] = ("batch", "seq")
+    if cfg.vision is not None and shape.kind != "decode":
+        lg["patch_embeds"] = ("batch", "patches", "embed")
+    if cfg.encoder is not None and shape.kind != "decode":
+        lg["encoder_frames"] = ("batch", "frames", "embed")
+    return lg
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, *,
+               abstract: bool = True, rng: Optional[jax.Array] = None):
+    """Inputs for one step. ``abstract=True`` -> ShapeDtypeStructs (dry-run)."""
+    B = shape.global_batch
+    S_tok = 1 if shape.is_decode else _token_split(cfg, shape.seq_len)
+    out: Dict[str, Any] = {}
+
+    def mk(shp, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        assert rng is not None
+        if jnp.issubdtype(dtype, jnp.integer):
+            return jax.random.randint(rng, shp, 0, cfg.vocab_size, dtype)
+        return jax.random.normal(rng, shp, dtype) * 0.02
+
+    out["tokens"] = mk((B, S_tok), jnp.int32)
+    if shape.kind == "train":
+        out["targets"] = mk((B, S_tok), jnp.int32)
+    if cfg.vision is not None and shape.kind != "decode":
+        out["patch_embeds"] = mk((B, cfg.vision.num_patches, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    if cfg.encoder is not None and shape.kind != "decode":
+        out["encoder_frames"] = mk((B, cfg.encoder.n_ctx, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig):
+    lg = batch_logical(cfg, shape)
+    batch_tree = make_batch(cfg, shape, abstract=True)
+    return jax.tree.map(
+        lambda l, s: to_pspec(l, mesh_cfg, shape=s.shape),
+        lg, batch_tree, is_leaf=_LOGICAL_LEAF)
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract DecodeCache for decode-kind shapes."""
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return cache
+
+
+# flash-decoding style cache layout: shard the KV sequence over the model
+# axis so decode attention is a local partial softmax + tiny psum of stats
+# (the paper's local->global combine) instead of a cache all-gather. Toggled
+# by the dry-run --variant plumbing; measured in EXPERIMENTS.md §Perf.
+DECODE_SEQ_SHARD = False
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig):
+    long_context = shape.global_batch < mesh_cfg.data  # batch can't shard -> SP
+    lg = transformer.cache_logical(cfg, long_context=long_context)
+    if DECODE_SEQ_SHARD:
+        rules = {"kv_seq": (("dp", "model") if long_context else ("model",)),
+                 "kv_hd": ()}
+    else:
+        rules = {"kv_seq": ("dp",)} if long_context else None
+    cache = cache_shapes(cfg, shape)
+    return jax.tree.map(
+        lambda l, s: to_pspec(l, mesh_cfg, shape=s.shape, rules=rules),
+        lg, cache, is_leaf=_LOGICAL_LEAF)

@@ -1,0 +1,169 @@
+"""Shared model layers: norms, rotary embeddings, MLP variants, embeddings.
+
+Pure-functional: each layer has ``init_*`` (params pytree), ``*_logical``
+(matching pytree of logical axis tuples, resolved by sharding/partitioning),
+and ``apply_*``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), _dtype(cfg)),
+                "bias": jnp.zeros((cfg.d_model,), _dtype(cfg))}
+    return {"scale": jnp.ones((cfg.d_model,), _dtype(cfg))}
+
+
+def norm_logical(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {"scale": ("embed",)}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_vec(x, scale, eps: float = 1e-6):
+    """Headwise RMSNorm (qwen3 qk-norm / mamba2 gated norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_ctx: int, d_model: int):
+    """Whisper-style fixed sinusoidal embedding table (n_ctx, d_model)."""
+    pos = jnp.arange(n_ctx, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10_000.0) * dim / max(d_model // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants (swiglu | geglu | squared_relu | gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_is_gated(mlp_type: str) -> bool:
+    return mlp_type in ("swiglu", "geglu")
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    params = {"w_in": dense_init(ks[0], cfg.d_model, d_ff, dt),
+              "w_out": dense_init(ks[1], d_ff, cfg.d_model, dt)}
+    if mlp_is_gated(cfg.mlp_type):
+        params["w_gate"] = dense_init(ks[2], cfg.d_model, d_ff, dt)
+    return params
+
+
+def mlp_logical(cfg: ModelConfig):
+    lg = {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+    if mlp_is_gated(cfg.mlp_type):
+        lg["w_gate"] = ("embed", "mlp")
+    return lg
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    h = x @ params["w_in"]
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * h
+    elif cfg.mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(f"unknown mlp_type {cfg.mlp_type}")
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    params = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def embed_logical(cfg: ModelConfig):
+    lg = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        lg["unembed"] = ("embed", "vocab")
+    return lg
+
+
+def apply_embed(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.arch_id.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def apply_unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return x @ params["tok"].T
+    return x @ params["unembed"]

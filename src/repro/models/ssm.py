@@ -1,0 +1,260 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060], TPU-adapted.
+
+The SSD algorithm splits the sequence into chunks of length Q. Within a chunk
+the recurrence is computed *quadratically* (a masked-decay "attention" matmul
+— MXU-native), and a single (H, P, N) state per chunk is carried across chunks
+with a sequential ``lax.scan``. This is the paper's chunking idea (DESIGN.md
+§2) applied along time: intra-chunk = OP1-style embarrassingly parallel work,
+inter-chunk = the small sequential combine.
+
+Decode is the O(1) recurrent update: h' = exp(dt·A)·h + dt·B⊗x; y = C·h + D·x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm_vec
+
+
+def init_ssm(key, cfg: ModelConfig):
+    c = cfg.ssm
+    dt = jnp.dtype(cfg.dtype)
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    GN = c.n_groups * c.d_state
+    ks = jax.random.split(key, 10)
+    params = {
+        "wz": dense_init(ks[0], cfg.d_model, d_in, dt),
+        "wx": dense_init(ks[1], cfg.d_model, d_in, dt),
+        "wB": dense_init(ks[2], cfg.d_model, GN, dt),
+        "wC": dense_init(ks[3], cfg.d_model, GN, dt),
+        "wdt": dense_init(ks[4], cfg.d_model, H, dt),
+        "conv_x": (jax.random.normal(ks[5], (c.conv_width, d_in)) * 0.1).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (c.conv_width, GN)) * 0.1).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (c.conv_width, GN)) * 0.1).astype(dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[8], d_in, cfg.d_model, dt),
+    }
+    return params
+
+
+def ssm_logical(cfg: ModelConfig):
+    return {
+        "wz": ("embed", "d_inner"),
+        "wx": ("embed", "d_inner"),
+        "wB": ("embed", "state"),
+        "wC": ("embed", "state"),
+        "wdt": ("embed", "ssm_heads"),
+        "conv_x": ("conv", "d_inner"),
+        "conv_B": ("conv", "state"),
+        "conv_C": ("conv", "state"),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_scale": ("d_inner",),
+        "w_out": ("d_inner", "embed"),
+    }
+
+
+class SSMCache(NamedTuple):
+    """Decode-time recurrent state for one layer."""
+
+    conv_x: jax.Array   # (B, W-1, d_inner)
+    conv_B: jax.Array   # (B, W-1, G*N)
+    conv_C: jax.Array   # (B, W-1, G*N)
+    h: jax.Array        # (B, H, P, N) float32
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> SSMCache:
+    c = cfg.ssm
+    dt = dtype or jnp.dtype(cfg.dtype)
+    GN = c.n_groups * c.d_state
+    W = c.conv_width
+    return SSMCache(
+        conv_x=jnp.zeros((batch, W - 1, cfg.d_inner), dt),
+        conv_B=jnp.zeros((batch, W - 1, GN), dt),
+        conv_C=jnp.zeros((batch, W - 1, GN), dt),
+        h=jnp.zeros((batch, cfg.ssm_heads, c.head_dim, c.d_state), jnp.float32),
+    )
+
+
+def ssm_cache_logical(cfg: ModelConfig):
+    return SSMCache(
+        conv_x=("batch", "conv", "d_inner"),
+        conv_B=("batch", "conv", "state"),
+        conv_C=("batch", "conv", "state"),
+        h=("batch", "ssm_heads", "head_dim", "state"),
+    )
+
+
+def _causal_conv(x, w):
+    """Depthwise causal 1-D conv. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def _conv_step(window, x_new, w):
+    """One decode step of the causal conv. window: (B, W-1, C); x_new: (B, C)."""
+    full = jnp.concatenate([window, x_new[:, None]], axis=1)        # (B, W, C)
+    y = jnp.sum(full * w[None], axis=1)
+    return y, full[:, 1:]
+
+
+def _segsum(a):
+    """a: (..., Q). Returns (..., Q, Q) with out[i, j] = sum_{j < t <= i} a[t],
+    -inf above the diagonal (the within-chunk decay matrix in log space)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _project(params, u, cfg: ModelConfig):
+    """Shared in-projection for prefill and decode.
+
+    Kept as five separate GEMMs: fusing them (all, or even just the aligned
+    z/x pair) was tried and REFUTED in §Perf cell-2 iters 1-2 — the outputs
+    carry different shardings and the trace-time weight concat re-shards
+    inside the layer scan, costing more than the saved input reads.
+    """
+    z = u @ params["wz"]
+    x = u @ params["wx"]
+    Bp = u @ params["wB"]
+    Cp = u @ params["wC"]
+    dt_raw = u @ params["wdt"]
+    return z, x, Bp, Cp, dt_raw
+
+
+def apply_ssm(params, u, cfg: ModelConfig, h0=None):
+    """Full-sequence SSD. u: (B, S, d_model) -> (B, S, d_model), final state.
+
+    ``chunk`` must divide S (configs guarantee this for the assigned shapes).
+    """
+    c = cfg.ssm
+    B_, S_orig, _ = u.shape
+    H, P, N, G = cfg.ssm_heads, c.head_dim, c.d_state, c.n_groups
+    Q = min(c.chunk, S_orig)
+
+    z, x, Bp, Cp, dt_raw = _project(params, u, cfg)
+    x = _causal_conv(x, params["conv_x"])
+    Bp = _causal_conv(Bp, params["conv_B"])
+    Cp = _causal_conv(Cp, params["conv_C"])
+    x = jax.nn.silu(x)
+    Bp = jax.nn.silu(Bp)
+    Cp = jax.nn.silu(Cp)
+
+    # pad S up to a multiple of Q; padded steps have dt=0 (decay exp(0)=1,
+    # zero input contribution) so the carried state stays exact.
+    pad = (-S_orig) % Q
+    S = S_orig + pad
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0))
+        x, Bp, Cp = jnp.pad(x, pw), jnp.pad(Bp, pw), jnp.pad(Cp, pw)
+        dt_raw = jnp.pad(dt_raw, pw)
+    nc = S // Q
+
+    xh = x.reshape(B_, S, H, P).astype(jnp.float32)
+    Bh = Bp.reshape(B_, S, G, N).astype(jnp.float32)
+    Ch = Cp.reshape(B_, S, G, N).astype(jnp.float32)
+    # heads per group broadcast (G == 1 for assigned configs)
+    hg = H // G
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if pad:
+        valid = (jnp.arange(S) < S_orig).astype(jnp.float32)
+        dt = dt * valid[None, :, None]
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+    dA = dt * A[None, None, :]                                             # (B,S,H)
+
+    # chunked views: (B, nc, Q, ...) then scan over nc
+    def rc(t, trailing):
+        return t.reshape((B_, nc, Q) + trailing)
+
+    xc = rc(xh, (H, P)).transpose(1, 0, 2, 3, 4)
+    Bc = rc(Bh, (G, N)).transpose(1, 0, 2, 3, 4)
+    Cc = rc(Ch, (G, N)).transpose(1, 0, 2, 3, 4)
+    dAc = rc(dA, (H,)).transpose(1, 0, 2, 3)
+    dtc = rc(dt, (H,)).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def body(h, inp):
+        xb, Bb, Cb, dab, dtb = inp     # (B,Q,H,P) (B,Q,G,N) (B,Q,G,N) (B,Q,H) (B,Q,H)
+        a = dab.transpose(0, 2, 1)                       # (B,H,Q)
+        L = jnp.exp(_segsum(a))                          # (B,H,Q,Q)
+        a_cum = jnp.cumsum(a, axis=-1)                   # (B,H,Q)
+        # group-broadcast B/C to heads: index map head -> group
+        Bbh = jnp.repeat(Bb, hg, axis=2) if G > 1 else jnp.broadcast_to(
+            Bb, (B_, Q, 1, N))
+        Cbh = Cb
+        # intra-chunk (quadratic, MXU): Y_diag[l] = sum_s C_l·B_s L[l,s] dt_s x_s
+        GBC = jnp.einsum("blgn,bsgn->bgls", Cbh, Bb)     # (B,G,Q,Q)
+        GBC = jnp.repeat(GBC, hg, axis=1) if G > 1 else jnp.broadcast_to(
+            GBC, (B_, H, Q, Q))
+        M = GBC * L                                       # (B,H,Q,Q)
+        xw = xb * dtb[..., None]                          # dt-weighted x (B,Q,H,P)
+        y_diag = jnp.einsum("bhls,bshp->blhp", M, xw)
+        # chunk state contribution: decay from s to end of chunk
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)   # (B,H,Q)
+        state_in = jnp.einsum("bsgn,bhs,bshp->bhpn",
+                              Bb, decay_states, xw) if G == 1 else jnp.einsum(
+            "bshn,bhs,bshp->bhpn", Bbh, decay_states, xw)
+        # inter-chunk: contribution of carried state to every position
+        decay_out = jnp.exp(a_cum)                        # (B,H,Q)
+        y_off = jnp.einsum("blgn,bhpn,bhl->blhp", Cbh, h, decay_out) \
+            if G == 1 else jnp.einsum("blhn,bhpn,bhl->blhp",
+                                      jnp.repeat(Cb, hg, axis=2), h, decay_out)
+        chunk_decay = jnp.exp(a_cum[..., -1])             # (B,H)
+        h_new = h * chunk_decay[..., None, None] + state_in
+        return h_new, y_diag + y_off
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, Bc, Cc, dAc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y[:, :S_orig].reshape(B_, S_orig, cfg.d_inner).astype(u.dtype)
+    y = rms_norm_vec(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["w_out"], h_final
+
+
+def decode_ssm(params, u, cache: SSMCache, cfg: ModelConfig):
+    """One-token recurrent step. u: (B, 1, d_model)."""
+    c = cfg.ssm
+    B_ = u.shape[0]
+    H, P, N, G = cfg.ssm_heads, c.head_dim, c.d_state, c.n_groups
+    z, x, Bp, Cp, dt_raw = _project(params, u[:, 0], cfg)
+    x, conv_x = _conv_step(cache.conv_x, x, params["conv_x"])
+    Bp, conv_B = _conv_step(cache.conv_B, Bp, params["conv_B"])
+    Cp, conv_C = _conv_step(cache.conv_C, Cp, params["conv_C"])
+    x = jax.nn.silu(x)
+    Bp = jax.nn.silu(Bp)
+    Cp = jax.nn.silu(Cp)
+    xh = x.reshape(B_, H, P).astype(jnp.float32)
+    Bh = Bp.reshape(B_, G, N).astype(jnp.float32)
+    Ch = Cp.reshape(B_, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                          # (B,H)
+    hg = H // G
+    Bhh = jnp.repeat(Bh, hg, axis=1) if G > 1 else jnp.broadcast_to(Bh, (B_, 1, N))
+    dBx = jnp.einsum("bh,bhp,bgn->bhpn", dt, xh,
+                     Bh) if G == 1 else jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bhh)
+    h = cache.h * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bgn->bhp", h, Ch) if G == 1 else jnp.einsum(
+        "bhpn,bhn->bhp", h, jnp.repeat(Ch, hg, axis=1))
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B_, cfg.d_inner).astype(u.dtype)
+    y = rms_norm_vec(y * jax.nn.silu(z), params["norm_scale"])
+    out = (y @ params["w_out"])[:, None]
+    return out, SSMCache(conv_x=conv_x, conv_B=conv_B, conv_C=conv_C, h=h)

@@ -1,0 +1,483 @@
+"""Decoder LM stack covering dense / MoE / SSM / hybrid / VLM archs.
+
+Layers are *scanned*: per-layer parameters are stacked along a leading axis
+and the layer body compiles once (bounds HLO size and compile time for the
+96-layer 340B dry-run). Hybrid (jamba) archs scan over *blocks* of
+``hybrid_block`` sublayers (7 mamba + 1 attention), the block body unrolled.
+
+Three entry points:
+  forward(params, tokens, ...)              train / scoring (full seq)
+  prefill(params, tokens, ...)              full seq + returns decode cache
+  decode_step(params, cache, tokens, pos)   one token against the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds per config
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig):
+    """Returns (mixer_kinds, ffn_kinds) per layer in one scan unit.
+
+    For non-hybrid archs the scan unit is a single layer; for hybrids it is a
+    block of cfg.hybrid_block sublayers.
+    """
+    if cfg.hybrid_block:
+        unit = cfg.hybrid_block
+        mixers = ["attn" if i == cfg.hybrid_attn_pos else "ssm" for i in range(unit)]
+        e = cfg.moe.every if cfg.moe else 0
+        ffns = [("moe" if (cfg.moe and i % e == e - 1) else
+                 ("mlp" if cfg.d_ff else "none")) for i in range(unit)]
+        n_units = cfg.n_layers // unit
+    else:
+        unit = 1
+        mixers = ["ssm" if cfg.family == "ssm" else "attn"]
+        if cfg.moe:
+            e = cfg.moe.every
+            # MoE archs with every==1: all layers MoE
+            ffns = ["moe" if e == 1 else "mlp"]
+        else:
+            ffns = ["mlp" if cfg.d_ff else "none"]
+        n_units = cfg.n_layers
+    return mixers, ffns, unit, n_units
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + logical specs (stacked over scan units)
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _sublayer_init(key, cfg: ModelConfig, mixer: str, ffn: str):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"norm_mixer": L.init_norm(cfg)}
+    if mixer == "attn":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+    if ffn != "none":
+        p["norm_ffn"] = L.init_norm(cfg)
+    if ffn == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    elif ffn == "mlp":
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def _sublayer_logical(cfg: ModelConfig, mixer: str, ffn: str):
+    lg: Dict[str, Any] = {"norm_mixer": L.norm_logical(cfg)}
+    if mixer == "attn":
+        lg["attn"] = attn.attention_logical(cfg)
+    else:
+        lg["ssm"] = ssm_mod.ssm_logical(cfg)
+    if ffn != "none":
+        lg["norm_ffn"] = L.norm_logical(cfg)
+    if ffn == "moe":
+        lg["moe"] = moe_mod.moe_logical(cfg)
+    elif ffn == "mlp":
+        lg["mlp"] = L.mlp_logical(cfg)
+    return lg
+
+
+def init_params(key, cfg: ModelConfig):
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+    ks = jax.random.split(key, unit + 3)
+    unit_params = {}
+    for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+        unit_params[f"sub{i}"] = _stack_init(
+            lambda k, mx=mx, ff=ff: _sublayer_init(k, cfg, mx, ff), ks[i], n_units)
+    params = {
+        "embed": L.init_embed(ks[unit], cfg),
+        "final_norm": L.init_norm(cfg),
+        "layers": unit_params,
+    }
+    if cfg.encoder is not None:
+        from repro.models import whisper
+        params["encoder"] = whisper.init_encoder(ks[unit + 1], cfg)
+        params["cross"] = _stack_init(
+            lambda k: {"attn": attn.init_attention(k, cfg, cross=True),
+                       "norm": L.init_norm(cfg)}, ks[unit + 2], n_units)
+    return params
+
+
+def params_logical(cfg: ModelConfig):
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+
+    def stacked(tree):
+        return jax.tree.map(lambda lg: ("layers",) + lg, tree,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and all(isinstance(e, (str, type(None))) for e in x))
+
+    unit_lg = {f"sub{i}": stacked(_sublayer_logical(cfg, mx, ff))
+               for i, (mx, ff) in enumerate(zip(mixers, ffns))}
+    lg = {
+        "embed": L.embed_logical(cfg),
+        "final_norm": L.norm_logical(cfg),
+        "layers": unit_lg,
+    }
+    if cfg.encoder is not None:
+        from repro.models import whisper
+        lg["encoder"] = whisper.encoder_logical(cfg)
+        lg["cross"] = stacked({"attn": attn.attention_logical(cfg, cross=True),
+                               "norm": L.norm_logical(cfg)})
+    return lg
+
+
+# ---------------------------------------------------------------------------
+# Sublayer application
+# ---------------------------------------------------------------------------
+
+
+def _moe(p, h2d, cfg, plan):
+    if plan is not None:
+        return moe_mod.apply_moe_two_phase(p, h2d, cfg, plan)
+    return moe_mod.apply_moe(p, h2d, cfg)
+
+
+def _apply_sublayer(p, x, cfg: ModelConfig, mixer: str, ffn: str,
+                    positions=None, plan=None):
+    h = L.apply_norm(p["norm_mixer"], x, cfg)
+    if mixer == "attn":
+        out, _ = attn.apply_attention(p["attn"], h, cfg, positions=positions)
+    else:
+        out, _ = ssm_mod.apply_ssm(p["ssm"], h, cfg)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = L.apply_norm(p["norm_ffn"], x, cfg)
+        if ffn == "moe":
+            B, S, d = h.shape
+            y, aux = _moe(p["moe"], h.reshape(B * S, d), cfg, plan)
+            y = y.reshape(B, S, d)
+        else:
+            y = L.apply_mlp(p["mlp"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill base)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ModelConfig, *,
+            patch_embeds=None, encoder_frames=None, remat: str = "none",
+            plan=None):
+    """tokens: (B, S_tok) int32 -> logits (B, S, vocab), aux_losses.
+
+    VLM: patch_embeds (B, P, d_model) are prepended (S = P + S_tok).
+    Enc-dec: encoder_frames (B, n_ctx, d_model) go through the encoder; the
+    decoder cross-attends into the resulting memory.
+    """
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+    x = L.apply_embed(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    memory_kv = None
+    if cfg.encoder is not None:
+        from repro.models import whisper
+        memory = whisper.apply_encoder(params["encoder"], encoder_frames, cfg)
+        # one shared projection per scan unit is stacked in params["cross"]
+
+    def unit_body(carry, unit_params):
+        x = carry
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+            x, aux = _apply_sublayer(unit_params[f"sub{i}"], x, cfg, mx, ff,
+                                     positions=positions, plan=plan)
+            aux_total = aux_total + aux
+        if cfg.encoder is not None:
+            cp = unit_params["__cross__"]
+            h = L.apply_norm(cp["norm"], x, cfg)
+            kv = attn.encode_cross_kv(cp["attn"], memory, cfg)
+            x = x + attn.apply_cross_attention(cp["attn"], h, kv, cfg)
+        return x, aux_total
+
+    scan_params = dict(params["layers"])
+    if cfg.encoder is not None:
+        scan_params["__cross__"] = params["cross"]
+
+    body = _remat_wrap(unit_body, remat)
+    x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, scan_params)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.apply_unembed(params["embed"], x, cfg)
+    return logits, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    kv_k: Optional[jax.Array]      # (n_units, n_attn_per_unit, B, S_max, Hkv, hd)
+    kv_v: Optional[jax.Array]
+    ssm: Optional[Any]             # stacked SSMCache (n_units, n_ssm_per_unit, ...)
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]]  # (n_units, B, n_ctx, Hkv, hd)
+    pos: jax.Array                 # (B,) next position to write
+
+
+def cache_logical(cfg: ModelConfig, long_context: bool = False):
+    """Logical specs for the decode cache. For long_context (batch=1) the KV
+    sequence dim is sharded over the data axes instead of the batch dim."""
+    kv_seq = ("kv_seq",)
+    kv = ("blocks", "layers", "batch") + kv_seq + ("kv_heads", "kv_hd")
+    ssm_lg = jax.tree.map(lambda lg: ("blocks", "layers") + lg,
+                          ssm_mod.ssm_cache_logical(cfg),
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and all(isinstance(e, (str, type(None))) for e in x))
+    cross = ("blocks", "batch", "frames", "kv_heads", "kv_hd")
+    mixers, _, _, _ = layer_plan(cfg)
+    has_attn = "attn" in mixers
+    has_ssm = "ssm" in mixers
+    return DecodeCache(
+        kv_k=kv if has_attn else None,
+        kv_v=kv if has_attn else None,
+        ssm=ssm_lg if has_ssm else None,
+        cross_kv=(cross, cross) if cfg.encoder is not None else None,
+        pos=("batch",),
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> DecodeCache:
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+    dt = dtype or jnp.dtype(cfg.dtype)
+    n_attn = sum(1 for m in mixers if m == "attn")
+    n_ssm = sum(1 for m in mixers if m == "ssm")
+    kv_k = kv_v = None
+    if n_attn:
+        shape = (n_units, n_attn, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        kv_k = jnp.zeros(shape, dt)
+        kv_v = jnp.zeros(shape, dt)
+    ssm_cache = None
+    if n_ssm:
+        one = ssm_mod.init_ssm_cache(cfg, batch, dt)
+        ssm_cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_units, n_ssm) + a.shape).copy(), one)
+    cross_kv = None
+    if cfg.encoder is not None:
+        shape = (n_units, batch, cfg.encoder.n_ctx, cfg.n_kv_heads, cfg.head_dim)
+        cross_kv = (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    return DecodeCache(kv_k=kv_k, kv_v=kv_v, ssm=ssm_cache, cross_kv=cross_kv,
+                       pos=jnp.zeros((batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_seq: Optional[int] = None,
+            patch_embeds=None, encoder_frames=None, plan=None):
+    """Returns (last-position logits (B, vocab), DecodeCache)."""
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+    x = L.apply_embed(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cache = init_cache(cfg, B, max_seq)
+
+    memory = None
+    if cfg.encoder is not None:
+        from repro.models import whisper
+        memory = whisper.apply_encoder(params["encoder"], encoder_frames, cfg)
+
+    def unit_body(x, unit_params):
+        attn_i = ssm_i = 0
+        kv_ks, kv_vs, ssm_states = [], [], []
+        for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+            p = unit_params[f"sub{i}"]
+            h = L.apply_norm(p["norm_mixer"], x, cfg)
+            if mx == "attn":
+                out, (k, v) = attn.apply_attention(p["attn"], h, cfg,
+                                                   positions=positions)
+                kv_ks.append(k)
+                kv_vs.append(v)
+                attn_i += 1
+            else:
+                out, h_final = ssm_mod.apply_ssm(p["ssm"], h, cfg)
+                # conv windows: last (W-1) pre-activation conv inputs
+                zxbc = _ssm_conv_tail(p["ssm"], h, cfg)
+                ssm_states.append((zxbc, h_final))
+                ssm_i += 1
+            x = x + out
+            if ff != "none":
+                hn = L.apply_norm(p["norm_ffn"], x, cfg)
+                if ff == "moe":
+                    y, _ = _moe(p["moe"], hn.reshape(B * S, -1), cfg, plan)
+                    x = x + y.reshape(B, S, -1)
+                else:
+                    x = x + L.apply_mlp(p["mlp"], hn, cfg)
+        cross = None
+        if cfg.encoder is not None:
+            cp = unit_params["__cross__"]
+            hn = L.apply_norm(cp["norm"], x, cfg)
+            kv = attn.encode_cross_kv(cp["attn"], memory, cfg)
+            x = x + attn.apply_cross_attention(cp["attn"], hn, kv, cfg)
+            cross = kv
+        return x, (kv_ks, kv_vs, ssm_states, cross)
+
+    scan_params = dict(params["layers"])
+    if cfg.encoder is not None:
+        scan_params["__cross__"] = params["cross"]
+    x, (kv_ks, kv_vs, ssm_states, cross) = jax.lax.scan(unit_body, x, scan_params)
+
+    # assemble cache: pad prefill K/V out to max_seq
+    kv_k = kv_v = None
+    if any(m == "attn" for m in mixers):
+        # scan stacked the unit dim: kv_ks is a list (len n_attn) of
+        # (n_units, B, S, Hkv, hd) arrays
+        k_st = jnp.stack(kv_ks, axis=1)
+        v_st = jnp.stack(kv_vs, axis=1)
+        pad = max_seq - S
+        if pad > 0:
+            padding = [(0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            k_st = jnp.pad(k_st, padding)
+            v_st = jnp.pad(v_st, padding)
+        kv_k, kv_v = k_st.astype(jnp.dtype(cfg.dtype)), v_st.astype(jnp.dtype(cfg.dtype))
+
+    ssm_cache = None
+    if any(m == "ssm" for m in mixers):
+        convs = jnp.stack([s[0] for s in ssm_states], axis=1)  # (units, n_ssm, B, W-1, C3)
+        finals = jnp.stack([s[1] for s in ssm_states], axis=1)
+        c = cfg.ssm
+        GN = c.n_groups * c.d_state
+        d_in = cfg.d_inner
+        ssm_cache = ssm_mod.SSMCache(
+            conv_x=convs[..., :d_in].astype(jnp.dtype(cfg.dtype)),
+            conv_B=convs[..., d_in:d_in + GN].astype(jnp.dtype(cfg.dtype)),
+            conv_C=convs[..., d_in + GN:].astype(jnp.dtype(cfg.dtype)),
+            h=finals,
+        )
+
+    cross_kv = None
+    if cfg.encoder is not None:
+        cross_kv = (cross[0].astype(jnp.dtype(cfg.dtype)),
+                    cross[1].astype(jnp.dtype(cfg.dtype)))
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.apply_unembed(params["embed"], x[:, -1], cfg)
+    pos = jnp.full((B,), S, jnp.int32)
+    return logits, DecodeCache(kv_k=kv_k, kv_v=kv_v, ssm=ssm_cache,
+                               cross_kv=cross_kv, pos=pos)
+
+
+def _ssm_conv_tail(p, h, cfg: ModelConfig):
+    """Last (W-1) conv inputs (pre-activation) for the decode conv cache."""
+    W = cfg.ssm.conv_width
+    x = h @ p["wx"]
+    Bp = h @ p["wB"]
+    Cp = h @ p["wC"]
+    tail = jnp.concatenate([x, Bp, Cp], axis=-1)[:, -(W - 1):]
+    return tail
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cache: DecodeCache, tokens, cfg: ModelConfig,
+                aligned: bool = True, plan=None):
+    """tokens: (B, 1) int32 -> (logits (B, vocab), new cache).
+
+    ``aligned``: all sequences share one position (assigned decode shapes);
+    pass False for ragged continuous batching.
+    """
+    mixers, ffns, unit, n_units = layer_plan(cfg)
+    B = tokens.shape[0]
+    x = L.apply_embed(params["embed"], tokens, cfg)
+    pos = cache.pos
+
+    def unit_body(x, scanned):
+        unit_params, kv_k_u, kv_v_u, ssm_u, cross_u = scanned
+        attn_i = ssm_i = 0
+        new_ks, new_vs, new_ssms = [], [], []
+        for i, (mx, ff) in enumerate(zip(mixers, ffns)):
+            p = unit_params[f"sub{i}"]
+            h = L.apply_norm(p["norm_mixer"], x, cfg)
+            if mx == "attn":
+                out, nk, nv = attn.decode_attention(
+                    p["attn"], h, kv_k_u[attn_i], kv_v_u[attn_i], pos, cfg,
+                    aligned=aligned)
+                new_ks.append(nk)
+                new_vs.append(nv)
+                attn_i += 1
+            else:
+                sc = jax.tree.map(lambda a: a[ssm_i], ssm_u)
+                out, nsc = ssm_mod.decode_ssm(p["ssm"], h, sc, cfg)
+                new_ssms.append(nsc)
+                ssm_i += 1
+            x = x + out
+            if ff != "none":
+                hn = L.apply_norm(p["norm_ffn"], x, cfg)
+                if ff == "moe":
+                    y, _ = _moe(p["moe"], hn.reshape(B, -1), cfg, plan)
+                    x = x + y.reshape(B, 1, -1)
+                else:
+                    x = x + L.apply_mlp(p["mlp"], hn, cfg)
+        if cfg.encoder is not None:
+            cp = unit_params["__cross__"]
+            hn = L.apply_norm(cp["norm"], x, cfg)
+            x = x + attn.apply_cross_attention(cp["attn"], hn, cross_u, cfg)
+        nk = jnp.stack(new_ks, 0) if new_ks else kv_k_u
+        nv = jnp.stack(new_vs, 0) if new_vs else kv_v_u
+        nssm = (jax.tree.map(lambda *a: jnp.stack(a, 0), *new_ssms)
+                if new_ssms else ssm_u)
+        return x, (nk, nv, nssm)
+
+    scan_params = dict(params["layers"])
+    if cfg.encoder is not None:
+        scan_params["__cross__"] = params["cross"]
+
+    # dummies so the scan signature is uniform
+    kv_k = cache.kv_k if cache.kv_k is not None else jnp.zeros((n_units, 0))
+    kv_v = cache.kv_v if cache.kv_v is not None else jnp.zeros((n_units, 0))
+    ssm_c = cache.ssm if cache.ssm is not None else jnp.zeros((n_units, 0))
+    cross = cache.cross_kv if cache.cross_kv is not None else jnp.zeros((n_units, 0))
+
+    x, (nk, nv, nssm) = jax.lax.scan(
+        unit_body, x, (scan_params, kv_k, kv_v, ssm_c, cross))
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.apply_unembed(params["embed"], x[:, 0], cfg)
+    new_cache = DecodeCache(
+        kv_k=nk if cache.kv_k is not None else None,
+        kv_v=nv if cache.kv_v is not None else None,
+        ssm=nssm if cache.ssm is not None else None,
+        cross_kv=cache.cross_kv,
+        pos=pos + 1,
+    )
+    return logits, new_cache

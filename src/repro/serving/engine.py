@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill + decode loop over a KV/SSM cache.
+
+The engine jit-compiles one prefill step and one decode step per (batch,
+seq) bucket and runs greedy or temperature sampling. Aligned decode (all
+sequences at the same position) is the fast path used by the assigned decode
+shapes; ragged continuous batching falls back to per-sequence scatter.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import transformer
+
+
+@dataclass
+class GenerationResult:
+    tokens: jnp.ndarray        # (B, n_new)
+    logprobs: jnp.ndarray      # (B, n_new)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = None):
+        self.cfg = cfg
+        self.params = params
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self._prefill = jax.jit(
+            functools.partial(transformer.prefill, cfg=cfg,
+                              max_seq=self.serve_cfg.max_seq),
+            static_argnames=())
+        self._decode = jax.jit(
+            lambda p, c, t: transformer.decode_step(p, c, t, cfg))
+
+    def prefill(self, tokens, **frontend):
+        """tokens: (B, S) -> (last logits, cache)."""
+        return self._prefill(self.params, tokens, **frontend)
+
+    def generate(self, prompt_tokens, n_new: int, *, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None, **frontend
+                 ) -> GenerationResult:
+        logits, cache = self.prefill(prompt_tokens, **frontend)
+        B = prompt_tokens.shape[0]
+        toks, lps = [], []
+        for i in range(n_new):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), nxt]
+            toks.append(nxt)
+            lps.append(lp)
+            logits, cache = self._decode(self.params, cache, nxt[:, None])
+        return GenerationResult(tokens=jnp.stack(toks, axis=1),
+                                logprobs=jnp.stack(lps, axis=1),
+                                steps=n_new)

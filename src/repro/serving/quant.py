@@ -1,0 +1,81 @@
+"""int8 weight quantization for serving — the decode lever identified in
+EXPERIMENTS.md §Perf cell 3 (MoE decode is expert-weight-read bound at small
+batch; int8 storage halves the dominant memory-roofline term vs bf16).
+
+Symmetric per-output-channel quantisation; matmuls run int8-storage →
+dequant-in-registers (on TPU the dequant fuses into the MXU feed, so HBM
+traffic is the int8 bytes).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantTensor(NamedTuple):
+    q: jax.Array        # int8, same shape as the original
+    scale: jax.Array    # f32, per-output-channel (last dim)
+
+
+def quantize_weight(w, axis: int = -1) -> QuantTensor:
+    """Symmetric per-channel int8 along ``axis`` (default: output dim)."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=tuple(
+        i for i in range(w.ndim) if i != (axis % w.ndim)), keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(qt: QuantTensor, dtype=jnp.bfloat16):
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def qmatmul(x, qt: QuantTensor):
+    """x @ dequant(W) with f32 accumulation. x: (..., in); W: (in, out)."""
+    w = qt.q.astype(x.dtype)
+    y = jnp.einsum("...i,io->...o", x, w,
+                   preferred_element_type=jnp.float32)
+    return (y * qt.scale.reshape(1, -1)).astype(x.dtype)
+
+
+def quantize_params(params, *, min_size: int = 1 << 16):
+    """Quantise every float leaf with >= min_size elements (weights), keep
+    small leaves (norms, biases) in their original dtype. Returns a pytree
+    of QuantTensor | original leaves plus a matching is-quantised mask."""
+
+    def one(p):
+        if (hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating)
+                and p.size >= min_size and p.ndim >= 2):
+            return quantize_weight(p)
+        return p
+
+    return jax.tree.map(one, params)
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda p: dequantize(p, dtype) if isinstance(p, QuantTensor) else p,
+        qparams, is_leaf=lambda x: isinstance(x, QuantTensor))
+
+
+def quant_bytes(params) -> int:
+    """Serialized size if quantised (int8 + f32 scales) — for the roofline
+    memory-term estimate in EXPERIMENTS.md."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if (jnp.issubdtype(p.dtype, jnp.floating) and p.size >= (1 << 16)
+                and p.ndim >= 2):
+            total += p.size  # int8
+            total += 4 * p.shape[-1]
+        else:
+            total += p.size * p.dtype.itemsize
+    return total
+
+
+def relative_error(w, qt: QuantTensor) -> float:
+    deq = dequantize(qt, jnp.float32)
+    return float(jnp.linalg.norm(deq - w.astype(jnp.float32))
+                 / jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32)), 1e-12))

@@ -1,0 +1,8 @@
+from repro.sharding.partitioning import (  # noqa: F401
+    DEFAULT_RULES,
+    named_sharding,
+    to_pspec,
+    tree_to_pspecs,
+    validate_pspec,
+    zero1_pspec,
+)

@@ -1,0 +1,1 @@
+from repro.training import grad_compression, optimizer, trainer  # noqa: F401

@@ -1,0 +1,64 @@
+"""Gradient compression for DP all-reduce: int8 quantise -> sum -> dequantise
+with an error-feedback accumulator.
+
+At 1000+ node scale the DP gradient all-reduce is the dominant cross-pod
+collective; 4x compression (f32->int8 with per-tensor scale) cuts the
+collective roofline term proportionally. Error feedback keeps the scheme
+convergent (residual added back next step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    """Per-tensor symmetric int8 quantisation. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals=None):
+    """Quantise a gradient pytree with error feedback.
+
+    Returns (quantised tree of (q, scale), new_residuals).
+    """
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return (q, s), corrected - deq
+
+    flat, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    qs, news = [], []
+    for g, r in zip(flat, flat_r):
+        (q, s), nr = one(g, r)
+        qs.append((q, s))
+        news.append(nr)
+    return tdef.unflatten(qs), tdef.unflatten(news)
+
+
+def decompress_tree(qtree):
+    return jax.tree.map(
+        lambda qs: dequantize_int8(*qs),
+        qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def roundtrip_error(g):
+    """Relative L2 error of one quantise/dequantise pass (for tests/bench)."""
+    q, s = quantize_int8(g)
+    deq = dequantize_int8(q, s)
+    return jnp.linalg.norm(deq - g) / jnp.maximum(jnp.linalg.norm(g), 1e-12)

@@ -1,0 +1,116 @@
+"""train_step / serve_step factories.
+
+``make_train_step`` builds a jit-able closure: CE loss (+ MoE aux), gradient
+accumulation over microbatches via ``lax.scan`` (per-microbatch grads are
+accumulated in f32 — the reduce-scatter of the grad sync overlaps with the
+next microbatch's backward under XLA's latency-hiding scheduler), global-norm
+clipping, AdamW, ZeRO-1-shardable state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer
+from repro.training import optimizer as opt_mod
+from repro.training.grad_compression import compress_tree, decompress_tree
+
+
+def cross_entropy(logits, targets, label_smoothing: float = 0.0):
+    """Mean CE over all positions. logits (..., V) f32; targets (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if label_smoothing:
+        smooth = logz - jnp.mean(logits, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig,
+            train_cfg: TrainConfig, plan=None):
+    kw = {}
+    if "patch_embeds" in batch:
+        kw["patch_embeds"] = batch["patch_embeds"]
+    if "encoder_frames" in batch:
+        kw["encoder_frames"] = batch["encoder_frames"]
+    logits, aux = transformer.forward(params, batch["tokens"], cfg,
+                                      remat=train_cfg.remat, plan=plan, **kw)
+    # VLM: patches prepended — only score the text positions
+    if "patch_embeds" in batch:
+        n_p = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_p:]
+    ce = cross_entropy(logits, batch["targets"], train_cfg.label_smoothing)
+    moe_coef = cfg.moe.load_balance_coef if cfg.moe else 0.0
+    return ce + moe_coef * aux, {"ce": ce, "aux": aux}
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, train_cfg: TrainConfig, plan=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def grads_of(params, mb):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, cfg, train_cfg, plan)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch):
+        n_mb = train_cfg.microbatches
+        if n_mb > 1:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, _parts, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_mb, acc, grads)
+                return (acc, loss_acc + loss / n_mb), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(body, (zeros, 0.0), mbs)
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            loss, parts, grads = grads_of(params, batch)
+
+        if train_cfg.grad_compression == "int8":
+            qtree, _resid = compress_tree(grads)
+            grads = decompress_tree(qtree)
+
+        params, opt_state, stats = opt_mod.adamw_update(
+            params, grads, opt_state, train_cfg)
+        metrics = {"loss": loss, **parts, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None,
+                      plan=None):
+    def prefill_step(params, batch):
+        kw = {}
+        if "patch_embeds" in batch:
+            kw["patch_embeds"] = batch["patch_embeds"]
+        if "encoder_frames" in batch:
+            kw["encoder_frames"] = batch["encoder_frames"]
+        return transformer.prefill(params, batch["tokens"], cfg,
+                                   max_seq=max_seq, plan=plan, **kw)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan=None):
+    def serve_step(params, cache, tokens):
+        return transformer.decode_step(params, cache, tokens, cfg, plan=plan)
+    return serve_step

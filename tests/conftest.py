@@ -1,0 +1,25 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def synth_blobs(n=400, d=21, n_class=3, seed=0, spread=3.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_class, d)) * spread
+    y = rng.integers(0, n_class, size=n).astype(np.int32)
+    X = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return X, y

@@ -1,0 +1,74 @@
+"""shard_map production path == VirtualCluster (vmap) path, on a real
+8-device mesh (subprocess — tests otherwise see one device)."""
+import subprocess
+import sys
+import textwrap
+
+PAYLOAD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import cluster, gnb as NB, kmeans as KM, knn as KNN
+    from repro.core.distribution import two_phase_matvec, two_phase_matvec_shardmap
+    from repro.launch.mesh import _mk
+
+    mesh = _mk((8,), ("data",))
+    rng = np.random.default_rng(0)
+    N, d, C = 640, 24, 4
+    centers = rng.normal(size=(C, d)) * 3
+    y = rng.integers(0, C, size=N).astype(np.int32)
+    X = jnp.asarray(centers[y] + rng.normal(size=(N, d)), jnp.float32)
+    yj = jnp.asarray(y)
+
+    # 1. two-phase matvec
+    W = jnp.asarray(rng.normal(size=(C, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    got = two_phase_matvec_shardmap(W, X[0], b, mesh, "data")
+    want = two_phase_matvec(W, X[0], b, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    # 2. kNN
+    model = KNN.KNNModel(A=X, labels=yj, n_class=C)
+    for i in (0, 5):
+        got = int(cluster.knn_classify_shardmap(model, X[i], 4, mesh, "data"))
+        want = int(KNN.knn_classify(model, X[i], 4, n_cores=8)[0])
+        assert got == want, (i, got, want)
+
+    # 3. kmeans iteration
+    cents = X[:C]
+    got_c, got_ids = cluster.kmeans_iteration_shardmap(X, cents, mesh, "data")
+    want_c, want_ids = KM.kmeans_iteration(X, cents, n_cores=8)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got_ids), np.asarray(want_ids))
+
+    # 4. GNB (features sharded: d=24 divides 8)
+    gm = NB.fit_gnb(X, yj, C)
+    cls, scores = cluster.gnb_decision_shardmap(gm, X[3], mesh, "data")
+    want_cls, want_scores = NB.gnb_decision(gm, X[3], n_cores=8)
+    assert int(cls) == int(want_cls)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want_scores),
+                               rtol=1e-4, atol=1e-4)
+
+    # 5. RF (trees sharded; vote psum == vmap critical-section reduction)
+    from repro.core import random_forest as RF
+    f = RF.train_forest(np.asarray(X), y, C, n_trees=16, max_depth=5)
+    for i in (0, 9):
+        got_cls, got_votes = cluster.forest_predict_shardmap(
+            f, X[i], mesh, "data")
+        want_cls2, want_votes = RF.forest_predict(f, X[i], n_cores=8)
+        assert int(got_cls) == int(want_cls2)
+        np.testing.assert_array_equal(np.asarray(got_votes),
+                                      np.asarray(want_votes))
+    print("SHARDMAP_OK")
+""")
+
+
+def test_shardmap_equals_vmap_cluster():
+    res = subprocess.run(
+        [sys.executable, "-c", PAYLOAD], capture_output=True, text=True,
+        timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert "SHARDMAP_OK" in res.stdout, (res.stdout[-800:], res.stderr[-2000:])

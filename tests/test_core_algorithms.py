@@ -1,0 +1,163 @@
+"""The six paper kernels: correctness vs oracles, n_cores invariance,
+and end-to-end accuracy on synthetic data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import synth_blobs
+from repro.core import gemm_based as G
+from repro.core import gnb as NB
+from repro.core import kmeans as KM
+from repro.core import knn as KNN
+from repro.core import random_forest as RF
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=400, d=21, n_class=3)
+
+
+# ------------------------------------------------------------------ GEMM
+
+
+def test_lr_svm_accuracy(blobs):
+    X, y = blobs
+    lr = G.train_lr(jnp.asarray(X), jnp.asarray(y), 3)
+    svm = G.train_svm(jnp.asarray(X), jnp.asarray(y), 3)
+    assert float(jnp.mean(G.lr_predict_batch(lr, X) == y)) > 0.95
+    assert float(jnp.mean(G.svm_predict_batch(svm, X) == y)) > 0.95
+
+
+@pytest.mark.parametrize("n_cores", [1, 2, 8])
+def test_lr_n_cores_invariance(blobs, n_cores):
+    X, y = blobs
+    model = G.train_lr(jnp.asarray(X), jnp.asarray(y), 3, steps=50)
+    base = G.lr_predict_batch(model, X[:64], n_cores=8)
+    other = G.lr_predict_batch(model, X[:64], n_cores=n_cores)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(other))
+
+
+def test_svm_decision_sign(blobs):
+    X, y = blobs
+    model = G.train_svm(jnp.asarray(X), jnp.asarray(y), 3)
+    cls, signs = G.svm_decision(model, jnp.asarray(X[0]))
+    # winner's one-vs-all score should be positive for a well-trained model
+    assert signs.shape == (3,)
+    assert int(cls) in (0, 1, 2)
+
+
+# ------------------------------------------------------------------ GNB
+
+
+def test_gnb_matches_dense_loglik(blobs):
+    X, y = blobs
+    m = NB.fit_gnb(jnp.asarray(X), jnp.asarray(y), 3)
+    x = jnp.asarray(X[5])
+    _, got = NB.gnb_decision(m, x, n_cores=8)
+    import math
+    t = -0.5 * ((x[None] - m.mu) ** 2 / m.var + jnp.log(m.var)
+                + math.log(2 * math.pi))
+    want = jnp.sum(t, axis=1) + m.log_prior
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_gnb_accuracy(blobs):
+    X, y = blobs
+    m = NB.fit_gnb(jnp.asarray(X), jnp.asarray(y), 3)
+    assert float(jnp.mean(NB.gnb_predict_batch(m, X) == y)) > 0.95
+
+
+# ------------------------------------------------------------------ kNN
+
+
+def test_knn_matches_bruteforce(blobs):
+    X, y = blobs
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    for i in (0, 7, 33):
+        q = jnp.asarray(X[i]) + 0.05
+        cls, nbrs = KNN.knn_classify(model, q, k=4, n_cores=8)
+        d = np.sum((X - np.asarray(q)) ** 2, axis=1)
+        want = set(np.argsort(d, kind="stable")[:4].tolist())
+        assert set(np.asarray(nbrs).tolist()) == want
+
+
+@pytest.mark.parametrize("n_cores", [1, 4, 8])
+def test_knn_n_cores_invariance(blobs, n_cores):
+    X, y = blobs
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    preds = KNN.knn_predict_batch(model, X[:32], k=4, n_cores=n_cores)
+    base = KNN.knn_predict_batch(model, X[:32], k=4, n_cores=8)
+    np.testing.assert_array_equal(np.asarray(preds), np.asarray(base))
+
+
+# ------------------------------------------------------------------ kmeans
+
+
+def test_kmeans_converges_and_labels_consistent(blobs):
+    X, _ = blobs
+    st, ids = KM.kmeans_fit(jnp.asarray(X), 3, threshold=1e-4)
+    assert float(st.shift) <= 1e-4 or int(st.n_iter) == 100
+    # assignment consistency: every point is nearest its own centroid
+    d = np.asarray(KM._pairwise_sq_dist(jnp.asarray(X), st.centroids))
+    np.testing.assert_array_equal(np.asarray(ids), d.argmin(axis=1))
+
+
+def test_kmeans_iteration_decreases_inertia(blobs):
+    X, _ = blobs
+    Xj = jnp.asarray(X)
+    cents = Xj[:3]
+    prev = None
+    for _ in range(6):
+        new_cents, ids = KM.kmeans_iteration(Xj, cents)
+        val = float(KM.inertia(Xj, new_cents, ids))
+        if prev is not None:
+            assert val <= prev + 1e-3
+        prev = val
+        cents = new_cents
+
+
+@pytest.mark.parametrize("n_cores", [1, 4, 8])
+def test_kmeans_n_cores_invariance(blobs, n_cores):
+    X, _ = blobs
+    c8, _ = KM.kmeans_iteration(jnp.asarray(X), jnp.asarray(X[:3]), n_cores=8)
+    cn, _ = KM.kmeans_iteration(jnp.asarray(X), jnp.asarray(X[:3]),
+                                n_cores=n_cores)
+    np.testing.assert_allclose(np.asarray(c8), np.asarray(cn),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ RF
+
+
+def _numpy_tree_predict(feature, threshold, left, right, x):
+    node = 0
+    while feature[node] >= 0:
+        node = left[node] if x[feature[node]] <= threshold[node] \
+            else right[node]
+    return -feature[node] - 1
+
+
+def test_rf_traversal_matches_numpy_oracle(blobs):
+    X, y = blobs
+    f = RF.train_forest(X, y, 3, n_trees=8, max_depth=5, seed=1)
+    feats = np.asarray(f.feature)
+    thr = np.asarray(f.threshold)
+    l = np.asarray(f.left)
+    r = np.asarray(f.right)
+    for i in (0, 11, 99):
+        for t in range(8):
+            got = int(RF.tree_predict(f.feature[t], f.threshold[t],
+                                      f.left[t], f.right[t],
+                                      jnp.asarray(X[i])))
+            want = _numpy_tree_predict(feats[t], thr[t], l[t], r[t], X[i])
+            assert got == want
+
+
+def test_rf_accuracy_and_vote_counts(blobs):
+    X, y = blobs
+    f = RF.train_forest(X, y, 3, n_trees=16, max_depth=8)
+    preds = RF.forest_predict_batch(f, jnp.asarray(X[:200]))
+    assert float(jnp.mean(preds == y[:200])) > 0.9
+    _, votes = RF.forest_predict(f, jnp.asarray(X[0]))
+    assert int(jnp.sum(votes)) == 16          # every tree votes exactly once

@@ -1,0 +1,70 @@
+"""Property tests: the paper's distribution schemes equal their dense forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distribution import (
+    choose_partition,
+    chunk_bounds,
+    pad_to_multiple,
+    split_chunks,
+    two_phase_matvec,
+    two_phase_reduce,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(2, 17),
+    d=st.integers(2, 130),
+    n_cores=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_two_phase_matvec_equals_dense(c, d, n_cores, seed):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(c, d)).astype(np.float32)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    b = rng.normal(size=(c,)).astype(np.float32)
+    got = np.asarray(two_phase_matvec(W, x, b, n_cores))
+    want = W @ x + b
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 200), n_cores=st.sampled_from([1, 2, 4, 8, 16]))
+def test_chunk_bounds_cover_exactly_once(n, n_cores):
+    """Every index in [0, chunk*n_cores) is owned by exactly one core."""
+    chunk = max(n // n_cores, 1)
+    total = chunk * n_cores
+    owned = np.zeros(total, dtype=int)
+    for core in range(n_cores):
+        lb, ub = chunk_bounds(total, n_cores, core)
+        owned[lb:ub] += 1
+    assert (owned == 1).all()
+
+
+def test_choose_partition_matches_paper_rule():
+    assert choose_partition(1000, 10) == "horizontal"   # r >> c: row-wise
+    assert choose_partition(10, 1000) == "vertical"     # c >> r: column-wise
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 100), n_cores=st.sampled_from([2, 4, 8]))
+def test_pad_and_split_roundtrip(n, n_cores):
+    x = jnp.arange(n, dtype=jnp.float32)
+    xp, n_orig = pad_to_multiple(x, n_cores)
+    assert n_orig == n
+    assert xp.shape[0] % n_cores == 0
+    chunks = split_chunks(xp, n_cores)
+    assert chunks.shape == (n_cores, xp.shape[0] // n_cores)
+    np.testing.assert_array_equal(np.asarray(chunks.reshape(-1)[:n]),
+                                  np.asarray(x))
+
+
+def test_two_phase_reduce_sum():
+    x = jnp.arange(64, dtype=jnp.float32).reshape(64)
+    got = two_phase_reduce(lambda c: jnp.sum(c), lambda p: jnp.sum(p), x,
+                           n_cores=8)
+    assert float(got) == float(jnp.sum(x))

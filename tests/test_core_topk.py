@@ -1,0 +1,56 @@
+"""The Selection-Sort partial top-k and its local/global decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topk import (
+    local_global_topk_largest,
+    local_global_topk_smallest,
+    selection_topk_smallest,
+    sorting_cost_model,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(5, 300), k=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_selection_topk_matches_lax(n, k, seed):
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    vs, idx = selection_topk_smallest(jnp.asarray(x), k)
+    want_v, want_i = jax.lax.top_k(-jnp.asarray(x), k)
+    np.testing.assert_allclose(np.asarray(vs), -np.asarray(want_v), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_i))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(8, 500), k=st.integers(1, 6),
+       n_cores=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_local_global_equals_global(n, k, n_cores, seed):
+    """The paper's c-core local SS + master merge == a single global top-k."""
+    k = min(k, max(n // max(n_cores, 1), 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    gv, gi = local_global_topk_smallest(jnp.asarray(x), k, n_cores)
+    ref_v = np.sort(x)[:k]
+    np.testing.assert_allclose(np.asarray(gv), ref_v, rtol=1e-6)
+    # indices must point at the right values
+    np.testing.assert_allclose(x[np.asarray(gi)], ref_v, rtol=1e-6)
+
+
+def test_largest_variant():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    vs, idx = local_global_topk_largest(x, 4, 8)
+    want = np.sort(np.asarray(x))[::-1][:4]
+    np.testing.assert_allclose(np.asarray(vs), want, rtol=1e-6)
+
+
+def test_sorting_cost_model_crossover():
+    """Paper Eq. 14: SS beats QS iff k < log2(n/c)."""
+    m = sorting_cost_model(1000, 4, c=8)        # k=4 < log2(125)=6.97
+    assert m["ss_favorable"]
+    assert m["selection_sort"] < m["quick_sort"]
+    m2 = sorting_cost_model(1000, 9, c=8)       # k=9 > 6.97
+    assert not m2["ss_favorable"]

@@ -1,0 +1,107 @@
+"""Unit tests for the loop-weighted HLO analyzer on synthetic HLO text."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.hlo_analysis import analyze, parse_module  # noqa: E402
+
+SIMPLE = """
+HloModule test
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (s: (s32[], f32[128,256])) -> pred[] {
+  %s = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (s: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %s = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %x = f32[128,256] get-tuple-element(%s), index=1
+  %ar = f32[128,256] all-reduce(%x), replica_groups={}, to_apply=%add.1
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ip, %ar)
+}
+
+ENTRY %main (p0: f32[128,256], p1: f32[256,64]) -> f32[128,64] {
+  %p0 = f32[128,256] parameter(0)
+  %p1 = f32[256,64] parameter(1)
+  %init_i = s32[] constant(0)
+  %tup = (s32[], f32[128,256]) tuple(%init_i, %p0)
+  %w = (s32[], f32[128,256]) while(%tup), condition=%cond, body=%body
+  %xw = f32[128,256] get-tuple-element(%w), index=1
+  ROOT %d = f32[128,64] dot(%xw, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_parse_module_finds_computations():
+    comps, entry = parse_module(SIMPLE)
+    assert entry == "main"
+    assert "body" in comps and "cond" in comps
+    assert comps["body"].params[0] == "s"
+
+
+def test_dot_flops():
+    st = analyze(SIMPLE)
+    # dot: 2 * 128 * 64 * 256
+    assert st.flops_dot == 2 * 128 * 64 * 256
+
+
+def test_while_loop_weighting():
+    """The all-reduce inside the 10-trip while counts 10x."""
+    st = analyze(SIMPLE)
+    ar_bytes = 128 * 256 * 4
+    # wire factor 2.0 for all-reduce
+    assert st.collective_bytes == 10 * ar_bytes * 2.0
+    assert st.per_kind["all-reduce"] == 10 * ar_bytes * 2.0
+
+
+def test_trip_count_from_hint():
+    hinted = SIMPLE.replace(
+        "while(%tup), condition=%cond, body=%body",
+        'while(%tup), condition=%cond, body=%body, '
+        'backend_config={"known_trip_count":{"n":"7"}}')
+    st = analyze(hinted)
+    assert st.collective_bytes == 7 * 128 * 256 * 4 * 2.0
+
+
+DUS_FUSION = """
+HloModule dus
+
+%fused_computation (param_0: s32[], param_1: bf16[32,64,64], param_2: bf16[64,64]) -> bf16[32,64,64] {
+  %param_1 = bf16[32,64,64] parameter(1)
+  %cv1 = f32[32,64,64] convert(%param_1)
+  %param_2 = bf16[64,64] parameter(2)
+  %cv2 = f32[64,64] convert(%param_2)
+  %b = f32[1,64,64] bitcast(%cv2)
+  %param_0 = s32[] parameter(0)
+  %c0 = s32[] constant(0)
+  %dus = f32[32,64,64] dynamic-update-slice(%cv1, %b, %param_0, %c0, %c0)
+  ROOT %out = bf16[32,64,64] convert(%dus)
+}
+
+ENTRY %main (i: s32[], buf: bf16[32,64,64], upd: bf16[64,64]) -> bf16[32,64,64] {
+  %i = s32[] parameter(0)
+  %buf = bf16[32,64,64] parameter(1)
+  %upd = bf16[64,64] parameter(2)
+  ROOT %f = bf16[32,64,64] fusion(%i, %buf, %upd), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_dus_fusion_charges_slice_not_buffer():
+    """In-place slice update: traffic ~ 2x the update, not the 256KB buffer."""
+    st = analyze(DUS_FUSION)
+    update_bytes = 1 * 64 * 64 * 4      # the f32 view written in place
+    assert st.bytes <= 4 * update_bytes  # out (2x update) + small operands
+    assert st.bytes < 32 * 64 * 64 * 2  # far below the full buffer

@@ -1,0 +1,87 @@
+"""Per-kernel Pallas sweeps: shapes x dtypes, allclose vs the ref.py oracle
+(interpret mode on CPU; same contract compiles via Mosaic on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 256, 128),
+                                   (100, 300, 50), (257, 129, 65)])
+def test_gemm_sweep(m, k, n, dtype):
+    k1, k2 = jax.random.split(KEY)
+    a = (jax.random.normal(k1, (m, k)) * 0.5).astype(dtype)
+    b = (jax.random.normal(k2, (k, n)) * 0.5).astype(dtype)
+    got = ops.matmul(a, b, bm=64, bn=64, bk=64)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,d,k", [(100, 21, 2), (256, 784, 10), (999, 8, 5)])
+def test_distance_sweep(n, d, k):
+    k1, k2 = jax.random.split(KEY)
+    a = jax.random.normal(k1, (n, d))
+    c = jax.random.normal(k2, (k, d))
+    got = ops.pairwise_sq_dist(a, c, bn=128)
+    want = ref.pairwise_sq_dist(a, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c,d", [(10, 784), (3, 21), (7, 130)])
+def test_gnb_score_sweep(c, d):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (d,))
+    mu = jax.random.normal(ks[1], (c, d))
+    var = jax.nn.softplus(jax.random.normal(ks[2], (c, d))) + 0.05
+    lp = jax.nn.log_softmax(jax.random.normal(ks[3], (c,)))
+    got = ops.gnb_scores(x, mu, var, lp, bd=64)
+    want = ref.gnb_scores(x, mu, var, lp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("r,n,k", [(8, 100, 4), (13, 97, 5), (32, 1000, 1)])
+def test_topk_sweep(r, n, k):
+    x = jax.random.normal(KEY, (r, n))
+    gv, gi = ops.topk_smallest(x, k)
+    wv, wi = ref.topk_smallest(x, k)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 128, 64), (2, 3, 256, 64)])
+def test_flash_attention_sweep(b, h, s, d, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (b, h, s, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, h, s, d)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, h, s, d)) * 0.3).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_gemm_property_random_shapes():
+    """Random non-aligned shapes exercise the padding path."""
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        m, k, n = rng.integers(3, 200, size=3)
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        got = ops.matmul(a, b, bm=64, bn=64, bk=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=2e-4, atol=2e-4)

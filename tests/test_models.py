@@ -1,0 +1,195 @@
+"""Per-arch smoke tests (reduced configs) + model-level correctness
+properties: prefill/decode == full forward, chunked == full attention,
+SSD chunked scan == naive recurrence, MoE equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ALL_ARCH_IDS, get_smoke_config
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.training import optimizer as opt_mod
+from repro.training import trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _frontend_kwargs(cfg, B, key):
+    kw = {}
+    if cfg.vision is not None:
+        kw["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.vision.num_patches, cfg.d_model)) * 0.02
+    if cfg.encoder is not None:
+        kw["encoder_frames"] = jax.random.normal(
+            key, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.02
+    return kw
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_arch_smoke_forward(arch_id):
+    """One forward on the reduced config: output shape + finite values."""
+    cfg = get_smoke_config(arch_id)
+    params = T.init_params(KEY, cfg)
+    B, S = 2, 32
+    kw = _frontend_kwargs(cfg, B, KEY)
+    S_tok = S - (cfg.vision.num_patches if cfg.vision else 0)
+    toks = jax.random.randint(KEY, (B, S_tok), 0, cfg.vocab_size)
+    logits, aux = T.forward(params, toks, cfg, **kw)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_arch_smoke_train_step(arch_id):
+    """One train step on the reduced config: finite loss, params update."""
+    cfg = get_smoke_config(arch_id)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=2)
+    params = T.init_params(KEY, cfg)
+    opt = opt_mod.init_opt_state(params)
+    B, S = 2, 16
+    kw = _frontend_kwargs(cfg, B, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             "targets": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             **kw}
+    step = trainer.make_train_step(cfg, tc)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # at least one parameter moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda p, q: bool(jnp.any(p != q)), params, new_params))
+    assert moved
+    assert int(new_opt.step) == 1
+
+
+@pytest.mark.parametrize("arch_id", ["stablelm-3b", "mamba2-780m",
+                                     "jamba-1.5-large-398b",
+                                     "qwen3-moe-30b-a3b",
+                                     "whisper-large-v3",
+                                     "phi-3-vision-4.2b"])
+def test_prefill_decode_matches_forward(arch_id):
+    cfg = get_smoke_config(arch_id)
+    params = T.init_params(KEY, cfg)
+    B, S = 2, 24
+    kw = _frontend_kwargs(cfg, B, KEY)
+    toks = jax.random.randint(KEY, (B, S + 2), 0, cfg.vocab_size)
+    full, _ = T.forward(params, toks, cfg, **kw)
+    pl, cache = T.prefill(params, toks[:, :S], cfg, max_seq=S + 8, **kw)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(full[:, -3]),
+                               rtol=1e-4, atol=1e-4)
+    dl, cache = T.decode_step(params, cache, toks[:, S:S + 1], cfg)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(full[:, -2]),
+                               rtol=1e-4, atol=1e-4)
+    dl2, _ = T.decode_step(params, cache, toks[:, S + 1:S + 2], cfg)
+    np.testing.assert_allclose(np.asarray(dl2), np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_equals_full():
+    cfg = get_smoke_config("deepseek-67b")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 512, cfg.n_heads, cfg.head_dim)) * 0.3
+    k = jax.random.normal(ks[1], (2, 512, cfg.n_kv_heads, cfg.head_dim)) * 0.3
+    v = jax.random.normal(ks[2], (2, 512, cfg.n_kv_heads, cfg.head_dim)) * 0.3
+    for causal in (True, False):
+        full = A.full_attention(q, k, v, cfg, causal=causal)
+        ch = A.chunked_attention(q, k, v, cfg, causal=causal, chunk=128)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(ch),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _ssd_reference(params, u, cfg):
+    """Naive per-timestep recurrence — the SSD oracle."""
+    import jax.nn as nn
+    c = cfg.ssm
+    B, S, _ = u.shape
+    H, P, N = cfg.ssm_heads, c.head_dim, c.d_state
+    z, x, Bp, Cp, dt_raw = SSM._project(params, u, cfg)
+    x = SSM._causal_conv(x, params["conv_x"])
+    Bp = SSM._causal_conv(Bp, params["conv_B"])
+    Cp = SSM._causal_conv(Cp, params["conv_C"])
+    x, Bp, Cp = nn.silu(x), nn.silu(Bp), nn.silu(Cp)
+    xh = np.asarray(x.reshape(B, S, H, P), np.float64)
+    Bh = np.asarray(Bp.reshape(B, S, 1, N), np.float64)
+    Ch = np.asarray(Cp.reshape(B, S, 1, N), np.float64)
+    dt = np.asarray(nn.softplus(dt_raw + params["dt_bias"]), np.float64)
+    Aa = -np.exp(np.asarray(params["A_log"], np.float64))
+    h = np.zeros((B, H, P, N))
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        dA = np.exp(dt[:, t] * Aa[None, :])                   # (B, H)
+        dBx = np.einsum("bh,bhp,bn->bhpn", dt[:, t], xh[:, t], Bh[:, t, 0])
+        h = h * dA[..., None, None] + dBx
+        ys[:, t] = np.einsum("bhpn,bn->bhp", h, Ch[:, t, 0])
+    ys = ys + xh * np.asarray(params["D"])[None, None, :, None]
+    return ys, h
+
+
+def test_ssd_chunked_equals_recurrence():
+    cfg = get_smoke_config("mamba2-780m")
+    params = SSM.init_ssm(KEY, cfg)
+    u = jax.random.normal(jax.random.PRNGKey(3), (2, 67, cfg.d_model)) * 0.5
+    out, h_final = SSM.apply_ssm(params, u, cfg)
+    want_y, want_h = _ssd_reference(params, u, cfg)
+    # compare pre-output-projection signal via the final state (strictest)
+    np.testing.assert_allclose(np.asarray(h_final), want_h,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_matches_prefill_state():
+    cfg = get_smoke_config("mamba2-780m")
+    params = SSM.init_ssm(KEY, cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (1, 16, cfg.d_model)) * 0.5
+    # full-sequence pass
+    out_full, h_full = SSM.apply_ssm(params, u, cfg)
+    # step-by-step decode
+    cache = SSM.init_ssm_cache(cfg, 1, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, cache = SSM.decode_ssm(params, u[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(cache.h), np.asarray(h_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                               np.asarray(out_full), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_identical_experts_equal_dense():
+    """If every expert has the same weights, MoE == that MLP (weights sum=1)."""
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    params = MOE.init_moe(KEY, cfg)
+    tied = {
+        "router": params["router"],
+        "w_in": jnp.broadcast_to(params["w_in"][:1], params["w_in"].shape),
+        "w_gate": jnp.broadcast_to(params["w_gate"][:1], params["w_gate"].shape),
+        "w_out": jnp.broadcast_to(params["w_out"][:1], params["w_out"].shape),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, cfg.d_model)) * 0.5
+    y, _ = MOE.apply_moe(tied, x, cfg)
+    w_in, w_g, w_out = tied["w_in"][0], tied["w_gate"][0], tied["w_out"][0]
+    want = (jax.nn.silu(x @ w_g) * (x @ w_in)) @ w_out
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_ranks_are_valid_permutation():
+    e = jnp.asarray(np.random.default_rng(0).integers(0, 16, size=200),
+                    jnp.int32)
+    ranks = MOE._ranks_static(e, 16)
+    for ex in range(16):
+        r = np.sort(np.asarray(ranks[e == ex]))
+        np.testing.assert_array_equal(r, np.arange(len(r)))
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    T_ = 128
+    C = MOE.capacity(T_, cfg)
+    m = cfg.moe
+    assert C >= T_ * m.top_k / m.num_experts          # >= perfect balance
+    assert C % 8 == 0

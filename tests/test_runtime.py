@@ -1,0 +1,86 @@
+"""Elastic replan, straggler detection, fault-tolerant runner."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MeshConfig
+from repro.checkpoint import Checkpointer
+from repro.runtime.elastic import plan_mesh, replan_after_failure
+from repro.runtime.fault_tolerance import FaultTolerantRunner, RunState
+from repro.runtime.straggler import StepTimer
+
+TARGET = MeshConfig(data=16, model=16, pods=2)
+
+
+def test_plan_full_capacity():
+    plan = plan_mesh(512, TARGET, global_batch=256)
+    assert plan.mesh == TARGET
+    assert plan.microbatch_multiplier == 1
+    assert plan.dropped_chips == 0
+
+
+def test_plan_after_losing_one_host():
+    plan = plan_mesh(512 - 8, TARGET, global_batch=256)
+    assert plan is not None
+    assert plan.mesh.model == 16                     # model axis preserved
+    assert plan.mesh.n_devices <= 504
+    assert 256 % (plan.mesh.data * plan.mesh.pods) == 0
+
+
+def test_plan_below_one_model_group():
+    assert plan_mesh(8, TARGET, 256) is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(avail=st.integers(16, 512), batch=st.sampled_from([32, 128, 256]))
+def test_plan_properties(avail, batch):
+    plan = plan_mesh(avail, TARGET, batch)
+    if plan is None:
+        assert avail < TARGET.model
+        return
+    m = plan.mesh
+    assert m.model == TARGET.model                   # invariant
+    assert m.n_devices <= avail                      # fits
+    assert batch % (m.data * m.pods) == 0            # batch shards cleanly
+    assert plan.microbatch_multiplier >= 1
+
+
+def test_replan_after_failure():
+    plan = replan_after_failure(TARGET, failed_chips=256, global_batch=256)
+    assert plan is not None and plan.mesh.n_devices <= 256
+
+
+def test_straggler_detection():
+    timer = StepTimer(patience=3)
+    verdicts = []
+    for i in range(30):
+        for h in range(4):                            # 4 healthy hosts
+            timer.record(h, 1.0 + 0.01 * np.sin(i + h))
+        v = timer.record(4, 1.0 if i < 10 else 3.0)   # host 4 degrades
+        verdicts.append(v.action)
+    assert "evict" in verdicts
+    assert timer.slowest_hosts(1) == [4]
+    # healthy host never flagged
+    assert timer.hosts[0].flagged_streak == 0
+
+
+def test_fault_tolerant_runner_retries(tmp_path):
+    ck = Checkpointer(tmp_path)
+    runner = FaultTolerantRunner(ck, ckpt_every=2, max_retries=3)
+    calls = {"n": 0}
+
+    def flaky_step(params, opt_state, batch):
+        calls["n"] += 1
+        if calls["n"] == 2:                          # fail exactly once
+            raise RuntimeError("simulated device failure")
+        return params + 1, opt_state, {}
+
+    state = RunState(step=0, params=jnp.zeros(()), opt_state=jnp.zeros(()))
+    for _ in range(4):
+        state = runner.run_step(flaky_step, state, batch=None)
+    assert state.step == 4
+    assert float(state.params) == 4.0
+    assert any(e[0] == "step_failure" for e in runner.events)
+    ck.wait()
+    assert ck.latest_step() is not None              # periodic ckpt happened

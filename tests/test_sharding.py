@@ -1,0 +1,132 @@
+"""Partitioning rules: divisibility fixups, ZeRO-1, per-arch spec validity,
+and a real (8-device subprocess) tiny-mesh lower+compile."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+from repro.configs.registry import ALL_ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES
+from repro.models import factory, transformer
+from repro.sharding.partitioning import (
+    to_pspec,
+    validate_pspec,
+    zero1_pspec,
+)
+
+MESH = MeshConfig(data=16, model=16)
+MESH_MP = MeshConfig(data=16, model=16, pods=2)
+
+
+def test_to_pspec_basic():
+    assert to_pspec(("embed", "mlp"), MESH) == P(None, "model")
+    assert to_pspec(("batch", "seq"), MESH) == P("data")
+    assert to_pspec(("batch", "seq"), MESH_MP) == P(("pod", "data"))
+
+
+def test_to_pspec_divisibility_drop():
+    # kv_heads=8 can't shard over 16-way model axis -> dropped
+    assert to_pspec(("layers", "kv_heads"), MESH, shape=(32, 8)) == P()
+    # but 16 heads can
+    assert to_pspec(("layers", "heads"), MESH, shape=(32, 16)) == \
+        P(None, "model")
+
+
+def test_kv_hd_fallback():
+    """When kv_heads can't take the model axis, the cache head_dim does."""
+    spec = to_pspec(("batch", "kv_seq", "kv_heads", "kv_hd"), MESH,
+                    shape=(128, 32768, 8, 128))
+    assert spec == P("data", None, None, "model")
+    spec2 = to_pspec(("batch", "kv_seq", "kv_heads", "kv_hd"), MESH,
+                     shape=(128, 32768, 16, 128))
+    assert spec2 == P("data", None, "model")
+
+
+def test_zero1_shards_moments():
+    ps = P(None, "model")
+    out = zero1_pspec(ps, (8192, 22016), MESH)
+    assert out == P("data", "model")
+    # non-divisible first dim falls through to the next
+    out2 = zero1_pspec(P(), (7, 32), MESH)
+    assert out2 == P(None, "data")
+    # nothing divisible -> unchanged
+    out3 = zero1_pspec(P(), (7, 9), MESH)
+    assert out3 == P()
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCH_IDS)
+def test_param_specs_valid_for_full_configs(arch_id):
+    """Every full-size param leaf gets a spec that divides its shape."""
+    cfg = get_config(arch_id)
+    p_shape = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    specs = factory.param_pspecs(cfg, MESH, p_shape)
+    leaves_s, _ = jax.tree_util.tree_flatten(specs,
+                                             is_leaf=lambda x: isinstance(x, P))
+    leaves_p = jax.tree_util.tree_leaves(p_shape)
+    assert len(leaves_s) == len(leaves_p)
+    for spec, leaf in zip(leaves_s, leaves_p):
+        validate_pspec(spec, leaf.shape, MESH)
+
+
+@pytest.mark.parametrize("arch_id", ["deepseek-67b", "qwen3-moe-30b-a3b"])
+def test_cache_specs_valid(arch_id):
+    cfg = get_config(arch_id)
+    for shape_name in ("decode_32k",):
+        shape = SHAPES[shape_name]
+        cache = factory.cache_shapes(cfg, shape)
+        specs = factory.cache_pspecs(cfg, shape, MESH)
+        for spec, leaf in zip(
+                jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P)),
+                jax.tree_util.tree_leaves(cache)):
+            validate_pspec(spec, leaf.shape, MESH)
+
+
+def test_tiny_mesh_compile_subprocess():
+    """Real 8-device SPMD lower+compile of a reduced train step (the
+    dry-run contract at test scale)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.configs.base import MeshConfig, TrainConfig
+        from repro.configs.registry import get_smoke_config
+        from repro.launch.mesh import _mk
+        from repro.models import factory, transformer
+        from repro.training import optimizer as opt_mod, trainer
+
+        cfg = get_smoke_config("stablelm-3b")
+        mesh_cfg = MeshConfig(data=4, model=2)
+        mesh = _mk((4, 2), ("data", "model"))
+        p_shape = jax.eval_shape(
+            lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+        p_specs = factory.param_pspecs(cfg, mesh_cfg, p_shape)
+        o_shape = jax.eval_shape(opt_mod.init_opt_state, p_shape)
+        o_specs = opt_mod.opt_state_pspecs(p_specs, p_shape, mesh_cfg)
+        tc = TrainConfig()
+        step = trainer.make_train_step(cfg, tc)
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 "targets": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        b_specs = {"tokens": PartitionSpec("data"),
+                   "targets": PartitionSpec("data")}
+        ns = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        jfn = jax.jit(step, in_shardings=(ns(p_specs), ns(o_specs),
+                                          ns(b_specs)))
+        with mesh:
+            compiled = jfn.lower(p_shape, o_shape, batch).compile()
+        assert compiled is not None
+        print("TINY_MESH_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "TINY_MESH_OK" in res.stdout, res.stderr[-2000:]

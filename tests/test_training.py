@@ -1,0 +1,114 @@
+"""Training substrate: loss, grad accumulation equivalence, AdamW math,
+gradient compression, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as T
+from repro.training import optimizer as opt_mod
+from repro.training import trainer
+from repro.training.grad_compression import (
+    compress_tree,
+    decompress_tree,
+    quantize_int8,
+    roundtrip_error,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(KEY, (4, 7, 13))
+    targets = jax.random.randint(KEY, (4, 7), 0, 13)
+    got = trainer.cross_entropy(logits, targets)
+    p = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.mean(jnp.take_along_axis(p, targets[..., None], -1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_grad_accumulation_equals_full_batch():
+    """scan-accumulated microbatch grads == single-shot full batch step."""
+    cfg = get_smoke_config("stablelm-3b")
+    params = T.init_params(KEY, cfg)
+    opt = opt_mod.init_opt_state(params)
+    batch = {"tokens": jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size),
+             "targets": jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size)}
+    tc1 = TrainConfig(microbatches=1)
+    tc4 = TrainConfig(microbatches=4)
+    p1, _, m1 = jax.jit(trainer.make_train_step(cfg, tc1))(params, opt, batch)
+    p4, _, m4 = jax.jit(trainer.make_train_step(cfg, tc4))(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_adamw_single_step_math():
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    st_ = opt_mod.init_opt_state(params)
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0,
+                     total_steps=10, grad_clip=1e9)
+    new_p, new_st, stats = opt_mod.adamw_update(params, grads, st_, tc)
+    # bias-corrected first step: mhat = g, vhat = g^2 -> delta = g/|g| = 1
+    lr = float(opt_mod.lr_schedule(jnp.asarray(1), tc))
+    want = np.asarray([1.0, -2.0]) - lr * np.sign([0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-4)
+    assert int(new_st.step) == 1
+
+
+def test_grad_clip_applies():
+    params = {"w": jnp.zeros(3)}
+    grads = {"w": jnp.asarray([30.0, 40.0, 0.0])}    # norm 50
+    st_ = opt_mod.init_opt_state(params)
+    tc = TrainConfig(grad_clip=1.0)
+    _, _, stats = opt_mod.adamw_update(params, grads, st_, tc)
+    np.testing.assert_allclose(float(stats["grad_norm"]), 50.0, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_mod.lr_schedule(jnp.asarray(s), tc))
+           for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4, rel=1e-3)
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-2)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=5e-2)   # floor 0.1x
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-4, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    err = float(roundtrip_error(g))
+    assert err < 0.02                                 # <2% relative L2
+
+
+def test_error_feedback_reduces_bias():
+    """Two compressions with error feedback: residual carries the loss."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(128,)),
+                          jnp.float32)}
+    q1, resid = compress_tree(g)
+    deq = decompress_tree(q1)
+    # residual == exactly what quantisation lost
+    np.testing.assert_allclose(np.asarray(g["w"] - deq["w"]),
+                               np.asarray(resid["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_zero1_opt_specs_structure():
+    cfg = get_smoke_config("stablelm-3b")
+    params = T.init_params(KEY, cfg)
+    from repro.configs.base import MeshConfig
+    from repro.models import factory
+    mesh_cfg = MeshConfig(data=2, model=2)
+    p_shape = jax.eval_shape(lambda: params)
+    p_specs = factory.param_pspecs(cfg, mesh_cfg, p_shape)
+    o_specs = opt_mod.opt_state_pspecs(p_specs, p_shape, mesh_cfg, zero1=True)
+    # same tree structure as an actual opt state
+    o_state = opt_mod.init_opt_state(params)
+    jax.tree.map(lambda *_: None, o_state.mu, o_specs.mu)  # raises on mismatch
