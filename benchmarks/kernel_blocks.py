@@ -29,6 +29,38 @@ def gemm_working_set(bm: int, bn: int, bk: int, bytes_in: int = 2,
     }
 
 
+def fused_topk_working_set(bn: int, d: int, q: int, k: int) -> dict:
+    """VMEM footprint of one fused distance->top-k grid step — the TPU
+    image of the paper's L1-resident e.  Byte count comes from the
+    autotuner's own formula (ops.fused_topk_working_set_bytes) so this
+    table can never disagree with what the kernel wrapper picks."""
+    from repro.kernels.ops import fused_topk_working_set_bytes
+    total = fused_topk_working_set_bytes(bn, d, q, k)
+    return {
+        "tiles": f"A({bn}x{d}) C({q}x{d}) e({bn}x{q}) acc({q}x{k})",
+        "vmem_bytes": total,
+        "fits": total <= VMEM_BYTES,
+        "sublane_aligned": bn % 8 == 0,
+    }
+
+
+def topk_bytes_moved(n: int, d: int, q: int, k: int,
+                     bytes_in: int = 4) -> dict:
+    """Analytic HBM traffic for the kNN hot path, both schedules.
+
+    two-pass: read A + C, WRITE the (N, Q) e matrix, then READ it back for
+    the selection kernel, write (Q, k) x2 outputs.
+    fused:    read A + C once, write (Q, k) x2 — e never leaves VMEM.
+    """
+    inputs = n * d * bytes_in + q * d * bytes_in
+    outputs = q * k * (4 + 4)
+    e = n * q * 4
+    two_pass = inputs + 2 * e + outputs
+    fused = inputs + outputs
+    return {"two_pass": two_pass, "fused": fused,
+            "saved": 2 * e, "ratio": fused / two_pass}
+
+
 def flash_working_set(bq: int, bk: int, d: int, bytes_in: int = 2) -> dict:
     q = bq * d * bytes_in
     kv = 2 * bk * d * bytes_in * 2
@@ -59,8 +91,25 @@ def run(csv_rows: list):
         print(f"{'flash':8s} bq={bq} bk={bk} d=128{'':11s}"
               f"{w['vmem_bytes']/2**20:9.2f}M {str(w['fits']):>5s} "
               f"{str(w['mxu_aligned']):>8s}")
+    best_bn = None
+    for bn in [128, 256, 512, 1024, 2048]:
+        w = fused_topk_working_set(bn, 64, 16, 8)
+        print(f"{'dtopk':8s} {w['tiles']:26s} {w['vmem_bytes']/2**20:9.2f}M "
+              f"{str(w['fits']):>5s} {str(w['sublane_aligned']):>8s}")
+        if w["fits"] and w["sublane_aligned"]:
+            best_bn = bn
+    print("-- fused distance->top-k HBM traffic vs two-pass "
+          "(N x d=64, Q=16, k=8):")
+    for n in [4096, 65536, 1048576]:
+        b = topk_bytes_moved(n, 64, 16, 8)
+        print(f"   N={n:>8d}: two_pass={b['two_pass']/2**20:8.2f}M "
+              f"fused={b['fused']/2**20:8.2f}M "
+              f"(saves {b['saved']/2**20:.2f}M, ratio {b['ratio']:.2f})")
     csv_rows.append(("kernel_blocks/gemm_best", 0.0,
                      f"tile={best[:3]};ai={best[3]:.0f}"))
+    csv_rows.append(("kernel_blocks/fused_topk_best_bn", 0.0,
+                     f"bn={best_bn};bytes_ratio_1M="
+                     f"{topk_bytes_moved(1048576, 64, 16, 8)['ratio']:.3f}"))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,20 @@
-"""Paper Fig. 10 / Table 3 reproduction: 1-vs-8-core parallel speedup.
+"""Paper Fig. 10 / Table 3 reproduction: 1-vs-8-core parallel speedup,
+plus the fused-vs-two-pass distance->top-k A/B (``run_fused_ab``).
 
 Amdahl bound from the implementation's own parallel/sequential op split
 (Eq. 15), plus the barrier/I$ non-ideality model, compared against the
 paper's measured speedups per kernel x backend.
+
+The A/B measures the kNN/K-Means hot path both ways — the fused streaming
+kernel (kernels/distance_topk.py) against the two-kernel composition
+(kernels/distance.py -> kernels/topk_select.py) — reporting wall-clock and
+loop-weighted HLO bytes-accessed from benchmarks/hlo_analysis.py.  (XLA's
+``cost_analysis()`` visits while bodies once, so it undercounts the
+grid-pipelined kernels; both numbers are recorded.)
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -49,6 +59,75 @@ def run(csv_rows: list, fitted=None):
     return errs
 
 
+AB_SHAPES = [(4096, 64, 16, 8), (8192, 64, 16, 8), (4096, 128, 32, 4)]
+AB_SHAPES_QUICK = [(1024, 32, 8, 8)]
+
+
+def _bench(fn, args, iters: int) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))          # warm-up / compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run_fused_ab(csv_rows: list, quick: bool = False):
+    """Fused-vs-two-pass distance->top-k: wall-clock + HLO bytes A/B."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.hlo_analysis import analyze, cost_summary
+    from repro.kernels import ops
+
+    shapes = AB_SHAPES_QUICK if quick else AB_SHAPES
+    iters = 3 if quick else 5
+    results = []
+    print("\n== Fused distance->top-k vs two-pass (kNN/K-Means hot path) ==")
+    print(f"{'(N,d,Q,k)':20s} {'path':9s} {'us':>9s} {'hlo_bytes':>11s} "
+          f"{'ca_bytes':>11s}")
+    for n, d, q, k in shapes:
+        ka, kc = jax.random.split(jax.random.PRNGKey(n + d))
+        a = jax.random.normal(ka, (n, d), jnp.float32)
+        c = jax.random.normal(kc, (q, d), jnp.float32)
+        fused = jax.jit(lambda a, c: ops.distance_topk(a, c, k))
+        twop = jax.jit(lambda a, c: ops.topk_smallest(
+            jnp.transpose(ops.pairwise_sq_dist(a, c)), k))
+
+        rec = {"shape": [n, d, q, k]}
+        for name, fn in (("fused", fused), ("two_pass", twop)):
+            compiled = fn.lower(a, c).compile()
+            try:
+                ca = cost_summary(compiled.cost_analysis())["bytes_accessed"]
+            except Exception:
+                ca = float("nan")
+            hlo_bytes = analyze(compiled.as_text()).bytes
+            us = _bench(fn, (a, c), iters)
+            rec[name] = {"us": us, "hlo_bytes": hlo_bytes, "ca_bytes": ca}
+            print(f"{str((n, d, q, k)):20s} {name:9s} {us:9.0f} "
+                  f"{hlo_bytes:11.3e} {ca:11.3e}")
+        # parity guard: the A/B is meaningless if the paths disagree
+        fv, fi = fused(a, c)
+        tv, ti = twop(a, c)
+        assert bool(jnp.all(fv == tv)) and bool(jnp.all(fi == ti)), \
+            "fused/two-pass mismatch"
+        rec["speedup"] = rec["two_pass"]["us"] / rec["fused"]["us"]
+        rec["bytes_ratio"] = (rec["fused"]["hlo_bytes"]
+                              / rec["two_pass"]["hlo_bytes"])
+        results.append(rec)
+        csv_rows.append((f"fused_topk/N{n}_d{d}_q{q}_k{k}",
+                         rec["fused"]["us"],
+                         f"two_pass_us={rec['two_pass']['us']:.0f};"
+                         f"speedup={rec['speedup']:.2f};"
+                         f"bytes_ratio={rec['bytes_ratio']:.3f}"))
+        print(f"{'':20s} -> speedup {rec['speedup']:.2f}x, fused moves "
+              f"{rec['bytes_ratio']:.0%} of two-pass HLO bytes")
+    return results
+
+
 if __name__ == "__main__":
     rows = []
     run(rows)
+    run_fused_ab(rows, quick=True)

@@ -15,6 +15,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.roofline import analyze_record, load_records, model_flops
 
+BENCH_FUSED_TOPK = Path(__file__).resolve().parents[1] / \
+    "BENCH_fused_topk.json"
+
 
 def fmt_bytes(b: float) -> str:
     for unit in ("B", "KB", "MB", "GB", "TB"):
@@ -91,12 +94,68 @@ def perf_compare_table(cells, tags) -> str:
     return "\n".join(lines)
 
 
+def write_fused_entry(results, path: Path = BENCH_FUSED_TOPK) -> dict:
+    """Append one fused-vs-two-pass A/B measurement (latency + HLO
+    bytes-accessed per shape) to BENCH_fused_topk.json so the perf
+    trajectory accumulates across runs."""
+    import time as _time
+    entry = {
+        "timestamp": _time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": _backend_name(),
+        "results": results,
+    }
+    data = {"entries": []}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    data.setdefault("entries", []).append(entry)
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    return entry
+
+
+def _backend_name() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
+
+
+def fused_topk_table(path: Path = BENCH_FUSED_TOPK) -> str:
+    if not path.exists():
+        return "(no BENCH_fused_topk.json yet — run benchmarks/run.py)"
+    data = json.loads(path.read_text())
+    lines = ["| when | (N,d,Q,k) | fused_us | two_pass_us | speedup | "
+             "fused HLO bytes | two_pass HLO bytes |",
+             "|---|---|---|---|---|---|---|"]
+    for e in data.get("entries", []):
+        for r in e.get("results", []):
+            lines.append(
+                f"| {e['timestamp']} | {tuple(r['shape'])} | "
+                f"{r['fused']['us']:.0f} | {r['two_pass']['us']:.0f} | "
+                f"{r['speedup']:.2f}x | "
+                f"{fmt_bytes(r['fused']['hlo_bytes'])} | "
+                f"{fmt_bytes(r['two_pass']['hlo_bytes'])} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--refresh", action="store_true",
                     help="re-run the HLO analyzer on cached .hlo.zst files")
     ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--fused-topk", action="store_true",
+                    help="measure the fused distance->top-k A/B and append "
+                         "an entry to BENCH_fused_topk.json")
     args = ap.parse_args()
+    if args.fused_topk:
+        from benchmarks.parallel_speedup import run_fused_ab
+        write_fused_entry(run_fused_ab([], quick=True))
+        print("\n### Fused distance->top-k A/B\n")
+        print(fused_topk_table())
+        return
     if args.refresh:
         from benchmarks.roofline import refresh_from_hlo
         for mesh in ("single", "multi"):

@@ -1,10 +1,14 @@
 """Benchmark harness: one module per paper table/figure + the roofline.
 
 Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
-Run: PYTHONPATH=src python -m benchmarks.run
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+
+``--quick`` shrinks the fused-topk A/B shapes for CI smoke runs; the paper
+tables are analytic and always run in full.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -12,16 +16,22 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small fused-topk A/B shapes")
+    args = ap.parse_args()
     csv_rows: list = []
 
     from benchmarks import cortex_m4, fp_backends, kernel_blocks
-    from benchmarks import parallel_speedup, roofline, sorting
+    from benchmarks import parallel_speedup, report, roofline, sorting
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
     cortex_m4.run(csv_rows)                     # Fig. 11
     sorting.run(csv_rows)                       # Eq. 14
     kernel_blocks.run(csv_rows)                 # Pallas BlockSpec analysis
+    fused = parallel_speedup.run_fused_ab(csv_rows, quick=args.quick)
+    report.write_fused_entry(fused)             # accumulate BENCH json
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

@@ -6,6 +6,13 @@ Sort with k=1, i.e. argmin) into id (N,); OP3 per-core local centroid
 accumulate + count over its chunk; OP4 global combine (each core merges the
 locals for its centroid) and divide. Iterate until max centroid shift is
 below threshold (paper picks the first k samples as initial centroids).
+
+TPU adaptation (DESIGN.md §3): OP1+OP2 fuse into a single
+distance->argmin kernel call (kernels/distance_topk.py::distance_argmin —
+Selection Sort with k=1).  Each (bn, k) distance tile is consumed in VMEM
+the moment it is produced, mirroring the paper's L1-resident ``e`` array;
+only the (N,) assignment vector reaches HBM.  OP3/OP4 keep the per-core
+chunked accumulate/combine structure for parity with the paper's schedule.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distribution import pad_to_multiple, split_chunks
+from repro.kernels import ops
 
 
 class KMeansState(NamedTuple):
@@ -38,12 +46,10 @@ def kmeans_iteration(A, centroids, n_cores: int = 8):
     chunk_len = Ap.shape[0] // n_cores
     valid = (jnp.arange(Ap.shape[0]) < N).reshape(n_cores, chunk_len)
 
-    # OP1 + OP2 — per-core distances and cluster-ID assignment
-    def op12(a_chunk):
-        e = _pairwise_sq_dist(a_chunk, centroids)             # (N/c, k)
-        return e, jnp.argmin(e, axis=1)                       # SS with k=1
-
-    e, ids = jax.vmap(op12)(chunks)                           # (c,N/c,k) (c,N/c)
+    # OP1 + OP2 — fused distance->argmin kernel (SS with k=1); the (N, k)
+    # e array is consumed tile-by-tile in VMEM, never written to HBM
+    _, ids_flat = ops.distance_argmin(A, centroids)           # (N,)
+    ids = jnp.pad(ids_flat, (0, Ap.shape[0] - N)).reshape(n_cores, chunk_len)
 
     # OP3 — local centroid update (accumulate + count) per core
     def op3(a_chunk, id_chunk, v_chunk):

@@ -8,6 +8,19 @@ TPU adaptation (DESIGN.md §2): the distance hot loop uses the
 ||p-q||^2 = ||p||^2 - 2 p.q + ||q||^2 expansion so batched queries become an
 MXU matmul (kernels/distance.py); the sqrt is dropped exactly as the paper's
 Cortex-M4 port does (monotonic, rank-preserving).
+
+Two code paths coexist:
+
+  * ``knn_classify`` — the literal Fig. 6 pipeline (per-core chunks, local
+    then global Selection Sort), one query per call.  This is the
+    paper-fidelity path the distribution tests exercise.
+  * ``knn_classify_batch`` — the serving hot path: Q queries per kernel
+    launch through the fused distance->top-k streaming kernel
+    (kernels/distance_topk.py), which keeps the paper's L1-resident ``e``
+    array as a VMEM-scratch k-smallest accumulator so the (N, Q) distance
+    matrix never round-trips through HBM (DESIGN.md §3).  Predictions are
+    identical to a vmapped ``knn_classify`` loop (stable smallest-index tie
+    break on both sides) — proven in tests/test_fused_topk.py.
 """
 from __future__ import annotations
 
@@ -18,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.distribution import pad_to_multiple, split_chunks
 from repro.core.topk import selection_topk_smallest
+from repro.kernels import ops
 
 _INF = jnp.inf
 
@@ -32,6 +46,14 @@ def sq_distances(A, x):
     """Squared Euclidean distances of one query against all rows of A."""
     diff = A - x[None, :]
     return jnp.sum(diff * diff, axis=1)
+
+
+def _vote(labels, nbr_idx, n_class: int):
+    """Majority vote over one query's neighbour indices (ties -> lowest
+    class id via argmax) — shared by both classify paths so the tie rule
+    can never diverge between them."""
+    votes = jnp.zeros((n_class,), jnp.int32).at[labels[nbr_idx]].add(1)
+    return jnp.argmax(votes)
 
 
 def knn_classify(model: KNNModel, x, k: int, n_cores: int = 8):
@@ -56,10 +78,21 @@ def knn_classify(model: KNNModel, x, k: int, n_cores: int = 8):
     # OP3 — master: global Selection Sort over the c*k candidates + vote
     gv, gi = selection_topk_smallest(lv.reshape(-1), k)
     nbr_idx = li_global.reshape(-1)[gi]
-    votes = jnp.zeros((model.n_class,), jnp.int32).at[
-        model.labels[nbr_idx]].add(1)
-    return jnp.argmax(votes), nbr_idx
+    return _vote(model.labels, nbr_idx, model.n_class), nbr_idx
 
 
 def knn_predict_batch(model: KNNModel, X, k: int, n_cores: int = 8):
     return jax.vmap(lambda x: knn_classify(model, x, k, n_cores)[0])(X)
+
+
+def knn_classify_batch(model: KNNModel, X, k: int, *, bn: int | None = None):
+    """Batched multi-query kNN on the fused distance->top-k kernel.
+
+    X: (Q, d) queries, one kernel launch for the whole batch.  Returns
+    (classes (Q,), neighbour indices (Q, k)).  ``bn`` overrides the
+    autotuned streaming row block (kernels/ops.py).
+    """
+    _, nbr_idx = ops.distance_topk(model.A, X, k, bn=bn)      # (Q, k)
+    classes = jax.vmap(lambda nb: _vote(model.labels, nb, model.n_class))(
+        nbr_idx)
+    return classes, nbr_idx

@@ -1,0 +1,147 @@
+"""Fused distance -> top-k streaming Pallas kernel (kNN OP1+OP2 in one pass).
+
+The paper keeps the distance array ``e`` resident in per-cluster L1 and
+consumes it in place with Selection Sort (§4.4, Figs. 6-7).  The two-kernel
+TPU port (``distance.py`` -> ``topk_select.py``) loses exactly that reuse:
+the full (N, Q) distance matrix round-trips through HBM between the passes.
+Here the two stages fuse: each grid step computes one (bn x Q) distance tile
+via the MXU expansion and immediately folds it into a running k-smallest
+accumulator held in VMEM scratch — the TPU analogue of the paper's
+L1-resident ``e`` (DESIGN.md §3).  The (N, Q) matrix never materialises.
+
+Tie semantics match the two-pass reference bit-for-bit: the accumulator is
+kept sorted ascending, occupies the low candidate positions, and only ever
+holds global row indices smaller than the incoming tile's, so the
+"first position attaining the minimum" rule used by ``topk_select.py``
+degenerates to smallest-global-index stable selection here too.
+
+``distance_argmin`` is the K-Means variant (OP1+OP2 with k=1): the reduction
+runs along the small centroid axis of each tile, so no cross-step state is
+needed — each row block writes its nearest-centroid id directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INF = float("inf")
+
+
+def _sq_dist_tile(a, c):
+    """(bn, d), (Q, d) -> (bn, Q) with the exact arithmetic of distance.py
+    (same operand order, f32 accumulate) so fused values are bit-equal to
+    the two-pass kernel's."""
+    a = a.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    an = jnp.sum(a * a, axis=1, keepdims=True)   # (bn, 1)
+    cn = jnp.sum(c * c, axis=1)[None, :]         # (1, Q)
+    cross = jax.lax.dot_general(
+        a, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (bn, Q) on the MXU
+    return an - 2.0 * cross + cn
+
+
+def _fused_kernel(a_ref, c_ref, vals_ref, idx_ref, acc_v, acc_i,
+                  *, k: int, bn: int, n_valid: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, _INF)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    tile = _sq_dist_tile(a_ref[...], c_ref[...]).T        # (Q, bn)
+    q = tile.shape[0]
+    gidx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (q, bn), 1)
+    tile = jnp.where(gidx < n_valid, tile, _INF)          # mask padded rows
+
+    # merge the tile into the running k-smallest: k masked-min passes over
+    # [accumulator | tile] — the in-VMEM Selection Sort of the paper's OP2
+    width = k + bn
+    cand_v = jnp.concatenate([acc_v[...], tile], axis=1)  # (Q, k+bn)
+    cand_i = jnp.concatenate([acc_i[...], gidx], axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, width), 1)
+
+    def pass_body(j, carry):
+        cv, = carry
+        m = jnp.min(cv, axis=1)                           # (Q,)
+        is_min = cv == m[:, None]
+        first = jnp.min(jnp.where(is_min, cols, width), axis=1)
+        sel = jnp.sum(jnp.where(cols == first[:, None], cand_i, 0), axis=1)
+        acc_v[:, j] = m.astype(acc_v.dtype)
+        acc_i[:, j] = sel.astype(jnp.int32)
+        cv = jnp.where(cols == first[:, None], _INF, cv)
+        return (cv,)
+
+    jax.lax.fori_loop(0, k, pass_body, (cand_v,))
+
+    # constant out block: every step revises it, the last step's value lands
+    vals_ref[...] = acc_v[...].astype(vals_ref.dtype)
+    idx_ref[...] = acc_i[...]
+
+
+def distance_topk(a, c, k: int, *, bn: int = 256, n_valid: int | None = None,
+                  interpret: bool = False):
+    """A (N, d) data rows, C (Q, d) queries -> (values (Q, k), idx (Q, k)),
+    ascending squared distances with global row indices.  N must tile by bn
+    (ops.py pads); rows >= n_valid are masked out of the selection."""
+    N, d = a.shape
+    Q, d2 = c.shape
+    assert d == d2, (a.shape, c.shape)
+    assert N % bn == 0, (N, bn)
+    n_valid = N if n_valid is None else n_valid
+    assert 1 <= k <= n_valid, (k, n_valid)
+    kernel = functools.partial(_fused_kernel, k=k, bn=bn, n_valid=n_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),      # streams
+            pl.BlockSpec((Q, d), lambda i: (0, 0)),       # resident in VMEM
+        ],
+        out_specs=(pl.BlockSpec((Q, k), lambda i: (0, 0)),
+                   pl.BlockSpec((Q, k), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Q, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, k), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((Q, k), jnp.float32),
+                        pltpu.VMEM((Q, k), jnp.int32)],
+        interpret=interpret,
+    )(a, c)
+
+
+def _argmin_kernel(a_ref, c_ref, val_ref, idx_ref):
+    tile = _sq_dist_tile(a_ref[...], c_ref[...])          # (bn, K)
+    bn, K = tile.shape
+    m = jnp.min(tile, axis=1)                             # (bn,)
+    kcols = jax.lax.broadcasted_iota(jnp.int32, (bn, K), 1)
+    first = jnp.min(jnp.where(tile == m[:, None], kcols, K), axis=1)
+    val_ref[...] = m[:, None].astype(val_ref.dtype)
+    idx_ref[...] = first[:, None].astype(jnp.int32)
+
+
+def distance_argmin(a, c, *, bn: int = 256, interpret: bool = False):
+    """A (N, d), C (K, d) -> (min sq-dist (N, 1), nearest id (N, 1)).
+
+    K-Means OP1+OP2 fused (Selection Sort with k=1 == argmin): the (N, K)
+    distance matrix lives only as per-step (bn, K) tiles in VMEM."""
+    N, d = a.shape
+    K, d2 = c.shape
+    assert d == d2, (a.shape, c.shape)
+    assert N % bn == 0, (N, bn)
+    return pl.pallas_call(
+        _argmin_kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, 1), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((N, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((N, 1), jnp.int32)),
+        interpret=interpret,
+    )(a, c)

@@ -10,10 +10,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import distance as _distance
+from repro.kernels import distance_topk as _dtopk
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gemm as _gemm
 from repro.kernels import gnb_score as _gnb
 from repro.kernels import topk_select as _topk
+
+_VMEM_BUDGET = 16 * 2 ** 20   # ~16 MiB/core, matching benchmarks/kernel_blocks
 
 
 def _on_cpu() -> bool:
@@ -30,13 +33,46 @@ def _pad_dim(x, mult: int, axis: int, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def clamp_block(b: int, n: int, mult: int = 8) -> int:
+    """Shrink block size ``b`` for a small dimension ``n``: round n up to a
+    multiple of ``mult`` so the result both respects TPU sublane tiling and
+    divides the padded dimension.  (The old ``min(b, max(8, n))`` clamp could
+    return a non-multiple-of-8 block for 8 < n < b, which Mosaic rejects.)"""
+    if n >= b:
+        return b
+    return max(mult, ((n + mult - 1) // mult) * mult)
+
+
+def fused_topk_working_set_bytes(bn: int, d: int, q: int, k: int) -> int:
+    """VMEM working set of one fused distance->top-k grid step:
+    double-buffered (bn, d) A tile, resident (Q, d) C, (bn, Q) distance
+    tile, (Q, k+bn) merge candidates (values + indices), and the (Q, k) x2
+    accumulator scratch + (Q, k) x2 outputs.  Single source of truth —
+    benchmarks/kernel_blocks.py reports from this same formula."""
+    return (2 * bn * d * 4) + q * d * 4 + bn * q * 4 \
+        + 2 * (k + bn) * q * 4 + 4 * q * k * 4
+
+
+def fused_topk_block_rows(N: int, d: int, Q: int, k: int,
+                          budget: int = _VMEM_BUDGET) -> int:
+    """Autotuned streaming row-block for the fused distance->top-k kernel:
+    the largest bn whose working set fits the VMEM budget."""
+    best = 8
+    for bn in (8, 16, 32, 64, 128, 256, 512, 1024, 2048):
+        if bn > max(N, 8):
+            break
+        if fused_topk_working_set_bytes(bn, d, Q, k) <= budget:
+            best = bn
+    return best
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
            interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
     M, K = a.shape
     N = b.shape[1]
-    bm = min(bm, max(8, M)) if M < bm else bm
+    bm = clamp_block(bm, M)
     ap = _pad_dim(_pad_dim(a, bm, 0), bk, 1)
     bp = _pad_dim(_pad_dim(b, bk, 0), bn, 1)
     out = _gemm.matmul(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
@@ -47,10 +83,43 @@ def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
 def pairwise_sq_dist(a, c, *, bn: int = 256, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
     N = a.shape[0]
-    bn = min(bn, max(8, N))
+    bn = clamp_block(bn, N)
     ap = _pad_dim(a, bn, 0)
     out = _distance.pairwise_sq_dist(ap, c, bn=bn, interpret=interpret)
     return out[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
+def distance_topk(a, c, k: int, *, bn: int | None = None,
+                  interpret: bool | None = None):
+    """Fused kNN hot path: A (N, d) data, C (Q, d) queries -> k nearest rows
+    per query as (values (Q, k), global indices (Q, k)), ascending.  The
+    (N, Q) distance matrix never leaves VMEM (DESIGN.md §3); bn=None picks
+    the largest streaming block that fits the VMEM budget."""
+    interpret = _on_cpu() if interpret is None else interpret
+    N, d = a.shape
+    Q = c.shape[0]
+    assert 1 <= k <= N, (k, N)
+    if bn is None:
+        bn = fused_topk_block_rows(N, d, Q, k)
+    bn = clamp_block(bn, N)
+    ap = _pad_dim(a, bn, 0)
+    cp = _pad_dim(c, 8, 0)
+    vals, idx = _dtopk.distance_topk(ap, cp, k, bn=bn, n_valid=N,
+                                     interpret=interpret)
+    return vals[:Q], idx[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def distance_argmin(a, c, *, bn: int = 256, interpret: bool | None = None):
+    """Fused K-Means OP1+OP2: A (N, d), C (K, d) -> (min sq-dist (N,),
+    nearest-centroid id (N,)) without materialising the (N, K) matrix."""
+    interpret = _on_cpu() if interpret is None else interpret
+    N = a.shape[0]
+    bn = clamp_block(bn, N)
+    ap = _pad_dim(a, bn, 0)
+    vals, idx = _dtopk.distance_argmin(ap, c, bn=bn, interpret=interpret)
+    return vals[:N, 0], idx[:N, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "interpret"))
@@ -58,7 +127,7 @@ def gnb_scores(x, mu, var, log_prior, *, bd: int = 128,
                interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
     d = x.shape[0]
-    bd = min(bd, d)
+    bd = clamp_block(bd, d)
     xp = _pad_dim(x, bd, 0)
     mup = _pad_dim(mu, bd, 1)
     varp = _pad_dim(var, bd, 1, value=1.0)
@@ -75,7 +144,7 @@ def gnb_scores(x, mu, var, log_prior, *, bd: int = 128,
 def topk_smallest(x, k: int, *, br: int = 8, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
     R, n = x.shape
-    br = min(br, R)
+    br = clamp_block(br, R)
     xp = _pad_dim(x, br, 0, value=jnp.inf)
     vals, idx = _topk.topk_smallest(xp, k, br=br, interpret=interpret)
     return vals[:R], idx[:R]

@@ -32,6 +32,19 @@ def topk_smallest(x, k: int):
     return -nv, ni
 
 
+def distance_topk(a, c, k: int):
+    """(N, d) data, (Q, d) queries -> k nearest rows per query: the unfused
+    two-stage composition the streaming kernel must match."""
+    e = pairwise_sq_dist(a, c)                    # (N, Q)
+    return topk_smallest(e.T, k)                  # (Q, k) x2
+
+
+def distance_argmin(a, c):
+    """(N, d), (K, d) -> (min sq-dist (N,), nearest id (N,))."""
+    e = pairwise_sq_dist(a, c)                    # (N, K)
+    return jnp.min(e, axis=1), jnp.argmin(e, axis=1).astype(jnp.int32)
+
+
 def attention(q, k, v, causal: bool = True):
     """(B, H, S, hd) x3 -> (B, H, S, hd), f32 softmax."""
     S = q.shape[2]

@@ -1,2 +1,7 @@
-from repro.serving.engine import GenerationResult, ServeEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ClassifyResult,
+    GenerationResult,
+    KNNServeEngine,
+    ServeEngine,
+)
 from repro.serving import quant  # noqa: F401

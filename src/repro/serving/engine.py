@@ -1,9 +1,17 @@
-"""Batched serving engine: prefill + decode loop over a KV/SSM cache.
+"""Batched serving engines.
 
-The engine jit-compiles one prefill step and one decode step per (batch,
-seq) bucket and runs greedy or temperature sampling. Aligned decode (all
-sequences at the same position) is the fast path used by the assigned decode
-shapes; ragged continuous batching falls back to per-sequence scatter.
+``ServeEngine`` — LM prefill + decode loop over a KV/SSM cache.  The engine
+jit-compiles one prefill step and one decode step per (batch, seq) bucket
+and runs greedy or temperature sampling. Aligned decode (all sequences at
+the same position) is the fast path used by the assigned decode shapes;
+ragged continuous batching falls back to per-sequence scatter.
+
+``KNNServeEngine`` — Non-Neural classification serving on the fused
+distance->top-k streaming kernel: request batches are padded to
+power-of-two buckets and dispatched through ``knn_classify_batch`` (one
+kernel launch for the whole bucket; the (N, Q) distance matrix stays in
+VMEM, DESIGN.md §3), so throughput scales with batch size instead of
+replaying the one-query Fig. 6 pipeline per request.
 """
 from __future__ import annotations
 
@@ -15,7 +23,72 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import knn as _knn
 from repro.models import transformer
+
+
+@dataclass
+class ClassifyResult:
+    classes: jnp.ndarray       # (B,) int32 predicted class per query
+    neighbors: jnp.ndarray     # (B, k) int32 training-row indices
+    launches: int              # fused-kernel launches used for this request
+
+
+class KNNServeEngine:
+    """Batched kNN classification on the fused distance->top-k hot path.
+
+    Queries are padded to power-of-two buckets (so at most log2(max_batch)
+    jit specialisations exist) and each bucket runs as ONE fused kernel
+    launch via ``knn_classify_batch``; batches beyond ``max_batch`` are
+    microbatched.  ``bucket_launches`` counts launches per bucket size for
+    capacity accounting.
+    """
+
+    def __init__(self, model: _knn.KNNModel, k: int, *,
+                 max_batch: int = 1024):
+        assert 1 <= k <= model.A.shape[0], (k, model.A.shape)
+        self.model = model
+        self.k = int(k)
+        self.max_batch = int(max_batch)
+        self.bucket_launches: Dict[int, int] = {}
+        # A/labels flow in as jit arguments (one shared device buffer),
+        # not closure constants — closures would bake a copy of the full
+        # training set into every per-bucket executable
+        k_, n_class = self.k, model.n_class
+        self._classify = jax.jit(
+            lambda A, labels, X: _knn.knn_classify_batch(
+                _knn.KNNModel(A=A, labels=labels, n_class=n_class), X, k_))
+
+    def _bucket(self, b: int) -> int:
+        size = 1
+        while size < b:
+            size *= 2
+        return min(size, self.max_batch)
+
+    def classify(self, X) -> ClassifyResult:
+        """X: (B, d) queries -> per-query class + neighbour indices."""
+        X = jnp.asarray(X)
+        B = X.shape[0]
+        if B == 0:
+            return ClassifyResult(
+                classes=jnp.zeros((0,), jnp.int32),
+                neighbors=jnp.zeros((0, self.k), jnp.int32), launches=0)
+        classes, neighbors, launches = [], [], 0
+        for lo in range(0, B, self.max_batch):
+            chunk = X[lo: lo + self.max_batch]
+            bucket = self._bucket(chunk.shape[0])
+            pad = bucket - chunk.shape[0]
+            if pad:
+                chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+            cls, nbr = self._classify(self.model.A, self.model.labels, chunk)
+            classes.append(cls[: bucket - pad])
+            neighbors.append(nbr[: bucket - pad])
+            self.bucket_launches[bucket] = \
+                self.bucket_launches.get(bucket, 0) + 1
+            launches += 1
+        return ClassifyResult(classes=jnp.concatenate(classes),
+                              neighbors=jnp.concatenate(neighbors),
+                              launches=launches)
 
 
 @dataclass

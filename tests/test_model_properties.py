@@ -6,6 +6,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_smoke_config
