@@ -1,0 +1,116 @@
+"""Algorithm × backend × batch-bucket sweep through the unified Estimator
+API and ``NonNeuralServeEngine`` — the serving-side image of the paper's
+"one library, many kernels, three FP backends" claim (§3.4, Figs. 9–11).
+
+For every registered estimator (kNN, K-Means, GNB, GMM, RF) the sweep:
+
+  * fits once on a synthetic blob problem,
+  * serves each power-of-two bucket through the engine and reports warm
+    per-query latency (wall-clock on whatever substrate runs this —
+    TPU Mosaic or CPU interpret),
+  * records which registry path ``kernels/dispatch.py`` selected for the
+    hot op, and
+  * attaches the analytic cycle model for the paper's three FP backends
+    (libgcc / rvfplib / fpu via ``PrecisionPolicy.estimated_cycles``),
+    since a TPU cannot *measure* soft-float emulation (DESIGN.md §6).
+
+Results accumulate in BENCH_estimators.json via benchmarks/report.py.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ALGORITHMS = ("knn", "kmeans", "gnb", "gmm", "rf")
+COST_BACKENDS = ("libgcc", "rvfplib", "fpu")
+BUCKETS = (8, 32, 128)
+BUCKETS_QUICK = (8, 32)
+POLICY_NAMES = ("fp32", "bf16")
+POLICY_NAMES_QUICK = ("fp32",)
+
+
+def _fit(algo: str, X, y, policy):
+    from repro.core.estimator import make_fitted
+    return make_fitted(algo, X, y, n_groups=int(y.max()) + 1, policy=policy)
+
+
+def _hot_path(algo: str, est, bucket: int, d: int) -> str:
+    """Which registry arm serves this (algorithm, shape)."""
+    from repro.kernels import dispatch
+    if algo == "knn":
+        shape_kw = dict(N=est.params.A.shape[0], d=d, Q=bucket, k=est.k)
+    elif algo == "kmeans":
+        shape_kw = dict(N=bucket, d=d, K=est.params.centroids.shape[0])
+    elif algo == "gnb":
+        shape_kw = dict(B=bucket, d=d, C=est.params.mu.shape[0])
+    else:                                      # gmm / rf: ref-only ops
+        shape_kw = {}
+    op = {"knn": "distance_topk", "kmeans": "distance_argmin",
+          "gnb": "scores", "gmm": "responsibilities",
+          "rf": "forest_votes"}[algo]
+    return dispatch.resolve(algo, op, **shape_kw).name
+
+
+def _bench_bucket(engine, X, bucket: int, iters: int) -> float:
+    import jax
+    batch = X[:bucket]
+    if batch.shape[0] < bucket:
+        batch = np.concatenate([batch] * (bucket // batch.shape[0] + 1))
+        batch = batch[:bucket]
+    res = engine.classify(batch)               # warm-up / compile
+    jax.block_until_ready(res.classes)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.classify(batch).classes)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6 / bucket                 # us per query
+
+
+def run(csv_rows: list, quick: bool = False):
+    """The acceptance sweep: every algorithm × policy × bucket through one
+    serving engine class and one kernel registry."""
+    from repro.kernels.dispatch import get_policy
+    from repro.serving import NonNeuralServeEngine
+
+    from repro.data.datasets import class_blobs
+
+    n, d = (240, 16) if quick else (400, 21)
+    buckets = BUCKETS_QUICK if quick else BUCKETS
+    policies = POLICY_NAMES_QUICK if quick else POLICY_NAMES
+    iters = 2 if quick else 5
+    X, y = class_blobs(n=n, d=d)
+
+    results = []
+    print("\n== Estimator serving sweep (algorithm x backend x bucket) ==")
+    print(f"{'algo':7s} {'policy':7s} {'bucket':>6s} {'path':8s} "
+          f"{'us/query':>9s} {'cycles@libgcc':>14s} {'cycles@fpu':>11s}")
+    for algo in ALGORITHMS:
+        for pname in policies:
+            policy = get_policy(pname)
+            est = _fit(algo, X, y, policy)
+            engine = NonNeuralServeEngine(est, max_batch=max(buckets))
+            cycles = {b: policy.with_cost_backend(b).estimated_cycles(algo)
+                      for b in COST_BACKENDS}
+            for bucket in buckets:
+                us_q = _bench_bucket(engine, X, bucket, iters)
+                path = _hot_path(algo, est, bucket, d)
+                rec = {"algorithm": algo, "policy": pname, "bucket": bucket,
+                       "path": path, "us_per_query": us_q,
+                       "analytic_cycles": cycles}
+                results.append(rec)
+                print(f"{algo:7s} {pname:7s} {bucket:6d} {path:8s} "
+                      f"{us_q:9.1f} {cycles['libgcc']:14.3e} "
+                      f"{cycles['fpu']:11.3e}")
+                csv_rows.append(
+                    (f"estimator_serve/{algo}/{pname}/b{bucket}", us_q,
+                     f"path={path};"
+                     f"soft_float_penalty="
+                     f"{cycles['libgcc'] / cycles['fpu']:.1f}x"))
+            assert engine.bucket_launches, (algo, pname)
+    return results
+
+
+if __name__ == "__main__":
+    run([], quick=True)

@@ -34,7 +34,7 @@ def fused_topk_working_set(bn: int, d: int, q: int, k: int) -> dict:
     image of the paper's L1-resident e.  Byte count comes from the
     autotuner's own formula (ops.fused_topk_working_set_bytes) so this
     table can never disagree with what the kernel wrapper picks."""
-    from repro.kernels.ops import fused_topk_working_set_bytes
+    from repro.kernels.dispatch import fused_topk_working_set_bytes
     total = fused_topk_working_set_bytes(bn, d, q, k)
     return {
         "tiles": f"A({bn}x{d}) C({q}x{d}) e({bn}x{q}) acc({q}x{k})",

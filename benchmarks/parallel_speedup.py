@@ -75,12 +75,16 @@ def _bench(fn, args, iters: int) -> float:
 
 
 def run_fused_ab(csv_rows: list, quick: bool = False):
-    """Fused-vs-two-pass distance->top-k: wall-clock + HLO bytes A/B."""
+    """Fused-vs-two-pass distance->top-k: wall-clock + HLO bytes A/B.
+
+    Both arms go through the kernel registry (kernels/dispatch.py) — the
+    A/B is literally the registry's "fused" arm against its "blocked"
+    arm for ("knn", "distance_topk")."""
     import jax
     import jax.numpy as jnp
 
     from benchmarks.hlo_analysis import analyze, cost_summary
-    from repro.kernels import ops
+    from repro.kernels import dispatch
 
     shapes = AB_SHAPES_QUICK if quick else AB_SHAPES
     iters = 3 if quick else 5
@@ -92,9 +96,10 @@ def run_fused_ab(csv_rows: list, quick: bool = False):
         ka, kc = jax.random.split(jax.random.PRNGKey(n + d))
         a = jax.random.normal(ka, (n, d), jnp.float32)
         c = jax.random.normal(kc, (q, d), jnp.float32)
-        fused = jax.jit(lambda a, c: ops.distance_topk(a, c, k))
-        twop = jax.jit(lambda a, c: ops.topk_smallest(
-            jnp.transpose(ops.pairwise_sq_dist(a, c)), k))
+        fused = jax.jit(
+            lambda a, c: dispatch.distance_topk(a, c, k, path="fused"))
+        twop = jax.jit(
+            lambda a, c: dispatch.distance_topk(a, c, k, path="blocked"))
 
         rec = {"shape": [n, d, q, k]}
         for name, fn in (("fused", fused), ("two_pass", twop)):

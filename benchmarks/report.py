@@ -17,6 +17,8 @@ from benchmarks.roofline import analyze_record, load_records, model_flops
 
 BENCH_FUSED_TOPK = Path(__file__).resolve().parents[1] / \
     "BENCH_fused_topk.json"
+BENCH_ESTIMATORS = Path(__file__).resolve().parents[1] / \
+    "BENCH_estimators.json"
 
 
 def fmt_bytes(b: float) -> str:
@@ -94,10 +96,9 @@ def perf_compare_table(cells, tags) -> str:
     return "\n".join(lines)
 
 
-def write_fused_entry(results, path: Path = BENCH_FUSED_TOPK) -> dict:
-    """Append one fused-vs-two-pass A/B measurement (latency + HLO
-    bytes-accessed per shape) to BENCH_fused_topk.json so the perf
-    trajectory accumulates across runs."""
+def _append_entry(results, path: Path) -> dict:
+    """Append one timestamped measurement entry to a BENCH_*.json
+    accumulator (tolerates a missing or corrupt file)."""
     import time as _time
     entry = {
         "timestamp": _time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -113,6 +114,38 @@ def write_fused_entry(results, path: Path = BENCH_FUSED_TOPK) -> dict:
     data.setdefault("entries", []).append(entry)
     path.write_text(json.dumps(data, indent=2) + "\n")
     return entry
+
+
+def write_fused_entry(results, path: Path = BENCH_FUSED_TOPK) -> dict:
+    """Append one fused-vs-two-pass A/B measurement (latency + HLO
+    bytes-accessed per shape) to BENCH_fused_topk.json so the perf
+    trajectory accumulates across runs."""
+    return _append_entry(results, path)
+
+
+def write_estimators_entry(results, path: Path = BENCH_ESTIMATORS) -> dict:
+    """Append one algorithm x backend x bucket serving sweep (unified
+    Estimator API through NonNeuralServeEngine) to BENCH_estimators.json."""
+    return _append_entry(results, path)
+
+
+def estimators_table(path: Path = BENCH_ESTIMATORS) -> str:
+    if not path.exists():
+        return "(no BENCH_estimators.json yet — run benchmarks/run.py)"
+    data = json.loads(path.read_text())
+    lines = ["| when | algo | policy | bucket | path | us/query | "
+             "libgcc/fpu penalty |",
+             "|---|---|---|---|---|---|---|"]
+    for e in data.get("entries", []):
+        for r in e.get("results", []):
+            cyc = r.get("analytic_cycles", {})
+            pen = (cyc.get("libgcc", 0.0) / cyc["fpu"]
+                   if cyc.get("fpu") else float("nan"))
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | {r['policy']} | "
+                f"{r['bucket']} | {r['path']} | "
+                f"{r['us_per_query']:.1f} | {pen:.1f}x |")
+    return "\n".join(lines)
 
 
 def _backend_name() -> str:
@@ -149,12 +182,22 @@ def main():
     ap.add_argument("--fused-topk", action="store_true",
                     help="measure the fused distance->top-k A/B and append "
                          "an entry to BENCH_fused_topk.json")
+    ap.add_argument("--estimators", action="store_true",
+                    help="run the estimator serving sweep (algorithm x "
+                         "backend x bucket) and append an entry to "
+                         "BENCH_estimators.json")
     args = ap.parse_args()
     if args.fused_topk:
         from benchmarks.parallel_speedup import run_fused_ab
         write_fused_entry(run_fused_ab([], quick=True))
         print("\n### Fused distance->top-k A/B\n")
         print(fused_topk_table())
+        return
+    if args.estimators:
+        from benchmarks.estimator_sweep import run as run_estimators
+        write_estimators_entry(run_estimators([], quick=True))
+        print("\n### Estimator serving sweep\n")
+        print(estimators_table())
         return
     if args.refresh:
         from benchmarks.roofline import refresh_from_hlo

@@ -22,8 +22,9 @@ def main() -> None:
     args = ap.parse_args()
     csv_rows: list = []
 
-    from benchmarks import cortex_m4, fp_backends, kernel_blocks
-    from benchmarks import parallel_speedup, report, roofline, sorting
+    from benchmarks import cortex_m4, estimator_sweep, fp_backends
+    from benchmarks import kernel_blocks, parallel_speedup, report
+    from benchmarks import roofline, sorting
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
@@ -32,6 +33,8 @@ def main() -> None:
     kernel_blocks.run(csv_rows)                 # Pallas BlockSpec analysis
     fused = parallel_speedup.run_fused_ab(csv_rows, quick=args.quick)
     report.write_fused_entry(fused)             # accumulate BENCH json
+    est = estimator_sweep.run(csv_rows, quick=args.quick)
+    report.write_estimators_entry(est)          # algorithm x backend x bucket
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

@@ -3,6 +3,7 @@ parallelisation schemes, adapted to TPU meshes (see DESIGN.md §2)."""
 from repro.core import (  # noqa: F401
     cluster,
     distribution,
+    estimator,
     gemm_based,
     gmm,
     gnb,

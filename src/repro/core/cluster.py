@@ -18,6 +18,7 @@ from repro.core.gnb import GNBModel, _log_gaussian
 from repro.core.knn import KNNModel, sq_distances
 from repro.core.kmeans import _pairwise_sq_dist
 from repro.core.topk import selection_topk_smallest
+from repro.sharding.compat import shard_map as _shard_map
 
 
 def knn_classify_shardmap(model: KNNModel, x, k: int, mesh: Mesh,
@@ -46,9 +47,9 @@ def knn_classify_shardmap(model: KNNModel, x, k: int, mesh: Mesh,
 
     # the all_gather + redundant merge is replicated by construction, but
     # the static varying-mesh-axes check can't see that
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(axis), P(axis), P()), out_specs=P(),
-                       check_vma=False)
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P()), out_specs=P(),
+                    check_vma=False)
     return fn(model.A, model.labels, x)
 
 
@@ -72,8 +73,8 @@ def kmeans_iteration_shardmap(A, centroids, mesh: Mesh, axis: str = "data"):
                           sums / jnp.maximum(counts[:, None], 1.0), cent)
         return new_c, ids
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(axis), P()), out_specs=(P(), P(axis)))
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P()), out_specs=(P(), P(axis)))
     return fn(A, centroids)
 
 
@@ -89,9 +90,9 @@ def gnb_decision_shardmap(model: GNBModel, x, mesh: Mesh, axis: str = "data"):
         y = jax.lax.psum(partial, axis) + log_prior         # OP2
         return jnp.argmax(y), y                             # OP3
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(None, axis), P(None, axis), P(axis), P()),
-                       out_specs=(P(), P()))
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(None, axis), P(None, axis), P(axis), P()),
+                    out_specs=(P(), P()))
     return fn(model.mu, model.var, x, model.log_prior)
 
 
@@ -122,7 +123,7 @@ def forest_predict_shardmap(forest, x, mesh: Mesh, axis: str = "data"):
     # check_vma off: the while_loop carry in tree_predict starts unvarying
     # (node 0) and becomes shard-varying; the psum output is replicated by
     # construction
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+                    out_specs=(P(), P()), check_vma=False)
     return fn(forest.feature, forest.threshold, forest.left, forest.right, x)

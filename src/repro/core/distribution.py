@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding.compat import shard_map as _shard_map
+
 
 # ---------------------------------------------------------------------------
 # §4.1 — partitioning strategy and chunk bounds
@@ -111,7 +113,7 @@ def two_phase_matvec_shardmap(W, x, b, mesh: Mesh, axis: str = "data"):
         partial = w_chunk @ x_chunk               # OP1: local chunk product
         return jax.lax.psum(partial, axis) + b_full  # OP2: global combine
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         functools.partial(local),
         mesh=mesh,
         in_specs=(P(None, axis), P(axis), P()),

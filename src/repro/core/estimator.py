@@ -1,0 +1,379 @@
+"""Unified Estimator API over the five Non-Neural pipelines.
+
+The paper's library exposes every kernel through the same train-offline /
+infer-on-cluster shape (Figs. 5–8 all share the OP1 parallel / OP-last
+sequential skeleton).  This module is that shape as a protocol:
+
+    fit(X, y=None)          -> self              (params as a NamedTuple)
+    predict(x)              -> (prediction, aux)
+    predict_batch(X)        -> (predictions (B,), aux (B, ...))
+
+Every estimator routes its hot path through the kernel registry
+(``kernels/dispatch.py``), so path selection (fused / blocked / ref) and
+the ``PrecisionPolicy`` (fp32 / bf16 + analytic backend costing) are
+uniform across algorithms — serving and benchmarks never touch ``ops.py``
+or bespoke kernels directly.
+
+``predict_batch_fn()`` returns a pure function ``(params, X) -> (preds,
+aux)`` with the static configuration closed over, so serving engines can
+jit it once per batch bucket and pass the (possibly large) parameter
+arrays as shared device buffers instead of baking them into every
+executable.
+
+``aux`` is the algorithm's natural per-query evidence: kNN neighbour
+indices, K-Means assignment distances, GNB joint log-likelihoods, GMM
+log-responsibilities, RF vote counts.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import gmm as _gmm
+from repro.core import gnb as _gnb
+from repro.core import kmeans as _kmeans
+from repro.core import knn as _knn
+from repro.core import random_forest as _rf
+from repro.kernels import dispatch
+from repro.kernels.dispatch import PrecisionPolicy
+
+
+class Estimator(Protocol):
+    """Structural protocol every Non-Neural estimator satisfies (this is
+    exactly the surface NonNeuralServeEngine consumes)."""
+
+    algorithm: str
+    policy: Optional[PrecisionPolicy]
+
+    def fit(self, X, y=None) -> "Estimator": ...
+
+    @property
+    def params(self) -> NamedTuple: ...
+
+    @property
+    def fitted(self) -> bool: ...
+
+    def predict_batch_fn(self) -> Callable: ...
+
+    def predict_batch(self, X) -> Tuple[Any, Any]: ...
+
+    def predict(self, x) -> Tuple[Any, Any]: ...
+
+    def empty_aux(self) -> Any: ...
+
+
+class _EstimatorBase:
+    """Shared plumbing: single-query predict via the batch path, policy
+    casting, and the fitted-params handshake."""
+
+    algorithm: str = "?"
+
+    def __init__(self, *, policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        self.policy = policy
+        self.path = path
+        self._params: Optional[NamedTuple] = None
+
+    @property
+    def params(self) -> NamedTuple:
+        if self._params is None:
+            raise ValueError(f"{type(self).__name__} is not fitted")
+        return self._params
+
+    @property
+    def fitted(self) -> bool:
+        return self._params is not None
+
+    def _cast(self, x):
+        return self.policy.cast(jnp.asarray(x)) if self.policy \
+            else jnp.asarray(x)
+
+    def predict_batch(self, X) -> Tuple[Any, Any]:
+        return self.predict_batch_fn()(self.params, jnp.asarray(X))
+
+    def predict(self, x) -> Tuple[Any, Any]:
+        preds, aux = self.predict_batch(jnp.asarray(x)[None])
+        return preds[0], aux[0]
+
+    def empty_aux(self) -> jnp.ndarray:
+        """Zero-query aux with the same trailing shape/dtype as
+        ``predict_batch``'s aux — what a serving engine returns for an
+        empty request batch."""
+        raise NotImplementedError
+
+
+class KNNEstimator(_EstimatorBase):
+    """Fig. 6 pipeline; hot path = ("knn", "distance_topk") in the registry.
+    aux = neighbour indices (B, k)."""
+
+    algorithm = "knn"
+
+    def __init__(self, k: int = 4, *, n_class: Optional[int] = None,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        super().__init__(policy=policy, path=path)
+        self.k = int(k)
+        self.n_class = n_class
+
+    def fit(self, X, y=None) -> "KNNEstimator":
+        assert y is not None, "kNN is supervised"
+        y = jnp.asarray(y, jnp.int32)
+        n_class = self.n_class or int(jnp.max(y)) + 1
+        self._params = _knn.KNNModel(A=self._cast(X), labels=y,
+                                     n_class=n_class)
+        return self
+
+    @classmethod
+    def from_params(cls, model: _knn.KNNModel, k: int = 4,
+                    **kw) -> "KNNEstimator":
+        est = cls(k, n_class=model.n_class, **kw)
+        est._params = _knn.KNNModel(A=est._cast(model.A),
+                                    labels=model.labels,
+                                    n_class=model.n_class)
+        return est
+
+    def predict_batch_fn(self) -> Callable:
+        k, policy, path = self.k, self.policy, self.path
+        # n_class is static shape metadata (vote array length) — close over
+        # it so jitted callers can pass params as traced device buffers
+        n_class = self.params.n_class
+
+        def fn(params: _knn.KNNModel, X):
+            X = policy.cast(X) if policy else X
+            model = _knn.KNNModel(A=params.A, labels=params.labels,
+                                  n_class=n_class)
+            return _knn.knn_classify_batch(model, X, k, policy=policy,
+                                           path=path)
+
+        return fn
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0, self.k), jnp.int32)      # neighbour indices
+
+
+class KMeansEstimator(_EstimatorBase):
+    """Fig. 7 pipeline; hot path = ("kmeans", "distance_argmin").
+    aux = squared distance to the assigned centroid (B,)."""
+
+    algorithm = "kmeans"
+
+    def __init__(self, n_clusters: int = 4, *, threshold: float = 1e-4,
+                 max_iters: int = 100, n_cores: int = 8,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        super().__init__(policy=policy, path=path)
+        self.n_clusters = int(n_clusters)
+        self.threshold = threshold
+        self.max_iters = max_iters
+        self.n_cores = n_cores
+
+    def fit(self, X, y=None) -> "KMeansEstimator":
+        # fit in f32 (the paper trains offline at full precision; the FP
+        # backend axis applies to inference), then cast the fitted params
+        state, _ = _kmeans.kmeans_fit(jnp.asarray(X), self.n_clusters,
+                                      threshold=self.threshold,
+                                      max_iters=self.max_iters,
+                                      n_cores=self.n_cores)
+        self._params = state._replace(centroids=self._cast(state.centroids))
+        return self
+
+    @classmethod
+    def from_params(cls, state: _kmeans.KMeansState,
+                    **kw) -> "KMeansEstimator":
+        est = cls(n_clusters=state.centroids.shape[0], **kw)
+        est._params = state
+        return est
+
+    def predict_batch_fn(self) -> Callable:
+        policy, path = self.policy, self.path
+
+        def fn(params: _kmeans.KMeansState, X):
+            X = policy.cast(X) if policy else X
+            dist, ids = dispatch.distance_argmin(X, params.centroids,
+                                                 policy=policy, path=path)
+            return ids, dist
+
+        return fn
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0,), jnp.float32)           # assignment distance
+
+
+class GNBEstimator(_EstimatorBase):
+    """Fig. 5 pipeline; hot path = ("gnb", "scores").
+    aux = joint log-likelihood per class (B, C)."""
+
+    algorithm = "gnb"
+
+    def __init__(self, n_class: Optional[int] = None, *,
+                 var_smoothing: float = 1e-6,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        super().__init__(policy=policy, path=path)
+        self.n_class = n_class
+        self.var_smoothing = var_smoothing
+
+    def fit(self, X, y=None) -> "GNBEstimator":
+        assert y is not None, "GNB is supervised"
+        y = jnp.asarray(y, jnp.int32)
+        n_class = self.n_class or int(jnp.max(y)) + 1
+        model = _gnb.fit_gnb(jnp.asarray(X), y, n_class, self.var_smoothing)
+        self._params = _gnb.GNBModel(mu=self._cast(model.mu),
+                                     var=self._cast(model.var),
+                                     log_prior=model.log_prior)
+        return self
+
+    @classmethod
+    def from_params(cls, model: _gnb.GNBModel, **kw) -> "GNBEstimator":
+        est = cls(n_class=model.mu.shape[0], **kw)
+        est._params = model
+        return est
+
+    def predict_batch_fn(self) -> Callable:
+        policy, path = self.policy, self.path
+
+        def fn(params: _gnb.GNBModel, X):
+            X = policy.cast(X) if policy else X
+            return _gnb.gnb_classify_batch(params, X, policy=policy,
+                                           path=path)
+
+        return fn
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0, self.params.mu.shape[0]), jnp.float32)
+
+
+class GMMEstimator(_EstimatorBase):
+    """EM mixture (paper §6 future-work kernel); hot path =
+    ("gmm", "responsibilities").  aux = log-responsibilities (B, k)."""
+
+    algorithm = "gmm"
+
+    def __init__(self, n_components: int = 4, *, max_iters: int = 100,
+                 tol: float = 1e-4, n_cores: int = 8,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        super().__init__(policy=policy, path=path)
+        self.n_components = int(n_components)
+        self.max_iters = max_iters
+        self.tol = tol
+        self.n_cores = n_cores
+
+    def fit(self, X, y=None) -> "GMMEstimator":
+        # EM runs in f32 (offline training, see KMeansEstimator.fit); only
+        # the inference-time params take the policy dtype
+        state, _ = _gmm.gmm_fit(jnp.asarray(X), self.n_components,
+                                max_iters=self.max_iters, tol=self.tol,
+                                n_cores=self.n_cores)
+        self._params = state._replace(mu=self._cast(state.mu),
+                                      var=self._cast(state.var))
+        return self
+
+    @classmethod
+    def from_params(cls, state: _gmm.GMMState, **kw) -> "GMMEstimator":
+        est = cls(n_components=state.mu.shape[0], **kw)
+        est._params = state
+        return est
+
+    def predict_batch_fn(self) -> Callable:
+        policy, path, n_cores = self.policy, self.path, self.n_cores
+
+        def fn(params: _gmm.GMMState, X):
+            X = policy.cast(X) if policy else X
+            return _gmm.gmm_classify_batch(params, X, policy=policy,
+                                           path=path, n_cores=n_cores)
+
+        return fn
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0, self.params.mu.shape[0]), jnp.float32)
+
+
+class RandomForestEstimator(_EstimatorBase):
+    """Fig. 8 pipeline; hot path = ("rf", "forest_votes") — ref arm only
+    (integer-bound traversal, DESIGN.md §4).  aux = vote counts (B, C)."""
+
+    algorithm = "rf"
+
+    def __init__(self, n_class: Optional[int] = None, *, n_trees: int = 16,
+                 max_depth: int = 8, min_samples: int = 2, seed: int = 0,
+                 n_cores: int = 8,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        super().__init__(policy=policy, path=path)
+        self.n_class = n_class
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_samples = min_samples
+        self.seed = seed
+        self.n_cores = n_cores
+
+    def fit(self, X, y=None) -> "RandomForestEstimator":
+        assert y is not None, "RF is supervised"
+        import numpy as np
+        n_class = self.n_class or int(np.max(np.asarray(y))) + 1
+        self._params = _rf.train_forest(X, y, n_class, n_trees=self.n_trees,
+                                        max_depth=self.max_depth,
+                                        min_samples=self.min_samples,
+                                        seed=self.seed)
+        return self
+
+    @classmethod
+    def from_params(cls, forest: _rf.Forest,
+                    **kw) -> "RandomForestEstimator":
+        est = cls(n_class=forest.n_class, **kw)
+        est._params = forest
+        return est
+
+    def predict_batch_fn(self) -> Callable:
+        policy, path, n_cores = self.policy, self.path, self.n_cores
+        n_class = self.params.n_class          # static (vote array length)
+
+        def fn(params: _rf.Forest, X):
+            X = policy.cast(X) if policy else X
+            forest = _rf.Forest(feature=params.feature,
+                                threshold=params.threshold,
+                                left=params.left, right=params.right,
+                                n_class=n_class)
+            return dispatch.forest_votes(forest, X, policy=policy,
+                                         path=path, n_cores=n_cores)
+
+        return fn
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0, self.params.n_class), jnp.int32)  # votes
+
+
+ESTIMATORS: Dict[str, type] = {
+    "knn": KNNEstimator,
+    "kmeans": KMeansEstimator,
+    "gnb": GNBEstimator,
+    "gmm": GMMEstimator,
+    "rf": RandomForestEstimator,
+}
+
+
+def make_estimator(algorithm: str, **kwargs) -> Estimator:
+    """Construct a registered estimator by algorithm name."""
+    try:
+        cls = ESTIMATORS[algorithm]
+    except KeyError:
+        raise KeyError(f"unknown algorithm {algorithm!r}; "
+                       f"registered: {sorted(ESTIMATORS)}") from None
+    return cls(**kwargs)
+
+
+# each algorithm's "how many groups" constructor kwarg — the one place the
+# naming difference exists, so drivers/benchmarks/tests never re-map it
+_GROUP_KWARG = {"kmeans": "n_clusters", "gmm": "n_components",
+                "knn": "n_class", "gnb": "n_class", "rf": "n_class"}
+
+
+def make_fitted(algorithm: str, X, y=None, *,
+                n_groups: Optional[int] = None, **kwargs) -> Estimator:
+    """Construct AND fit, mapping the generic ``n_groups`` (classes,
+    clusters, or mixture components) onto the algorithm's kwarg."""
+    if n_groups is not None:
+        kwargs.setdefault(_GROUP_KWARG[algorithm], n_groups)
+    return make_estimator(algorithm, **kwargs).fit(X, y)

@@ -120,3 +120,16 @@ def gmm_fit(A, k: int, *, max_iters: int = 100, tol: float = 1e-4,
 def gmm_predict(state: GMMState, X, n_cores: int = 8):
     lr, _ = gmm_e_step(X, state.mu, state.var, state.log_pi, n_cores)
     return jnp.argmax(lr, axis=1)
+
+
+def gmm_classify_batch(state: GMMState, X, *, policy=None,
+                       path: str | None = None, n_cores: int = 8):
+    """Batched component assignment through the kernel registry.  Returns
+    (classes (B,), log-responsibilities (B, k)).  The registry's only arm
+    for this op is ``ref`` (the chunked-vmap E-step above) — see
+    DESIGN.md §4 for why no Pallas arm exists."""
+    from repro.kernels import dispatch
+    lr, _ = dispatch.gmm_responsibilities(state.mu, state.var, state.log_pi,
+                                          X, policy=policy, path=path,
+                                          n_cores=n_cores)
+    return jnp.argmax(lr, axis=1), lr

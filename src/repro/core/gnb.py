@@ -76,3 +76,20 @@ def gnb_decision(model: GNBModel, x, n_cores: int = 8):
 
 def gnb_predict_batch(model: GNBModel, X, n_cores: int = 8):
     return jax.vmap(lambda x: gnb_decision(model, x, n_cores)[0])(X)
+
+
+def gnb_classify_batch(model: GNBModel, X, *, policy=None,
+                       path: str | None = None):
+    """Batched GNB through the kernel registry (Fig. 5 OP1+OP2 for a whole
+    query block).  Returns (classes (B,), joint log-likelihood (B, C)).
+
+    The registry picks the feature-chunked Pallas kernel
+    (kernels/gnb_score.py::gnb_scores_batch) for large d and the jnp
+    oracle for small d; predictions match ``gnb_predict_batch`` exactly,
+    scores to accumulation-order tolerance (the chunk sums associate
+    differently — DESIGN.md §4).
+    """
+    from repro.kernels import dispatch
+    scores = dispatch.gnb_scores(X, model.mu, model.var, model.log_prior,
+                                 policy=policy, path=path)     # (B, C)
+    return jnp.argmax(scores, axis=1), scores

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distribution import pad_to_multiple, split_chunks
-from repro.kernels import ops
+from repro.kernels import dispatch
 
 
 class KMeansState(NamedTuple):
@@ -46,9 +46,9 @@ def kmeans_iteration(A, centroids, n_cores: int = 8):
     chunk_len = Ap.shape[0] // n_cores
     valid = (jnp.arange(Ap.shape[0]) < N).reshape(n_cores, chunk_len)
 
-    # OP1 + OP2 — fused distance->argmin kernel (SS with k=1); the (N, k)
-    # e array is consumed tile-by-tile in VMEM, never written to HBM
-    _, ids_flat = ops.distance_argmin(A, centroids)           # (N,)
+    # OP1 + OP2 — registry-selected distance->argmin (SS with k=1); on the
+    # fused path the (N, k) e array is consumed tile-by-tile in VMEM
+    _, ids_flat = dispatch.distance_argmin(A, centroids)      # (N,)
     ids = jnp.pad(ids_flat, (0, Ap.shape[0] - N)).reshape(n_cores, chunk_len)
 
     # OP3 — local centroid update (accumulate + count) per core

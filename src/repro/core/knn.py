@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.distribution import pad_to_multiple, split_chunks
 from repro.core.topk import selection_topk_smallest
-from repro.kernels import ops
+from repro.kernels import dispatch
 
 _INF = jnp.inf
 
@@ -85,14 +85,19 @@ def knn_predict_batch(model: KNNModel, X, k: int, n_cores: int = 8):
     return jax.vmap(lambda x: knn_classify(model, x, k, n_cores)[0])(X)
 
 
-def knn_classify_batch(model: KNNModel, X, k: int, *, bn: int | None = None):
-    """Batched multi-query kNN on the fused distance->top-k kernel.
+def knn_classify_batch(model: KNNModel, X, k: int, *, bn: int | None = None,
+                       policy=None, path: str | None = None):
+    """Batched multi-query kNN through the kernel registry.
 
     X: (Q, d) queries, one kernel launch for the whole batch.  Returns
-    (classes (Q,), neighbour indices (Q, k)).  ``bn`` overrides the
-    autotuned streaming row block (kernels/ops.py).
+    (classes (Q,), neighbour indices (Q, k)).  The registry
+    (kernels/dispatch.py) picks the fused streaming kernel, the blocked
+    two-pass composition, or the jnp oracle per shape/VMEM budget;
+    ``path``/``policy`` override selection and compute dtype, ``bn`` the
+    autotuned streaming row block.
     """
-    _, nbr_idx = ops.distance_topk(model.A, X, k, bn=bn)      # (Q, k)
+    _, nbr_idx = dispatch.distance_topk(model.A, X, k, bn=bn,
+                                        policy=policy, path=path)   # (Q, k)
     classes = jax.vmap(lambda nb: _vote(model.labels, nb, model.n_class))(
         nbr_idx)
     return classes, nbr_idx

@@ -162,12 +162,30 @@ def census_rf(n_trees: int = 48, depth: int = 7, n_class: int = 10) -> Census:
     )
 
 
+def census_gmm_iter(n: int = 1000, d: int = 21, k: int = 2) -> Census:
+    """One EM iteration of the diagonal-covariance GMM (core/gmm.py) — the
+    paper's §6 future-work kernel, costed with the same op-census scheme.
+    E-step: per (sample, component, feature) sub/mul/div/add plus a
+    per-(sample, component) exp for the responsibility normalisation;
+    M-step: K-Means-style soft accumulate (2 mul+add per element for the
+    s1/s2 sums) and a k*d divide in the global combine."""
+    e_elem = n * k * d
+    return Census(
+        "gmm_iter",
+        parallel={"add": 3 * e_elem + 2 * e_elem, "mul": e_elem + 2 * e_elem,
+                  "div": e_elem, "exp": n * k, "elem": 2 * e_elem},
+        # convergence check on the master: mean log-lik delta
+        sequential={"add": n, "div": 1, "cmp": 1, "elem": n},
+    )
+
+
 PAPER_CENSUSES = {
     "svm": census_svm(),
     "lr": census_lr(),
     "gnb": census_gnb(),
     "knn": census_knn(),
     "kmeans_iter": census_kmeans_iter(),
+    "gmm_iter": census_gmm_iter(),
     "rf": census_rf(),
 }
 

@@ -74,6 +74,14 @@ def forest_predict_batch(forest: Forest, X, n_cores: int = 8):
     return jax.vmap(lambda x: forest_predict(forest, x, n_cores)[0])(X)
 
 
+def forest_classify_batch(forest: Forest, X, n_cores: int = 8):
+    """Batched Fig. 8 returning (classes (B,), votes (B, n_class)) — the
+    ``ref`` arm registered for ("rf", "forest_votes") in kernels/dispatch.py
+    (traversal is integer gather+branch work; no Pallas arm exists)."""
+    cls, votes = jax.vmap(lambda x: forest_predict(forest, x, n_cores))(X)
+    return cls, votes
+
+
 # ---------------------------------------------------------------------------
 # Training: from-scratch CART (numpy, offline — like the paper's sklearn)
 # ---------------------------------------------------------------------------

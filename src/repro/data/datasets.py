@@ -20,6 +20,14 @@ def _blobs(rng, n: int, d: int, n_class: int, spread: float, scale: float):
     return X.astype(np.float32), y.astype(np.int32)
 
 
+def class_blobs(n: int = 400, d: int = 21, n_class: int = 3, seed: int = 0,
+                spread: float = 3.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Well-separated Gaussian blobs — the generic classification problem
+    the estimator serving sweep and the Non-Neural serve CLI share."""
+    return _blobs(np.random.default_rng(seed), n, d, n_class,
+                  spread=spread, scale=1.0)
+
+
 def mnist_like(n: int = 2000, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     rng = np.random.default_rng(seed)
     X, y = _blobs(rng, n, 784, 10, spread=0.8, scale=0.35)

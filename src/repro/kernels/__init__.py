@@ -1,4 +1,4 @@
 """Pallas TPU kernels for the paper's compute hot-spots (+ flash attention
 for the LM stack). Each kernel: <name>.py (pl.pallas_call + BlockSpec),
 wrapped in ops.py (jit + padding + interpret fallback), oracled in ref.py."""
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref  # noqa: F401

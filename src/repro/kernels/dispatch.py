@@ -1,0 +1,376 @@
+"""Kernel dispatch layer: one registry for every Non-Neural hot-path op.
+
+The paper's core claim is "one parallel library serves all Non-Neural
+kernels across three FP backends" (§3.4).  This module is that library's
+TPU-side spine: a registry keyed by ``(algorithm, op)`` where each op owns
+up to three executable paths
+
+  ``fused``   — streaming Pallas kernel (VMEM-resident accumulator,
+                DESIGN.md §3),
+  ``blocked`` — blocked Pallas kernel composition (tiles round-trip HBM),
+  ``ref``     — the pure-jnp oracle from ``kernels/ref.py`` (interpret
+                fallback; also the arm for ops whose work is
+                integer/gather-bound and gains nothing from a Pallas
+                kernel — see DESIGN.md §4),
+
+selected per shape against the VMEM budget.  ``REPRO_BACKEND`` (env) or an
+explicit ``path=`` kwarg overrides the selector; explicit ``path=`` wins
+over the environment.  Every op MUST register a ``ref`` arm so
+``REPRO_BACKEND=ref`` can force the whole suite onto the oracle paths (the
+second CI matrix entry).
+
+``PrecisionPolicy`` threads the paper's three-FP-backend axis (§3.4,
+Figs. 9–11) through every layer: a compute dtype (fp32 native vs bf16
+reduced precision) plus an analytic cost backend — the libgcc / rvfplib /
+fpu cycles-per-op vectors from ``core.precision.BACKENDS`` — so serving
+and benchmarks can report both measured wall-clock and modelled
+soft-float/FPU cycle costs for the same call.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _precision_mod():
+    # deferred: repro.core's package __init__ imports the algorithm modules,
+    # which import this module — a top-level import here would cycle
+    from repro.core import precision
+    return precision
+
+ENV_VAR = "REPRO_BACKEND"
+PATH_NAMES = ("fused", "blocked", "ref")
+VMEM_BUDGET = ops._VMEM_BUDGET
+
+# re-exported: the working-set formula IS the dispatch criterion, so the
+# benchmark block-model (benchmarks/kernel_blocks.py) imports it from here
+fused_topk_working_set_bytes = ops.fused_topk_working_set_bytes
+
+# algorithm -> census key in core.precision.PAPER_CENSUSES
+_CENSUS_KEY = {"knn": "knn", "kmeans": "kmeans_iter", "gnb": "gnb",
+               "gmm": "gmm_iter", "rf": "rf", "lr": "lr", "svm": "svm"}
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy — the §3.4 backend axis as a value threaded through layers
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """Compute dtype + analytic cost backend.
+
+    ``dtype`` is what estimators cast float inputs/params to (fp32 = the
+    paper's FPU-native arm, bf16 = the reduced-precision arm the MXU
+    natively supports).  ``cost_backend`` names a cycles-per-op vector in
+    ``core.precision.BACKENDS`` used for the analytic soft-float-emulation
+    costing (the TPU has no FP-emulation mode to measure, DESIGN.md §6).
+    """
+
+    name: str
+    dtype: Any
+    cost_backend: str = "fpu"
+
+    def cast(self, x):
+        """Cast float arrays to the policy dtype; integers pass through."""
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(self.dtype)
+        return x
+
+    def with_cost_backend(self, backend: str) -> "PrecisionPolicy":
+        assert backend in _precision_mod().BACKENDS, backend
+        return replace(self, cost_backend=backend,
+                       name=f"{self.name.split('@')[0]}@{backend}")
+
+    def estimated_cycles(self, algorithm: str,
+                         section: str = "total") -> float:
+        """Analytic per-inference cycle cost of ``algorithm`` under this
+        policy's cost backend (census x cycles-per-op, paper Eq. in §5.2)."""
+        precision = _precision_mod()
+        census = precision.PAPER_CENSUSES[_CENSUS_KEY[algorithm]]
+        backend = precision.BACKENDS[self.cost_backend]
+        return precision.predicted_cycles(census, backend, section)
+
+
+POLICIES: Dict[str, PrecisionPolicy] = {
+    "fp32": PrecisionPolicy("fp32", jnp.float32, "fpu"),
+    "bf16": PrecisionPolicy("bf16", jnp.bfloat16, "fpu"),
+}
+DEFAULT_POLICY = POLICIES["fp32"]
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    """``"fp32"``, ``"bf16"``, or ``"<dtype>@<cost_backend>"``."""
+    base, _, backend = name.partition("@")
+    policy = POLICIES[base]
+    return policy.with_cost_backend(backend) if backend else policy
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+class KernelPath(NamedTuple):
+    algorithm: str
+    op: str
+    name: str          # "fused" | "blocked" | "ref"
+    fn: Callable
+
+
+_PATHS: Dict[Tuple[str, str], Dict[str, Callable]] = {}
+_SELECTORS: Dict[Tuple[str, str], Callable[..., str]] = {}
+
+
+def register(algorithm: str, op: str, path: str):
+    assert path in PATH_NAMES, path
+
+    def deco(fn):
+        _PATHS.setdefault((algorithm, op), {})[path] = fn
+        return fn
+
+    return deco
+
+
+def selector(algorithm: str, op: str):
+    def deco(fn):
+        _SELECTORS[(algorithm, op)] = fn
+        return fn
+
+    return deco
+
+
+def registered() -> Dict[Tuple[str, str], Tuple[str, ...]]:
+    """(algorithm, op) -> available path names, for docs and tests."""
+    return {k: tuple(n for n in PATH_NAMES if n in v)
+            for k, v in sorted(_PATHS.items())}
+
+
+def env_override() -> Optional[str]:
+    v = os.environ.get(ENV_VAR, "").strip()
+    if not v:
+        return None
+    if v not in PATH_NAMES:
+        # a typo'd REPRO_BACKEND must not silently run the default arms —
+        # the ref CI matrix entry would report green without testing ref
+        raise ValueError(f"{ENV_VAR}={v!r} is not one of {PATH_NAMES}")
+    return v
+
+
+def resolve(algorithm: str, op: str, *, path: Optional[str] = None,
+            policy: Optional[PrecisionPolicy] = None,
+            budget: int = VMEM_BUDGET, **shape_kw) -> KernelPath:
+    """Pick the executable path for ``(algorithm, op)`` at these shapes.
+
+    Precedence: explicit ``path=`` > ``REPRO_BACKEND`` env (when that op
+    has the requested arm) > the op's shape/VMEM selector.
+    """
+    key = (algorithm, op)
+    if key not in _PATHS:
+        raise KeyError(f"no kernel registered for {key}; "
+                       f"known: {sorted(_PATHS)}")
+    paths = _PATHS[key]
+    if path is not None:
+        if path not in paths:
+            raise KeyError(f"{key} has no {path!r} path "
+                           f"(has {sorted(paths)})")
+        chosen = path
+    else:
+        env = env_override()
+        if env is not None and env in paths:
+            chosen = env
+        else:
+            sel = _SELECTORS.get(key)
+            if sel is not None:
+                chosen = sel(policy=policy or DEFAULT_POLICY,
+                             budget=budget, **shape_kw)
+            else:
+                chosen = next(n for n in PATH_NAMES if n in paths)
+    return KernelPath(algorithm, op, chosen, paths[chosen])
+
+
+# ---------------------------------------------------------------------------
+# kNN — fused distance->top-k (Fig. 6 OP1+OP2)
+# ---------------------------------------------------------------------------
+
+
+@register("knn", "distance_topk", "fused")
+def _knn_fused(a, c, k, *, bn=None, interpret=None):
+    return ops.distance_topk(a, c, k, bn=bn, interpret=interpret)
+
+
+@register("knn", "distance_topk", "blocked")
+def _knn_blocked(a, c, k, *, bn=None, interpret=None):
+    # the pre-fusion two-pass composition: (N, Q) e matrix through HBM
+    e = ops.pairwise_sq_dist(a, c, interpret=interpret)
+    return ops.topk_smallest(jnp.transpose(e), k, interpret=interpret)
+
+
+@register("knn", "distance_topk", "ref")
+def _knn_ref(a, c, k, *, bn=None, interpret=None):
+    return ref.distance_topk(a, c, k)
+
+
+@selector("knn", "distance_topk")
+def _knn_select(*, N, d, Q, k, policy=None, budget=VMEM_BUDGET):
+    # fused streams A in bn-row blocks but keeps C, the merge window, and
+    # the (Q, k) accumulator resident; if even the minimum bn=8 block
+    # overflows VMEM (huge Q*d), fall back to the blocked two-pass
+    if ops.fused_topk_working_set_bytes(8, d, Q, k) <= budget:
+        return "fused"
+    return "blocked"
+
+
+def distance_topk(a, c, k: int, *, policy: Optional[PrecisionPolicy] = None,
+                  path: Optional[str] = None, bn: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """A (N, d) data, C (Q, d) queries -> (values (Q, k), indices (Q, k))."""
+    if policy is not None:
+        a, c = policy.cast(a), policy.cast(c)
+    N, d = a.shape
+    kp = resolve("knn", "distance_topk", path=path, policy=policy,
+                 N=N, d=d, Q=c.shape[0], k=k)
+    return kp.fn(a, c, k, bn=bn, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# K-Means — fused distance->argmin (Fig. 7 OP1+OP2, Selection Sort k=1)
+# ---------------------------------------------------------------------------
+
+
+def argmin_working_set_bytes(bn: int, d: int, K: int) -> int:
+    """VMEM working set of one fused distance->argmin grid step: the
+    double-buffered (bn, d) A tile, resident (K, d) centroids, and the
+    (bn, K) distance tile consumed in place."""
+    return 2 * bn * d * 4 + K * d * 4 + bn * K * 4 + 2 * bn * 8
+
+
+@register("kmeans", "distance_argmin", "fused")
+def _km_fused(a, c, *, bn=None, interpret=None):
+    return ops.distance_argmin(a, c, interpret=interpret) if bn is None \
+        else ops.distance_argmin(a, c, bn=bn, interpret=interpret)
+
+
+@register("kmeans", "distance_argmin", "blocked")
+def _km_blocked(a, c, *, bn=None, interpret=None):
+    e = ops.pairwise_sq_dist(a, c, interpret=interpret)
+    return jnp.min(e, axis=1), jnp.argmin(e, axis=1).astype(jnp.int32)
+
+
+@register("kmeans", "distance_argmin", "ref")
+def _km_ref(a, c, *, bn=None, interpret=None):
+    return ref.distance_argmin(a, c)
+
+
+@selector("kmeans", "distance_argmin")
+def _km_select(*, N, d, K, policy=None, budget=VMEM_BUDGET):
+    if argmin_working_set_bytes(8, d, K) <= budget:
+        return "fused"
+    return "blocked"
+
+
+def distance_argmin(a, c, *, policy: Optional[PrecisionPolicy] = None,
+                    path: Optional[str] = None, bn: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """A (N, d), centroids (K, d) -> (min sq-dist (N,), nearest id (N,))."""
+    if policy is not None:
+        a, c = policy.cast(a), policy.cast(c)
+    N, d = a.shape
+    kp = resolve("kmeans", "distance_argmin", path=path, policy=policy,
+                 N=N, d=d, K=c.shape[0])
+    return kp.fn(a, c, bn=bn, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# GNB — batched joint log-likelihood (Fig. 5 OP1+OP2)
+# ---------------------------------------------------------------------------
+
+
+@register("gnb", "scores", "blocked")
+def _gnb_blocked(X, mu, var, log_prior, *, interpret=None):
+    return ops.gnb_scores_batch(X, mu, var, log_prior, interpret=interpret)
+
+
+@register("gnb", "scores", "ref")
+def _gnb_ref(X, mu, var, log_prior, *, interpret=None):
+    return ref.gnb_scores_batch(X, mu, var, log_prior)
+
+
+@selector("gnb", "scores")
+def _gnb_select(*, B, d, C, policy=None, budget=VMEM_BUDGET):
+    # at small d the feature-chunked kernel is all launch overhead; the
+    # vertical split only pays once there are several 128-lane chunks
+    if d >= 64:
+        return "blocked"
+    return "ref"
+
+
+def gnb_scores(X, mu, var, log_prior, *,
+               policy: Optional[PrecisionPolicy] = None,
+               path: Optional[str] = None,
+               interpret: Optional[bool] = None):
+    """X (B, d) queries -> (B, C) joint log-likelihood."""
+    if policy is not None:
+        X, mu, var = policy.cast(X), policy.cast(mu), policy.cast(var)
+    B, d = X.shape
+    kp = resolve("gnb", "scores", path=path, policy=policy,
+                 B=B, d=d, C=mu.shape[0])
+    return kp.fn(X, mu, var, log_prior, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# GMM — E-step responsibilities (GNB OP1/OP2 + Fig. 6 row chunking)
+# ---------------------------------------------------------------------------
+
+
+@register("gmm", "responsibilities", "ref")
+def _gmm_ref(mu, var, log_pi, X, *, n_cores=8, interpret=None):
+    # ref-only by design: the E-step is a (B, k, d) log-density reduction
+    # at small k whose accumulation order is load-bearing for EM
+    # convergence parity; the chunked-vmap path IS the reference schedule
+    from repro.core.gmm import gmm_e_step
+    return gmm_e_step(X, mu, var, log_pi, n_cores)
+
+
+def gmm_responsibilities(mu, var, log_pi, X, *,
+                         policy: Optional[PrecisionPolicy] = None,
+                         path: Optional[str] = None, n_cores: int = 8,
+                         interpret: Optional[bool] = None):
+    """X (B, d) -> (log-responsibilities (B, k), mean log-likelihood)."""
+    if policy is not None:
+        mu, var, X = policy.cast(mu), policy.cast(var), policy.cast(X)
+    kp = resolve("gmm", "responsibilities", path=path, policy=policy)
+    return kp.fn(mu, var, log_pi, X, n_cores=n_cores, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# RF — batched forest vote (Fig. 8 Independent-Tasks)
+# ---------------------------------------------------------------------------
+
+
+@register("rf", "forest_votes", "ref")
+def _rf_ref(feature, threshold, left, right, X, *, n_class, n_cores=8,
+            interpret=None):
+    # ref-only by design: tree traversal is integer gather + branch work
+    # (6.39% FLOP intensity, paper §5.2) — there is no MXU/VPU win to fuse
+    from repro.core.random_forest import Forest, forest_classify_batch
+    forest = Forest(feature=feature, threshold=threshold, left=left,
+                    right=right, n_class=n_class)
+    return forest_classify_batch(forest, X, n_cores)
+
+
+def forest_votes(forest, X, *, policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None, n_cores: int = 8,
+                 interpret: Optional[bool] = None):
+    """Forest params + X (B, d) -> (classes (B,), votes (B, n_class))."""
+    if policy is not None:
+        X = policy.cast(X)
+    kp = resolve("rf", "forest_votes", path=path, policy=policy)
+    return kp.fn(forest.feature, forest.threshold, forest.left, forest.right,
+                 X, n_class=forest.n_class, n_cores=n_cores,
+                 interpret=interpret)

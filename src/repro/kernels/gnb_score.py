@@ -35,6 +35,53 @@ def _gnb_kernel(x_ref, mu_ref, var_ref, prior_ref, o_ref, *, nd: int):
         o_ref[...] += prior_ref[...]            # OP2: + log prior
 
 
+def _gnb_batch_kernel(x_ref, mu_ref, var_ref, prior_ref, o_ref, *, nd: int):
+    """Grid (nb, nd): i walks query blocks, j walks feature chunks (the
+    paper's vertical split).  The (bb, C) output block is revisited across
+    j — TPU grid steps run in order, so output-block accumulation is the
+    R-array combine exactly as in the single-query kernel above."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bb, bd)
+    mu = mu_ref[...].astype(jnp.float32)        # (C, bd)
+    var = var_ref[...].astype(jnp.float32)
+    t = -0.5 * ((x[:, None, :] - mu[None]) ** 2 / var[None]
+                + jnp.log(var)[None] + _LOG2PI)  # (bb, C, bd)
+    o_ref[...] += jnp.sum(t, axis=2)            # OP1 partial sums (R combine)
+
+    @pl.when(j == nd - 1)
+    def _prior():
+        o_ref[...] += prior_ref[...]            # OP2: + log prior
+
+
+def gnb_scores_batch(X, mu, var, log_prior, *, bb: int = 8, bd: int = 128,
+                     interpret: bool = False):
+    """X (B, d), mu/var (C, d), log_prior (C,) -> (B, C) log-likelihood."""
+    C, d = mu.shape
+    B = X.shape[0]
+    assert B % bb == 0, (B, bb)
+    assert d % bd == 0, (d, bd)
+    nb, nd = B // bb, d // bd
+    kernel = functools.partial(_gnb_batch_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nd),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((C, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((C, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((1, C), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(X, mu, var, log_prior[None, :])
+
+
 def gnb_scores(x, mu, var, log_prior, *, bd: int = 128,
                interpret: bool = False):
     """x (d,), mu/var (C, d), log_prior (C,) -> (C,) log-likelihood."""

@@ -140,6 +140,30 @@ def gnb_scores(x, mu, var, log_prior, *, bd: int = 128,
     return out + 0.5 * math.log(2.0 * math.pi) * n_pad
 
 
+@functools.partial(jax.jit, static_argnames=("bb", "bd", "interpret"))
+def gnb_scores_batch(X, mu, var, log_prior, *, bb: int = 8, bd: int = 128,
+                     interpret: bool | None = None):
+    """Batched GNB scoring: X (B, d) queries -> (B, C) joint log-likelihood.
+    Both the query-block ``bb`` and feature-chunk ``bd`` use the divisor-safe
+    multiple-of-8 clamp (``clamp_block``) so small B or ragged d can never
+    produce a Mosaic-rejected block shape."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, d = X.shape
+    bb = clamp_block(bb, B)
+    bd = clamp_block(bd, d)
+    Xp = _pad_dim(_pad_dim(X, bb, 0), bd, 1)
+    mup = _pad_dim(mu, bd, 1)
+    varp = _pad_dim(var, bd, 1, value=1.0)
+    # padded features (x=0, mu=0, var=1) add a constant -0.5*log(2*pi) per
+    # pad to every class — subtract it back out; padded query rows are junk
+    # and sliced off
+    import math
+    n_pad = Xp.shape[1] - d
+    out = _gnb.gnb_scores_batch(Xp, mup, varp, log_prior, bb=bb, bd=bd,
+                                interpret=interpret)
+    return out[:B] + 0.5 * math.log(2.0 * math.pi) * n_pad
+
+
 @functools.partial(jax.jit, static_argnames=("k", "br", "interpret"))
 def topk_smallest(x, k: int, *, br: int = 8, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret

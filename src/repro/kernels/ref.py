@@ -26,6 +26,14 @@ def gnb_scores(x, mu, var, log_prior):
     return jnp.sum(t, axis=1) + log_prior
 
 
+def gnb_scores_batch(X, mu, var, log_prior):
+    """(B, d), (C, d), (C, d), (C,) -> (B, C) joint log-likelihood."""
+    import math
+    t = -0.5 * ((X[:, None, :] - mu[None]) ** 2 / var[None]
+                + jnp.log(var)[None] + math.log(2.0 * math.pi))
+    return jnp.sum(t, axis=2) + log_prior[None, :]
+
+
 def topk_smallest(x, k: int):
     """(R, n) -> values (R, k), indices (R, k), ascending."""
     nv, ni = jax.lax.top_k(-x, k)

@@ -1,7 +1,16 @@
 """Batched serving driver.
 
+LM serving (default):
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
       --smoke --batch 4 --prompt-len 64 --new-tokens 32
+
+Non-Neural serving — any estimator registered in core/estimator.py goes
+through the same NonNeuralServeEngine power-of-two bucket batching and the
+kernels/dispatch.py registry:
+
+  PYTHONPATH=src python -m repro.launch.serve --algo knn --batch 64 \
+      --requests 256 --policy fp32
 """
 from __future__ import annotations
 
@@ -17,16 +26,7 @@ from repro.models import transformer
 from repro.serving import ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args(argv)
-
+def serve_lm(args):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(0)
     params = transformer.init_params(key, cfg)
@@ -54,6 +54,62 @@ def main(argv=None):
     print(f"[serve] arch={cfg.arch_id} generated {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s) first row: {result.tokens[0][:8].tolist()}")
     return result
+
+
+def serve_nonneural(args):
+    """Fit one estimator and drive it through the bucketed engine — the
+    unified serving path for all five Non-Neural pipelines."""
+    from repro.core.estimator import make_fitted
+    from repro.data.datasets import class_blobs
+    from repro.kernels.dispatch import get_policy
+    from repro.serving import NonNeuralServeEngine
+
+    n_class = args.classes
+    X, y = class_blobs(n=args.train_size + args.requests, d=args.dim,
+                       n_class=n_class)
+    X, Q = X[: args.train_size], X[args.train_size:]
+    y, yq = y[: args.train_size], y[args.train_size:]
+
+    est = make_fitted(args.algo, X, y, n_groups=n_class,
+                      policy=get_policy(args.policy))
+    engine = NonNeuralServeEngine(est, max_batch=args.batch)
+    engine.warmup(Q)
+    t0 = time.time()
+    result = engine.classify(Q)
+    jax.block_until_ready(result.classes)
+    dt = time.time() - t0
+    acc = float(jnp.mean(result.classes == jnp.asarray(yq))) \
+        if args.algo in ("knn", "gnb", "rf") else float("nan")
+    print(f"[serve] algo={args.algo} policy={args.policy} "
+          f"served {args.requests} queries in {dt:.3f}s "
+          f"({args.requests/dt:.0f} q/s, {result.launches} launches, "
+          f"buckets={engine.bucket_launches}) acc={acc:.3f}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--algo", default="lm",
+                    choices=["lm", "knn", "kmeans", "gnb", "gmm", "rf"],
+                    help="lm = transformer serving; otherwise a Non-Neural "
+                         "estimator through NonNeuralServeEngine")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--policy", default="fp32",
+                    help="PrecisionPolicy name: fp32, bf16, or "
+                         "<dtype>@<cost_backend> (e.g. fp32@libgcc)")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--train-size", type=int, default=400)
+    ap.add_argument("--dim", type=int, default=21)
+    ap.add_argument("--classes", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.algo == "lm":
+        return serve_lm(args)
+    return serve_nonneural(args)
 
 
 if __name__ == "__main__":

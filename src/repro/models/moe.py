@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init, mlp_is_gated
+from repro.sharding.compat import shard_map as _shard_map
 
 CAPACITY_FACTOR = 1.25
 
@@ -227,7 +228,7 @@ def apply_moe_two_phase(params, x, cfg: ModelConfig, plan):
         specs.append(P(ax))
     args.append(params["w_out"])
     specs.append(P(ax))
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=plan.mesh,
         in_specs=tuple(specs),

@@ -2,6 +2,7 @@ from repro.serving.engine import (  # noqa: F401
     ClassifyResult,
     GenerationResult,
     KNNServeEngine,
+    NonNeuralServeEngine,
     ServeEngine,
 )
 from repro.serving import quant  # noqa: F401

@@ -6,12 +6,12 @@ and runs greedy or temperature sampling. Aligned decode (all sequences at
 the same position) is the fast path used by the assigned decode shapes;
 ragged continuous batching falls back to per-sequence scatter.
 
-``KNNServeEngine`` — Non-Neural classification serving on the fused
-distance->top-k streaming kernel: request batches are padded to
-power-of-two buckets and dispatched through ``knn_classify_batch`` (one
-kernel launch for the whole bucket; the (N, Q) distance matrix stays in
-VMEM, DESIGN.md §3), so throughput scales with batch size instead of
-replaying the one-query Fig. 6 pipeline per request.
+``NonNeuralServeEngine`` — serving for ANY estimator registered in
+``core/estimator.py`` (kNN, K-Means, GNB, GMM, RF): request batches are
+padded to power-of-two buckets (so at most log2(max_batch) jit
+specialisations exist per algorithm) and each bucket runs the estimator's
+registry-dispatched batch path as one launch; batches beyond ``max_batch``
+are microbatched.  ``KNNServeEngine`` survives as the kNN-typed facade.
 """
 from __future__ import annotations
 
@@ -24,40 +24,39 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import knn as _knn
+from repro.core.estimator import Estimator, KNNEstimator
 from repro.models import transformer
 
 
 @dataclass
 class ClassifyResult:
-    classes: jnp.ndarray       # (B,) int32 predicted class per query
-    neighbors: jnp.ndarray     # (B, k) int32 training-row indices
-    launches: int              # fused-kernel launches used for this request
+    classes: jnp.ndarray       # (B,) int32 prediction per query
+    aux: jnp.ndarray           # (B, ...) algorithm evidence (see estimator)
+    launches: int              # kernel launches used for this request
+
+    @property
+    def neighbors(self) -> jnp.ndarray:
+        """kNN back-compat alias: aux is the (B, k) neighbour indices."""
+        return self.aux
 
 
-class KNNServeEngine:
-    """Batched kNN classification on the fused distance->top-k hot path.
+class NonNeuralServeEngine:
+    """Power-of-two bucket batching over any registered estimator.
 
-    Queries are padded to power-of-two buckets (so at most log2(max_batch)
-    jit specialisations exist) and each bucket runs as ONE fused kernel
-    launch via ``knn_classify_batch``; batches beyond ``max_batch`` are
-    microbatched.  ``bucket_launches`` counts launches per bucket size for
-    capacity accounting.
+    The estimator's ``predict_batch_fn()`` is jitted ONCE with the fitted
+    params flowing in as jit arguments (one shared device buffer) — a
+    closure would bake a copy of the training set / forest into every
+    per-bucket executable.  ``bucket_launches`` counts launches per bucket
+    size for capacity accounting.
     """
 
-    def __init__(self, model: _knn.KNNModel, k: int, *,
-                 max_batch: int = 1024):
-        assert 1 <= k <= model.A.shape[0], (k, model.A.shape)
-        self.model = model
-        self.k = int(k)
+    def __init__(self, estimator: Estimator, *, max_batch: int = 1024):
+        assert estimator.fitted, "fit the estimator before serving it"
+        self.estimator = estimator
+        self.algorithm = estimator.algorithm
         self.max_batch = int(max_batch)
         self.bucket_launches: Dict[int, int] = {}
-        # A/labels flow in as jit arguments (one shared device buffer),
-        # not closure constants — closures would bake a copy of the full
-        # training set into every per-bucket executable
-        k_, n_class = self.k, model.n_class
-        self._classify = jax.jit(
-            lambda A, labels, X: _knn.knn_classify_batch(
-                _knn.KNNModel(A=A, labels=labels, n_class=n_class), X, k_))
+        self._fn = jax.jit(estimator.predict_batch_fn())
 
     def _bucket(self, b: int) -> int:
         size = 1
@@ -65,30 +64,58 @@ class KNNServeEngine:
             size *= 2
         return min(size, self.max_batch)
 
+    def _empty(self) -> ClassifyResult:
+        return ClassifyResult(classes=jnp.zeros((0,), jnp.int32),
+                              aux=self.estimator.empty_aux(), launches=0)
+
+    def warmup(self, X) -> int:
+        """Compile every bucket a classify(X) call would hit (including the
+        smaller trailing-chunk bucket) so jit compiles never land inside a
+        caller's timed window.  Returns the number of buckets warmed."""
+        X = jnp.asarray(X)
+        sizes = {self._bucket(min(self.max_batch, X.shape[0] - lo))
+                 for lo in range(0, X.shape[0], self.max_batch)}
+        for size in sorted(sizes):
+            jax.block_until_ready(self.classify(X[:size]).classes)
+        return len(sizes)
+
     def classify(self, X) -> ClassifyResult:
-        """X: (B, d) queries -> per-query class + neighbour indices."""
+        """X: (B, d) queries -> per-query prediction + aux evidence."""
         X = jnp.asarray(X)
         B = X.shape[0]
         if B == 0:
-            return ClassifyResult(
-                classes=jnp.zeros((0,), jnp.int32),
-                neighbors=jnp.zeros((0, self.k), jnp.int32), launches=0)
-        classes, neighbors, launches = [], [], 0
+            return self._empty()
+        classes, auxes, launches = [], [], 0
+        params = self.estimator.params
         for lo in range(0, B, self.max_batch):
             chunk = X[lo: lo + self.max_batch]
             bucket = self._bucket(chunk.shape[0])
             pad = bucket - chunk.shape[0]
             if pad:
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-            cls, nbr = self._classify(self.model.A, self.model.labels, chunk)
+            cls, aux = self._fn(params, chunk)
             classes.append(cls[: bucket - pad])
-            neighbors.append(nbr[: bucket - pad])
+            auxes.append(aux[: bucket - pad])
             self.bucket_launches[bucket] = \
                 self.bucket_launches.get(bucket, 0) + 1
             launches += 1
         return ClassifyResult(classes=jnp.concatenate(classes),
-                              neighbors=jnp.concatenate(neighbors),
+                              aux=jnp.concatenate(auxes),
                               launches=launches)
+
+
+class KNNServeEngine(NonNeuralServeEngine):
+    """Batched kNN classification (the original Non-Neural serving facade,
+    now one ``NonNeuralServeEngine`` instantiation away from the other four
+    pipelines)."""
+
+    def __init__(self, model: _knn.KNNModel, k: int, *,
+                 max_batch: int = 1024):
+        assert 1 <= k <= model.A.shape[0], (k, model.A.shape)
+        self.model = model
+        self.k = int(k)
+        super().__init__(KNNEstimator.from_params(model, k=k),
+                         max_batch=max_batch)
 
 
 @dataclass

@@ -1,0 +1,64 @@
+"""Version-compat shims over jax's sharding surface.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``), but the pinned CI/container build is
+jax 0.4.37 where shard_map still lives in ``jax.experimental.shard_map`` with
+a ``check_rep`` kwarg and meshes carry no axis types.  Every call site goes
+through these two wrappers so the difference is absorbed in exactly one
+place.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x: meshes have no axis types
+    _AxisType = None
+
+HAS_AXIS_TYPE = _AxisType is not None
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    HAS_AXIS_TYPE
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(shape, axes, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if devices is None:
+        devices = jax.devices()[: math.prod(shape)]
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AxisType.Auto,) * len(axes),
+                             devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def _resolve_shard_map():
+    """The current shard_map callable plus the name of its replication-check
+    kwarg: ``check_vma`` post-rename, ``check_rep`` before — including the
+    mid-band versions where ``jax.shard_map`` exists at top level but still
+    takes ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    kwarg = "check_vma" if "check_vma" in params else "check_rep"
+    return fn, kwarg
+
+
+_SHARD_MAP, _CHECK_KWARG = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` if present, else the 0.4.x experimental one.
+
+    ``check_vma`` (the current name for the varying-mesh-axes/replication
+    check) maps onto the old ``check_rep`` flag where needed.
+    """
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KWARG: check_vma})

@@ -70,5 +70,8 @@ def test_shardmap_equals_vmap_cluster():
     res = subprocess.run(
         [sys.executable, "-c", PAYLOAD], capture_output=True, text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        # payload forces host (CPU) devices; pin JAX_PLATFORMS so containers
+        # that ship libtpu do not waste minutes probing for a TPU
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"})
     assert "SHARDMAP_OK" in res.stdout, (res.stdout[-800:], res.stderr[-2000:])

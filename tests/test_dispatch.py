@@ -1,0 +1,282 @@
+"""Kernel registry (kernels/dispatch.py): path selection per shape/VMEM
+budget, REPRO_BACKEND / explicit-path overrides, PrecisionPolicy costing,
+and the parity sweep proving dispatch-selected paths match the
+pre-refactor direct kernel calls for all five estimators."""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.core import gmm as GMM
+from repro.core import gnb as NB
+from repro.core import kmeans as KM
+from repro.core import knn as KNN
+from repro.core import random_forest as RF
+from repro.kernels import dispatch, ops, ref
+
+KEY = jax.random.PRNGKey(23)
+
+
+@pytest.fixture(autouse=True)
+def _default_selection(monkeypatch):
+    """These tests pin down the registry's *default* selection and the
+    bit-parity of the selected arm vs the pre-refactor direct calls; a
+    suite-wide REPRO_BACKEND (the ref CI matrix entry) must not leak in.
+    Tests that exercise the env override set it explicitly."""
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=240, d=21, n_class=3)
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_every_op_registers_a_ref_arm():
+    reg = dispatch.registered()
+    assert set(reg) >= {("knn", "distance_topk"),
+                        ("kmeans", "distance_argmin"), ("gnb", "scores"),
+                        ("gmm", "responsibilities"), ("rf", "forest_votes")}
+    for key, paths in reg.items():
+        assert "ref" in paths, key      # REPRO_BACKEND=ref must always work
+
+
+def test_selection_per_shape_and_budget():
+    kp = dispatch.resolve("knn", "distance_topk", N=4096, d=64, Q=16, k=8)
+    assert kp.name == "fused"
+    # a budget even the minimum stream block overflows -> blocked two-pass
+    kp = dispatch.resolve("knn", "distance_topk", N=4096, d=64, Q=16, k=8,
+                          budget=1024)
+    assert kp.name == "blocked"
+    assert dispatch.resolve("kmeans", "distance_argmin",
+                            N=999, d=8, K=4).name == "fused"
+    assert dispatch.resolve("kmeans", "distance_argmin", N=999, d=8, K=4,
+                            budget=64).name == "blocked"
+    # GNB: vertical split only pays at large d
+    assert dispatch.resolve("gnb", "scores", B=32, d=784, C=10).name == \
+        "blocked"
+    assert dispatch.resolve("gnb", "scores", B=32, d=21, C=3).name == "ref"
+    # integer-bound / accumulation-order-sensitive ops are ref-only
+    assert dispatch.resolve("gmm", "responsibilities").name == "ref"
+    assert dispatch.resolve("rf", "forest_votes").name == "ref"
+
+
+def test_env_override_and_precedence(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "ref")
+    assert dispatch.resolve("knn", "distance_topk",
+                            N=4096, d=64, Q=16, k=8).name == "ref"
+    # explicit path= wins over the environment
+    assert dispatch.resolve("knn", "distance_topk", path="fused",
+                            N=4096, d=64, Q=16, k=8).name == "fused"
+    # an env arm the op does not have falls back to the selector
+    monkeypatch.setenv(dispatch.ENV_VAR, "fused")
+    assert dispatch.resolve("gnb", "scores", B=32, d=21, C=3).name == "ref"
+    monkeypatch.delenv(dispatch.ENV_VAR)
+    with pytest.raises(KeyError):
+        dispatch.resolve("gnb", "scores", path="fused", B=32, d=21, C=3)
+    with pytest.raises(KeyError):
+        dispatch.resolve("nope", "distance_topk")
+    # a typo'd env value must fail loudly, not silently run the default arm
+    monkeypatch.setenv(dispatch.ENV_VAR, "oracle")
+    with pytest.raises(ValueError):
+        dispatch.resolve("knn", "distance_topk", N=100, d=8, Q=4, k=2)
+
+
+# ------------------------------------------------------------ parity: kNN
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k", [1, 5])
+@pytest.mark.parametrize("n,d,q", [(37, 5, 3), (100, 21, 8), (256, 33, 16)])
+def test_knn_dispatch_bitequal_to_direct_ops(n, d, q, k, dtype):
+    """The registry's selected path must be bit-equal to the pre-refactor
+    direct ops.distance_topk call (dtypes x ragged N x small k)."""
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n + k))
+    a = (jax.random.normal(k1, (n, d)) * 0.7).astype(dtype)
+    c = (jax.random.normal(k2, (q, d)) * 0.7).astype(dtype)
+    gv, gi = dispatch.distance_topk(a, c, k)
+    wv, wi = ops.distance_topk(a, c, k)         # pre-refactor direct call
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_knn_paths_agree_on_predictions(blobs):
+    X, y = blobs
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    Q = jnp.asarray(X[:24]) + 0.05
+    base, base_nbr = KNN.knn_classify_batch(model, Q, 4, path="fused")
+    for path in ("blocked", "ref"):
+        cls, nbr = KNN.knn_classify_batch(model, Q, 4, path=path)
+        np.testing.assert_array_equal(np.asarray(cls), np.asarray(base))
+        np.testing.assert_array_equal(np.asarray(nbr), np.asarray(base_nbr))
+
+
+# ------------------------------------------------------------ parity: KMeans
+
+
+@pytest.mark.parametrize("n,d,kc", [(100, 21, 3), (999, 8, 7)])
+def test_kmeans_dispatch_bitequal_to_direct_ops(n, d, kc):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, n))
+    a = jax.random.normal(k1, (n, d))
+    c = jax.random.normal(k2, (kc, d))
+    gv, gi = dispatch.distance_argmin(a, c)
+    wv, wi = ops.distance_argmin(a, c)          # pre-refactor direct call
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    rv, ri = dispatch.distance_argmin(a, c, path="ref")
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_kmeans_iteration_unchanged_by_refactor(blobs):
+    """kmeans_iteration (now registry-routed) must reproduce the direct
+    composition: ops.distance_argmin assignments + the OP3/OP4 update."""
+    X, _ = blobs
+    Xj = jnp.asarray(X)
+    cents = Xj[:3]
+    new_c, ids = KM.kmeans_iteration(Xj, cents)
+    _, want_ids = ops.distance_argmin(Xj, cents)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+    d = np.asarray(KM._pairwise_sq_dist(Xj, new_c))
+    np.testing.assert_array_equal(
+        np.asarray(KM.kmeans_iteration(Xj, new_c)[1]), d.argmin(axis=1))
+
+
+# ------------------------------------------------------------ parity: GNB
+
+
+@pytest.mark.parametrize("b,d,c", [(8, 21, 3), (13, 100, 5), (32, 200, 10)])
+def test_gnb_batch_kernel_matches_oracles(b, d, c):
+    """The batched Pallas kernel vs the jnp oracle and the single-query
+    kernel, across ragged d on both sides of the bd=128 chunk."""
+    ks = jax.random.split(jax.random.fold_in(KEY, b + d), 4)
+    X = jax.random.normal(ks[0], (b, d))
+    mu = jax.random.normal(ks[1], (c, d))
+    var = jax.nn.softplus(jax.random.normal(ks[2], (c, d))) + 0.1
+    log_prior = jax.nn.log_softmax(jax.random.normal(ks[3], (c,)))
+    got = ops.gnb_scores_batch(X, mu, var, log_prior)
+    want = ref.gnb_scores_batch(X, mu, var, log_prior)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    per_row = jnp.stack([ops.gnb_scores(x, mu, var, log_prior) for x in X])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(per_row),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gnb_classify_batch_matches_prerefactor_predictions(blobs):
+    X, y = blobs
+    m = NB.fit_gnb(jnp.asarray(X), jnp.asarray(y), 3)
+    want_cls = NB.gnb_predict_batch(m, X)       # pre-refactor path
+    _, want_scores = jax.vmap(lambda x: NB.gnb_decision(m, x))(jnp.asarray(X))
+    for path in ("blocked", "ref"):
+        cls, scores = NB.gnb_classify_batch(m, jnp.asarray(X), path=path)
+        np.testing.assert_array_equal(np.asarray(cls), np.asarray(want_cls))
+        # scores agree to accumulation-order tolerance (DESIGN.md §4)
+        np.testing.assert_allclose(np.asarray(scores),
+                                   np.asarray(want_scores),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ parity: GMM/RF
+
+
+def test_gmm_estimator_bitequal_to_prerefactor(blobs):
+    X, _ = blobs
+    est = E.GMMEstimator(n_components=3).fit(X)
+    preds, log_resp = est.predict_batch(X)
+    want = GMM.gmm_predict(est.params, jnp.asarray(X))   # pre-refactor
+    np.testing.assert_array_equal(np.asarray(preds), np.asarray(want))
+    want_lr, _ = GMM.gmm_e_step(jnp.asarray(X), est.params.mu,
+                                est.params.var, est.params.log_pi)
+    np.testing.assert_array_equal(np.asarray(log_resp), np.asarray(want_lr))
+
+
+def test_rf_estimator_bitequal_to_prerefactor(blobs):
+    X, y = blobs
+    est = E.RandomForestEstimator(n_trees=16, max_depth=6).fit(X, y)
+    preds, votes = est.predict_batch(X[:50])
+    want = RF.forest_predict_batch(est.params, jnp.asarray(X[:50]))
+    np.testing.assert_array_equal(np.asarray(preds), np.asarray(want))
+    _, want_votes = RF.forest_predict(est.params, jnp.asarray(X[0]))
+    np.testing.assert_array_equal(np.asarray(votes[0]),
+                                  np.asarray(want_votes))
+    assert int(jnp.sum(votes[0])) == 16
+
+
+# ------------------------------------------------------------ estimators
+
+
+def test_knn_estimator_bitequal_to_prerefactor(blobs):
+    X, y = blobs
+    est = E.KNNEstimator(k=4).fit(X, y)
+    preds, nbrs = est.predict_batch(X[:40])
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    want_cls, want_nbr = KNN.knn_classify_batch(model, jnp.asarray(X[:40]), 4)
+    np.testing.assert_array_equal(np.asarray(preds), np.asarray(want_cls))
+    np.testing.assert_array_equal(np.asarray(nbrs), np.asarray(want_nbr))
+
+
+def test_kmeans_estimator_assignments_consistent(blobs):
+    X, _ = blobs
+    est = E.KMeansEstimator(n_clusters=3).fit(X)
+    ids, dist = est.predict_batch(X)
+    d = np.asarray(KM._pairwise_sq_dist(jnp.asarray(X),
+                                        est.params.centroids))
+    np.testing.assert_array_equal(np.asarray(ids), d.argmin(axis=1))
+    np.testing.assert_allclose(np.asarray(dist), d.min(axis=1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_estimator_single_query_matches_batch(blobs):
+    X, y = blobs
+    for algo in E.ESTIMATORS:
+        est = E.make_fitted(algo, X, y, n_groups=3)
+        pred, aux = est.predict(X[7])
+        preds, auxes = est.predict_batch(X[6:9])
+        assert int(pred) == int(preds[1]), algo
+        np.testing.assert_array_equal(np.asarray(aux), np.asarray(auxes[1]))
+
+
+def test_make_estimator_unknown_raises():
+    with pytest.raises(KeyError):
+        E.make_estimator("svm2")
+    with pytest.raises(ValueError):
+        E.KNNEstimator(k=4).params
+
+
+# ------------------------------------------------------------ policy
+
+
+def test_precision_policy_cast_and_costing():
+    pol = dispatch.get_policy("bf16@libgcc")
+    assert pol.cost_backend == "libgcc"
+    assert pol.cast(jnp.ones((3,), jnp.float32)).dtype == jnp.bfloat16
+    assert pol.cast(jnp.ones((3,), jnp.int32)).dtype == jnp.int32
+    for algo in ("knn", "kmeans", "gnb", "gmm", "rf"):
+        cyc = {b: dispatch.get_policy(f"fp32@{b}").estimated_cycles(algo)
+               for b in ("libgcc", "rvfplib", "fpu")}
+        assert cyc["libgcc"] > cyc["fpu"] > 0, (algo, cyc)
+        # RF is the paper's low-FLOP-intensity outlier: the soft-float
+        # penalty must be far below the FP-heavy kernels' (§5.2)
+        if algo != "rf":
+            assert cyc["libgcc"] / cyc["fpu"] > 10
+    rf = dispatch.get_policy("fp32@libgcc")
+    assert rf.estimated_cycles("rf") / \
+        dispatch.get_policy("fp32@fpu").estimated_cycles("rf") < 10
+
+
+def test_bf16_policy_threads_through_estimator(blobs):
+    X, y = blobs
+    est = E.KNNEstimator(k=4, policy=dispatch.get_policy("bf16")).fit(X, y)
+    assert est.params.A.dtype == jnp.bfloat16
+    assert est.params.labels.dtype == jnp.int32
+    preds, _ = est.predict_batch(X[:16])
+    assert float(jnp.mean(preds == jnp.asarray(y[:16]))) > 0.9

@@ -47,7 +47,10 @@ def test_build_cell_compiles_all_kinds():
     res = subprocess.run(
         [sys.executable, "-c", PAYLOAD], capture_output=True, text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        # payload forces host (CPU) devices; pin JAX_PLATFORMS so containers
+        # that ship libtpu do not waste minutes probing for a TPU
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"})
     for kind in ("train", "decode", "prefill"):
         assert f"CELL_{kind}_OK" in res.stdout, \
             (kind, res.stdout[-500:], res.stderr[-2000:])

@@ -1,0 +1,118 @@
+"""NonNeuralServeEngine: every registered estimator served through the same
+power-of-two bucket batching, with per-algorithm bucket-routing accounting
+and bit-equality against the estimator's direct batch path."""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.core import knn as KNN
+from repro.kernels import dispatch
+from repro.serving import KNNServeEngine, NonNeuralServeEngine
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=240, d=21, n_class=3)
+
+
+def _fit(algo, X, y):
+    return E.make_fitted(algo, X, y, n_groups=3)
+
+
+@pytest.mark.parametrize("algo", sorted(E.ESTIMATORS))
+def test_bucket_routing_matches_direct_batch(algo, blobs):
+    """100 queries through max_batch=64 -> two launches in the 64 bucket,
+    results identical to one direct predict_batch call."""
+    X, y = blobs
+    est = _fit(algo, X, y)
+    eng = NonNeuralServeEngine(est, max_batch=64)
+    res = eng.classify(X[:100])
+    assert res.launches == 2
+    assert eng.bucket_launches == {64: 2}      # 36 padded into the 64s
+    want_cls, want_aux = est.predict_batch(X[:100])
+    np.testing.assert_array_equal(np.asarray(res.classes),
+                                  np.asarray(want_cls))
+    if jnp.issubdtype(res.aux.dtype, jnp.floating):
+        # float evidence (distances/scores): batch padding changes the
+        # XLA matmul tiling, so accumulation order may differ per bucket
+        np.testing.assert_allclose(np.asarray(res.aux),
+                                   np.asarray(want_aux),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(res.aux),
+                                      np.asarray(want_aux))
+
+    res2 = eng.classify(X[:3])                 # bucket 4, fresh compile
+    assert eng.bucket_launches[4] == 1
+    np.testing.assert_array_equal(
+        np.asarray(res2.classes),
+        np.asarray(est.predict_batch(X[:3])[0]))
+
+
+def test_empty_batch(blobs):
+    """Zero queries return aux with the per-algorithm trailing shape and
+    dtype — e.g. the kNN back-compat (0, k) int32 neighbours."""
+    X, y = blobs
+    want = {"knn": ((0, 4), jnp.int32), "kmeans": ((0,), jnp.float32),
+            "gnb": ((0, 3), jnp.float32), "gmm": ((0, 3), jnp.float32),
+            "rf": ((0, 3), jnp.int32)}
+    for algo, (shape, dtype) in want.items():
+        eng = NonNeuralServeEngine(_fit(algo, X, y), max_batch=32)
+        res = eng.classify(X[:0])
+        assert res.classes.shape == (0,) and res.launches == 0
+        assert res.aux.shape == shape and res.aux.dtype == dtype, algo
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    res = KNNServeEngine(model, k=4).classify(X[:0])
+    assert res.neighbors.shape == (0, 4) and res.neighbors.dtype == jnp.int32
+
+
+def test_unfitted_estimator_rejected():
+    with pytest.raises(AssertionError):
+        NonNeuralServeEngine(E.GNBEstimator(n_class=3))
+
+
+def test_knn_engine_backcompat_facade(blobs):
+    """KNNServeEngine keeps its (model, k) signature and .neighbors."""
+    X, y = blobs
+    model = KNN.KNNModel(A=jnp.asarray(X), labels=jnp.asarray(y), n_class=3)
+    eng = KNNServeEngine(model, k=4, max_batch=64)
+    assert eng.algorithm == "knn" and eng.k == 4
+    res = eng.classify(X[:20])
+    assert res.neighbors.shape == (20, 4)
+    np.testing.assert_array_equal(np.asarray(res.neighbors),
+                                  np.asarray(res.aux))
+    want_cls, _ = KNN.knn_classify_batch(model, jnp.asarray(X[:20]), 4)
+    np.testing.assert_array_equal(np.asarray(res.classes),
+                                  np.asarray(want_cls))
+
+
+def test_ref_backend_serving_agrees(blobs, monkeypatch):
+    """REPRO_BACKEND=ref serves every algorithm on the oracle arms with the
+    same predictions (the second CI matrix entry's contract)."""
+    X, y = blobs
+    for algo in sorted(E.ESTIMATORS):
+        est = _fit(algo, X, y)
+        monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+        want = NonNeuralServeEngine(est, max_batch=32).classify(X[:32])
+        monkeypatch.setenv(dispatch.ENV_VAR, "ref")
+        got = NonNeuralServeEngine(est, max_batch=32).classify(X[:32])
+        monkeypatch.delenv(dispatch.ENV_VAR)
+        np.testing.assert_array_equal(np.asarray(got.classes),
+                                      np.asarray(want.classes), err_msg=algo)
+
+
+def test_bf16_policy_serving(blobs):
+    X, y = blobs
+    est = E.GNBEstimator(policy=dispatch.get_policy("bf16")).fit(X, y)
+    eng = NonNeuralServeEngine(est, max_batch=32)
+    res = eng.classify(X[:64])
+    assert float(jnp.mean(res.classes == jnp.asarray(y[:64]))) > 0.9
+    assert res.aux.dtype == jnp.float32        # scores accumulate in f32

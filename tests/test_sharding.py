@@ -127,6 +127,8 @@ def test_tiny_mesh_compile_subprocess():
     """)
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=300,
+                         # payload forces host (CPU) devices; pin JAX_PLATFORMS so containers
+                         # that ship libtpu do not waste minutes probing for a TPU
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "TINY_MESH_OK" in res.stdout, res.stderr[-2000:]
