@@ -98,6 +98,7 @@ def run(csv_rows: list, quick: bool = False):
                 path = _hot_path(algo, est, bucket, d)
                 rec = {"algorithm": algo, "policy": pname, "bucket": bucket,
                        "path": path, "us_per_query": us_q,
+                       "shards": engine.n_shards,
                        "analytic_cycles": cycles}
                 results.append(rec)
                 print(f"{algo:7s} {pname:7s} {bucket:6d} {path:8s} "

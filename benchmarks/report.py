@@ -19,6 +19,50 @@ BENCH_FUSED_TOPK = Path(__file__).resolve().parents[1] / \
     "BENCH_fused_topk.json"
 BENCH_ESTIMATORS = Path(__file__).resolve().parents[1] / \
     "BENCH_estimators.json"
+BENCH_SHARDED = Path(__file__).resolve().parents[1] / \
+    "BENCH_sharded.json"
+
+# Required keys per BENCH accumulator: every entry must carry the
+# envelope, every result record the per-kind keys.  The trajectory files
+# are append-only across many CI runs — a malformed entry must fail
+# LOUDLY at load instead of silently skewing the tables built from them.
+# (Keys added later — e.g. "shards" on estimator records — are asserted
+# for NEW entries by CI, not retroactively required of old ones.)
+_ENTRY_KEYS = ("timestamp", "backend", "results")
+_RESULT_KEYS = {
+    "estimators": ("algorithm", "policy", "bucket", "path", "us_per_query"),
+    "fused_topk": ("shape", "fused", "two_pass", "speedup"),
+    "sharded": ("algorithm", "shards", "us_per_query_1shard",
+                "us_per_query_8shard", "measured_speedup", "amdahl_bound"),
+}
+
+
+def load_bench(path: Path, kind: str) -> dict:
+    """Load + schema-check a BENCH_*.json accumulator.
+
+    Raises ValueError naming the offending entry/record on corrupt JSON,
+    a missing ``entries`` list, or records missing required keys.
+    """
+    required = _RESULT_KEYS[kind]
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path.name}: corrupt JSON ({e})") from None
+    entries = data.get("entries")
+    if not isinstance(entries, list):
+        raise ValueError(f"{path.name}: no 'entries' list")
+    for i, entry in enumerate(entries):
+        missing = [k for k in _ENTRY_KEYS if k not in entry]
+        if missing:
+            raise ValueError(f"{path.name}: entry {i} missing {missing}")
+        if not isinstance(entry["results"], list):
+            raise ValueError(f"{path.name}: entry {i} 'results' not a list")
+        for j, rec in enumerate(entry["results"]):
+            missing = [k for k in required if k not in rec]
+            if missing:
+                raise ValueError(f"{path.name}: entry {i} result {j} "
+                                 f"missing {missing}")
+    return data
 
 
 def fmt_bytes(b: float) -> str:
@@ -96,22 +140,19 @@ def perf_compare_table(cells, tags) -> str:
     return "\n".join(lines)
 
 
-def _append_entry(results, path: Path) -> dict:
+def _append_entry(results, path: Path, kind: str) -> dict:
     """Append one timestamped measurement entry to a BENCH_*.json
-    accumulator (tolerates a missing or corrupt file)."""
+    accumulator.  An existing file is schema-checked first — silently
+    resetting a corrupt trajectory would drop history and skew every
+    report built on it."""
     import time as _time
     entry = {
         "timestamp": _time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": _backend_name(),
         "results": results,
     }
-    data = {"entries": []}
-    if path.exists():
-        try:
-            data = json.loads(path.read_text())
-        except json.JSONDecodeError:
-            pass
-    data.setdefault("entries", []).append(entry)
+    data = load_bench(path, kind) if path.exists() else {"entries": []}
+    data["entries"].append(entry)
     path.write_text(json.dumps(data, indent=2) + "\n")
     return entry
 
@@ -120,31 +161,55 @@ def write_fused_entry(results, path: Path = BENCH_FUSED_TOPK) -> dict:
     """Append one fused-vs-two-pass A/B measurement (latency + HLO
     bytes-accessed per shape) to BENCH_fused_topk.json so the perf
     trajectory accumulates across runs."""
-    return _append_entry(results, path)
+    return _append_entry(results, path, "fused_topk")
 
 
 def write_estimators_entry(results, path: Path = BENCH_ESTIMATORS) -> dict:
     """Append one algorithm x backend x bucket serving sweep (unified
     Estimator API through NonNeuralServeEngine) to BENCH_estimators.json."""
-    return _append_entry(results, path)
+    return _append_entry(results, path, "estimators")
+
+
+def write_sharded_entry(results, path: Path = BENCH_SHARDED) -> dict:
+    """Append one 1-vs-8-shard serving speedup measurement (next to the
+    Amdahl bound) to BENCH_sharded.json."""
+    return _append_entry(results, path, "sharded")
 
 
 def estimators_table(path: Path = BENCH_ESTIMATORS) -> str:
     if not path.exists():
         return "(no BENCH_estimators.json yet — run benchmarks/run.py)"
-    data = json.loads(path.read_text())
-    lines = ["| when | algo | policy | bucket | path | us/query | "
+    data = load_bench(path, "estimators")
+    lines = ["| when | algo | policy | bucket | shards | path | us/query | "
              "libgcc/fpu penalty |",
-             "|---|---|---|---|---|---|---|"]
-    for e in data.get("entries", []):
-        for r in e.get("results", []):
+             "|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
             cyc = r.get("analytic_cycles", {})
             pen = (cyc.get("libgcc", 0.0) / cyc["fpu"]
                    if cyc.get("fpu") else float("nan"))
             lines.append(
                 f"| {e['timestamp']} | {r['algorithm']} | {r['policy']} | "
-                f"{r['bucket']} | {r['path']} | "
+                f"{r['bucket']} | {r.get('shards', 1)} | {r['path']} | "
                 f"{r['us_per_query']:.1f} | {pen:.1f}x |")
+    return "\n".join(lines)
+
+
+def sharded_table(path: Path = BENCH_SHARDED) -> str:
+    if not path.exists():
+        return "(no BENCH_sharded.json yet — run benchmarks/run.py)"
+    data = load_bench(path, "sharded")
+    lines = ["| when | algo | us/q 1-shard | us/q 8-shard | measured | "
+             "amdahl bound |",
+             "|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | "
+                f"{r['us_per_query_1shard']:.1f} | "
+                f"{r['us_per_query_8shard']:.1f} | "
+                f"{r['measured_speedup']:.2f}x | "
+                f"{r['amdahl_bound']:.2f}x |")
     return "\n".join(lines)
 
 
@@ -159,12 +224,12 @@ def _backend_name() -> str:
 def fused_topk_table(path: Path = BENCH_FUSED_TOPK) -> str:
     if not path.exists():
         return "(no BENCH_fused_topk.json yet — run benchmarks/run.py)"
-    data = json.loads(path.read_text())
+    data = load_bench(path, "fused_topk")
     lines = ["| when | (N,d,Q,k) | fused_us | two_pass_us | speedup | "
              "fused HLO bytes | two_pass HLO bytes |",
              "|---|---|---|---|---|---|---|"]
-    for e in data.get("entries", []):
-        for r in e.get("results", []):
+    for e in data["entries"]:
+        for r in e["results"]:
             lines.append(
                 f"| {e['timestamp']} | {tuple(r['shape'])} | "
                 f"{r['fused']['us']:.0f} | {r['two_pass']['us']:.0f} | "
@@ -186,7 +251,17 @@ def main():
                     help="run the estimator serving sweep (algorithm x "
                          "backend x bucket) and append an entry to "
                          "BENCH_estimators.json")
+    ap.add_argument("--sharded", action="store_true",
+                    help="measure the 1-vs-8-shard serving speedup "
+                         "(forced-8-device subprocess) and append an "
+                         "entry to BENCH_sharded.json")
     args = ap.parse_args()
+    if args.sharded:
+        from benchmarks.parallel_speedup import run_sharded
+        write_sharded_entry(run_sharded([], quick=True))
+        print("\n### Sharded serving speedup\n")
+        print(sharded_table())
+        return
     if args.fused_topk:
         from benchmarks.parallel_speedup import run_fused_ab
         write_fused_entry(run_fused_ab([], quick=True))

@@ -35,6 +35,8 @@ def main() -> None:
     report.write_fused_entry(fused)             # accumulate BENCH json
     est = estimator_sweep.run(csv_rows, quick=args.quick)
     report.write_estimators_entry(est)          # algorithm x backend x bucket
+    sharded = parallel_speedup.run_sharded(csv_rows, quick=args.quick)
+    report.write_sharded_entry(sharded)         # 1-vs-8-shard vs Amdahl
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

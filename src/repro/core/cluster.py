@@ -4,21 +4,42 @@ The VirtualCluster (reshape+vmap) path in each algorithm module reproduces
 the 8-core PULP cluster; these wrappers run the SAME chunk-local code over a
 real mesh axis — the paper's schemes scaled from 8 cores to 256/512 chips.
 Tests prove bit-compatibility between the two paths.
+
+Two layers live here (DESIGN.md §5):
+
+  * single-query Fig. 5–8 ports (``*_shardmap``) — the literal paper
+    pipelines over a mesh axis, kept for paper-fidelity tests;
+  * the batched sharded fit/serve layer (``*_batch_shardmap`` /
+    ``*_fit_shardmap``) behind ``Estimator.fit_sharded`` and the
+    ``NonNeuralServeEngine`` mesh path.  Serve-side sharding is exact
+    (per-row arithmetic is untouched by the partition: kNN merges
+    per-shard fused-kernel candidates, the other four shard the query
+    rows); fit-side K-Means/GNB/GMM merges are tolerance-bounded
+    (per-shard partial sums psum in a different association than the
+    single-device chunked accumulate).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.distribution import pad_to_multiple
 from repro.core.gnb import GNBModel, _log_gaussian
 from repro.core.knn import KNNModel, sq_distances
-from repro.core.kmeans import _pairwise_sq_dist
+from repro.core.kmeans import KMeansState, _pairwise_sq_dist
 from repro.core.topk import selection_topk_smallest
 from repro.sharding.compat import shard_map as _shard_map
+
+# padding rows for a sharded kNN reference set: large enough that padded
+# rows can never enter a top-k (squared distance >= ~1e34), small enough
+# that the ||p||^2 - 2 p.q + ||q||^2 expansion stays finite in fp32 (no
+# inf - inf = NaN) up to d ~ 3000 features
+_FAR = 1e17
 
 
 def knn_classify_shardmap(model: KNNModel, x, k: int, mesh: Mesh,
@@ -127,3 +148,352 @@ def forest_predict_shardmap(forest, x, mesh: Mesh, axis: str = "data"):
                     in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
                     out_specs=(P(), P()), check_vma=False)
     return fn(forest.feature, forest.threshold, forest.left, forest.right, x)
+
+
+# ---------------------------------------------------------------------------
+# Batched sharded serve — the op-level mesh arms behind kernels/dispatch.py
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(x, c: int, value=0.0):
+    """Pad axis 0 to a multiple of the shard count; returns (padded, n)."""
+    return pad_to_multiple(x, c, axis=0, value=value)
+
+
+def distance_topk_shardmap(a, qs, k: int, mesh: Mesh, axis: str = "data", *,
+                           policy=None, path: Optional[str] = None):
+    """Fig. 6 OP1+OP2 over a sharded reference set, for a QUERY BATCH.
+
+    ``a`` (N, d) is row-sharded; every shard runs the registry-selected
+    fused distance→top-k kernel over its chunk for all Q queries, then the
+    c·k candidates are all-gathered and merged (OP3) — the batched
+    generalisation of ``knn_classify_shardmap``'s candidate merge.  Output
+    is bit-equal to the single-device ``dispatch.distance_topk``: per-row
+    distances are untouched by the row partition and the merge preserves
+    the global stable (smallest-index) tie order, because candidates are
+    laid out shard-major and shard blocks are contiguous row ranges.
+    Returns (values (Q, k), indices (Q, k)), replicated.
+    """
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    N = a.shape[0]
+    assert k <= N, (k, N)
+    ap, _ = _pad_rows(a, c, value=_FAR)
+    chunk_len = ap.shape[0] // c
+    # a shard can contribute at most its whole chunk, so clamping the
+    # local candidate count is lossless: c*kl >= N >= k candidates survive
+    kl = min(k, chunk_len)
+
+    def local(a_chunk, q_all):
+        core = jax.lax.axis_index(axis)
+        lv, li = dispatch.distance_topk(a_chunk, q_all, kl, path=path,
+                                        policy=policy)        # (Q, kl) local
+        li = li + core * chunk_len
+        all_v = jax.lax.all_gather(lv, axis)                  # (c, Q, kl)
+        all_i = jax.lax.all_gather(li, axis)
+        cand_v = jnp.moveaxis(all_v, 0, 1).reshape(lv.shape[0], c * kl)
+        cand_i = jnp.moveaxis(all_i, 0, 1).reshape(lv.shape[0], c * kl)
+        gv, gp = jax.vmap(lambda row: selection_topk_smallest(row, k))(
+            cand_v)                                           # OP3 merge
+        return gv, jnp.take_along_axis(cand_i, gp, axis=1)
+
+    fn = _shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
+                    out_specs=(P(), P()), check_vma=False)
+    return fn(ap, qs)
+
+
+def _row_sharded(local, mesh: Mesh, axis: str, n_rep: int, n_out: int):
+    """shard_map helper: first arg row-sharded, ``n_rep`` replicated params,
+    ``n_out`` row-sharded outputs."""
+    return _shard_map(local, mesh=mesh,
+                      in_specs=(P(axis),) + (P(),) * n_rep,
+                      out_specs=(P(axis),) * n_out if n_out > 1 else P(axis),
+                      check_vma=False)
+
+
+def distance_argmin_shardmap(a, centroids, mesh: Mesh, axis: str = "data", *,
+                             policy=None, path: Optional[str] = None):
+    """Fig. 7 OP1+OP2 with the data rows sharded and centroids replicated.
+    Per-row arithmetic is identical to the single-device kernel, so outputs
+    are exact.  Returns (min sq-dist (N,), nearest id (N,)), row-sharded
+    semantics hidden behind padding: accepts ragged N."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    ap, N = _pad_rows(a, c)
+
+    def local(a_chunk, cent):
+        return dispatch.distance_argmin(a_chunk, cent, path=path,
+                                        policy=policy)
+
+    fn = _row_sharded(local, mesh, axis, n_rep=1, n_out=2)
+    dist, ids = fn(ap, centroids)
+    return dist[:N], ids[:N]
+
+
+def gnb_scores_shardmap(X, mu, var, log_prior, mesh: Mesh,
+                        axis: str = "data", *, policy=None,
+                        path: Optional[str] = None):
+    """Fig. 5 OP1+OP2 for a query batch with the QUERY rows sharded (the
+    single-query ``gnb_decision_shardmap`` shards features instead — that
+    is the paper-literal vertical split; serving shards the independent
+    axis).  Returns (B, C) joint log-likelihood, exact per row."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    Xp, B = _pad_rows(X, c)
+
+    def local(x_chunk, mu_r, var_r, lp):
+        return dispatch.gnb_scores(x_chunk, mu_r, var_r, lp, path=path,
+                                   policy=policy)
+
+    fn = _row_sharded(local, mesh, axis, n_rep=3, n_out=1)
+    return fn(Xp, mu, var, log_prior)[:B]
+
+
+def gmm_responsibilities_shardmap(mu, var, log_pi, X, mesh: Mesh,
+                                  axis: str = "data", *, policy=None,
+                                  path: Optional[str] = None,
+                                  n_cores: int = 8):
+    """GMM E-step with query rows sharded.  Returns (log_resp (B, k),
+    None) — the mean log-likelihood slot of the single-device op is not
+    computed here: the registry arm's mean is over ALL its chunk rows
+    (padding included) so the global mean would need a second log-joint
+    pass, and no sharded caller consumes it (serving discards it, the
+    sharded fit uses ``_gmm_loglik_sharded``)."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    Xp, B = _pad_rows(X, c)
+
+    def local(x_chunk, mu_r, var_r, lp):
+        lr, _ = dispatch.gmm_responsibilities(mu_r, var_r, lp, x_chunk,
+                                              path=path, policy=policy,
+                                              n_cores=n_cores)
+        return lr
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(), P(), P()),
+                    out_specs=P(axis), check_vma=False)
+    return fn(Xp, mu, var, log_pi)[:B], None
+
+
+def _gmm_log_joint(x, mu, var, log_pi):
+    from repro.core.gmm import _log_gauss
+    return _log_gauss(x, mu, var) + log_pi[None]
+
+
+def forest_votes_shardmap(forest, X, mesh: Mesh, axis: str = "data", *,
+                          policy=None, path: Optional[str] = None,
+                          n_cores: int = 8):
+    """Fig. 8 for a query batch with the query rows sharded (the
+    single-query ``forest_predict_shardmap`` shards trees — serving shards
+    the independent batch axis; both are Independent-Tasks).  Returns
+    (classes (B,), votes (B, n_class)), exact per row."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    Xp, B = _pad_rows(X, c)
+
+    def local(x_chunk, feat, thr, left, right):
+        from repro.core.random_forest import Forest
+        f = Forest(feature=feat, threshold=thr, left=left, right=right,
+                   n_class=forest.n_class)
+        return dispatch.forest_votes(f, x_chunk, path=path, policy=policy,
+                                     n_cores=n_cores)
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(), P(), P(), P()),
+                    out_specs=(P(axis), P(axis)), check_vma=False)
+    cls, votes = fn(Xp, forest.feature, forest.threshold, forest.left,
+                    forest.right)
+    return cls[:B], votes[:B]
+
+
+def knn_classify_batch_shardmap(model: KNNModel, X, k: int, mesh: Mesh,
+                                axis: str = "data", *, policy=None,
+                                path: Optional[str] = None):
+    """Batched Fig. 6 with a shard-resident reference set: per-shard fused
+    distance→top-k, candidate merge, then the shared vote.  Bit-equal to
+    ``knn_classify_batch`` (see ``distance_topk_shardmap``)."""
+    from repro.core.knn import _vote
+
+    _, nbr_idx = distance_topk_shardmap(model.A, X, k, mesh, axis,
+                                        policy=policy, path=path)
+    classes = jax.vmap(lambda nb: _vote(model.labels, nb, model.n_class))(
+        nbr_idx)
+    return classes, nbr_idx
+
+
+# ---------------------------------------------------------------------------
+# Sharded fit — per-shard partial statistics, psum'd global updates
+# ---------------------------------------------------------------------------
+
+
+def kmeans_iteration_sharded(A, centroids, valid, mesh: Mesh,
+                             axis: str = "data"):
+    """One Lloyd iteration with data rows sharded: OP1/OP2 per-shard fused
+    distance→argmin, OP3 per-shard partial (sums, counts), OP4 psum — the
+    Fig. 7 schedule verbatim with cores → shards.  ``valid`` masks padded
+    rows out of the update.  Returns (new centroids (k, d) replicated,
+    assignments row-sharded)."""
+    from repro.kernels import dispatch
+
+    k = centroids.shape[0]
+
+    def local(a_chunk, v_chunk, cent):
+        _, ids = dispatch.distance_argmin(a_chunk, cent)      # OP1+OP2
+        onehot = jax.nn.one_hot(ids, k) * v_chunk[:, None]    # OP3 local
+        sums = jax.lax.psum(onehot.T @ a_chunk, axis)         # OP4 global
+        counts = jax.lax.psum(jnp.sum(onehot, axis=0), axis)
+        new_c = jnp.where(counts[:, None] > 0,
+                          sums / jnp.maximum(counts[:, None], 1.0), cent)
+        return new_c, ids
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P()),
+                    out_specs=(P(), P(axis)), check_vma=False)
+    return fn(A, valid, centroids)
+
+
+def kmeans_fit_shardmap(A, k: int, mesh: Mesh, axis: str = "data", *,
+                        threshold: float = 1e-4, max_iters: int = 100):
+    """Sharded Lloyd fit: the ``kmeans_fit`` loop with every iteration's
+    OP3/OP4 accumulate running as per-shard partial sums + psum.
+    Tolerance-bounded vs the single-device fit (the psum associates the
+    per-chunk sums differently).  Returns (KMeansState, assignments)."""
+    A = jnp.asarray(A)
+    c = mesh.shape[axis]
+    Ap, N = _pad_rows(A, c)
+    valid = (jnp.arange(Ap.shape[0]) < N).astype(A.dtype)
+
+    step = jax.jit(functools.partial(kmeans_iteration_sharded,
+                                     mesh=mesh, axis=axis))
+    cent = A[:k]
+    shift, n_iter = jnp.inf, 0
+    while float(shift) > threshold and n_iter < max_iters:
+        new_c, _ = step(Ap, cent, valid)
+        shift = jnp.max(jnp.linalg.norm(new_c - cent, axis=1))
+        cent, n_iter = new_c, n_iter + 1
+    _, ids = step(Ap, cent, valid)
+    state = KMeansState(centroids=cent, shift=jnp.asarray(shift),
+                        n_iter=jnp.asarray(n_iter, jnp.int32))
+    return state, ids[:N]
+
+
+def gnb_fit_shardmap(X, y, n_class: int, mesh: Mesh, axis: str = "data", *,
+                     var_smoothing: float = 1e-6) -> GNBModel:
+    """Sharded GNB fit: each shard accumulates per-class moment partials
+    (counts, Σx, Σx²) over its rows — the Fig. 7 OP3 accumulate applied to
+    sufficient statistics — and one psum merges them into the M-step.
+    Tolerance-bounded vs ``fit_gnb`` (sum association; the smoothing term
+    uses E[x²]−E[x]² instead of jnp.var)."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, jnp.int32)
+    c = mesh.shape[axis]
+    Xp, N = _pad_rows(X, c)
+    yp, _ = _pad_rows(y, c)
+    valid = (jnp.arange(Xp.shape[0]) < N).astype(X.dtype)
+
+    def local(x_chunk, y_chunk, v_chunk):
+        onehot = jax.nn.one_hot(y_chunk, n_class) * v_chunk[:, None]
+        counts = jax.lax.psum(jnp.sum(onehot, axis=0), axis)       # (C,)
+        s1 = jax.lax.psum(onehot.T @ x_chunk, axis)                # (C, d)
+        s2 = jax.lax.psum(onehot.T @ (x_chunk * x_chunk), axis)
+        # global per-feature moments for the shared smoothing scale
+        f1 = jax.lax.psum(jnp.sum(x_chunk * v_chunk[:, None], axis=0), axis)
+        f2 = jax.lax.psum(
+            jnp.sum(x_chunk * x_chunk * v_chunk[:, None], axis=0), axis)
+        mu = s1 / counts[:, None]
+        var = s2 / counts[:, None] - mu ** 2
+        gvar = f2 / N - (f1 / N) ** 2
+        var = var + var_smoothing * jnp.max(gvar)
+        log_prior = jnp.log(counts / N)
+        return mu, var, log_prior
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(axis)),
+                    out_specs=(P(), P(), P()), check_vma=False)
+    mu, var, log_prior = fn(Xp, yp, valid)
+    return GNBModel(mu=mu, var=var, log_prior=log_prior)
+
+
+def _gmm_em_iteration_sharded(A, valid, mu, var, log_pi, N: int,
+                              mesh: Mesh, axis: str = "data", *,
+                              var_floor: float = 1e-6):
+    """One sharded EM iteration: per-shard E-step (rows independent), then
+    the M-step's soft-moment accumulate as per-shard partials + psum
+    (Fig. 7 OP3/OP4 with responsibilities).  Returns new (mu, var, log_pi),
+    replicated."""
+
+    def local(a_chunk, v_chunk, mu_r, var_r, lp):
+        joint = _gmm_log_joint(a_chunk, mu_r, var_r, lp)
+        lr = joint - jax.nn.logsumexp(joint, axis=1, keepdims=True)
+        r = jnp.exp(lr) * v_chunk[:, None]
+        nk = jax.lax.psum(jnp.sum(r, axis=0), axis)                 # (k,)
+        s1 = jax.lax.psum(r.T @ a_chunk, axis)                      # (k, d)
+        s2 = jax.lax.psum(r.T @ (a_chunk * a_chunk), axis)
+        safe = jnp.maximum(nk[:, None], 1e-9)
+        mu2 = s1 / safe
+        var2 = jnp.maximum(s2 / safe - mu2 * mu2, var_floor)
+        log_pi2 = jnp.log(jnp.maximum(nk / N, 1e-12))
+        return mu2, var2, log_pi2
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(), P(), P()),
+                    out_specs=(P(), P(), P()), check_vma=False)
+    return fn(A, valid, mu, var, log_pi)
+
+
+def _gmm_loglik_sharded(A, valid, mu, var, log_pi, N: int, mesh: Mesh,
+                        axis: str = "data"):
+    """Mean data log-likelihood over the real rows, psum'd."""
+
+    def local(a_chunk, v_chunk, mu_r, var_r, lp):
+        ll = jax.nn.logsumexp(_gmm_log_joint(a_chunk, mu_r, var_r, lp),
+                              axis=1)
+        return jax.lax.psum(jnp.sum(ll * v_chunk), axis)
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(), P(), P()),
+                    out_specs=P(), check_vma=False)
+    return fn(A, valid, mu, var, log_pi) / N
+
+
+def gmm_fit_shardmap(A, k: int, mesh: Mesh, axis: str = "data", *,
+                     max_iters: int = 100, tol: float = 1e-4):
+    """Sharded EM fit mirroring ``gmm_fit``'s loop: warm-up iteration, then
+    iterate while the mean log-likelihood improves by > tol.  E-step rows
+    are exact; the M-step moment psum is tolerance-bounded.  Returns
+    (GMMState, responsibilities (N, k))."""
+    from repro.core.gmm import GMMState
+
+    A = jnp.asarray(A)
+    c = mesh.shape[axis]
+    Ap, N = _pad_rows(A, c)
+    valid = (jnp.arange(Ap.shape[0]) < N).astype(A.dtype)
+    d = A.shape[1]
+
+    em = jax.jit(functools.partial(_gmm_em_iteration_sharded, N=N,
+                                   mesh=mesh, axis=axis))
+    ll_of = jax.jit(functools.partial(_gmm_loglik_sharded, N=N,
+                                      mesh=mesh, axis=axis))
+
+    mu, var = A[:k], jnp.ones((k, d), A.dtype)
+    log_pi = jnp.full((k,), -math.log(k), A.dtype)
+    prev_ll, ll = -jnp.inf, -jnp.inf
+    n_iter = 0
+    while n_iter < max_iters:
+        mu, var, log_pi = em(Ap, valid, mu, var, log_pi)
+        prev_ll, ll = ll, ll_of(Ap, valid, mu, var, log_pi)
+        n_iter += 1
+        # mirror gmm_fit's cond: stop once the improvement is <= tol (the
+        # warm-up iteration always runs; NaN improvement also stops)
+        if n_iter > 1 and not (float(ll - prev_ll) > tol):
+            break
+    lr, _ = gmm_responsibilities_shardmap(mu, var, log_pi, A, mesh, axis)
+    state = GMMState(mu=mu, var=var, log_pi=log_pi,
+                     log_lik=jnp.asarray(ll),
+                     n_iter=jnp.asarray(n_iter, jnp.int32))
+    return state, jnp.exp(lr)

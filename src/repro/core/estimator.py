@@ -23,6 +23,15 @@ executable.
 ``aux`` is the algorithm's natural per-query evidence: kNN neighbour
 indices, K-Means assignment distances, GNB joint log-likelihoods, GMM
 log-responsibilities, RF vote counts.
+
+Sharded execution (DESIGN.md §5): ``fit_sharded(X, y, mesh=...)`` runs the
+fit with the data rows partitioned over a mesh axis — per-shard partial
+statistics psum'd into the global update (K-Means Lloyd, GNB moments, GMM
+EM), a shard-resident reference set for kNN, and a tree-parallel block fit
+for RF — and ``predict_batch_sharded_fn(mesh)`` is the serving image: the
+same pure ``(params, X) -> (preds, aux)`` contract with each batch
+partitioned over the data axis and per-shard fused-kernel outputs merged
+(``kernels/dispatch.py``'s mesh-aware arm).
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import cluster as _cluster
 from repro.core import gmm as _gmm
 from repro.core import gnb as _gnb
 from repro.core import kmeans as _kmeans
@@ -48,6 +58,9 @@ class Estimator(Protocol):
 
     def fit(self, X, y=None) -> "Estimator": ...
 
+    def fit_sharded(self, X, y=None, *, mesh, axis: str = "data"
+                    ) -> "Estimator": ...
+
     @property
     def params(self) -> NamedTuple: ...
 
@@ -55,6 +68,9 @@ class Estimator(Protocol):
     def fitted(self) -> bool: ...
 
     def predict_batch_fn(self) -> Callable: ...
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable: ...
 
     def predict_batch(self, X) -> Tuple[Any, Any]: ...
 
@@ -74,6 +90,8 @@ class _EstimatorBase:
         self.policy = policy
         self.path = path
         self._params: Optional[NamedTuple] = None
+        self.mesh = None           # set by fit_sharded
+        self.mesh_axis = "data"
 
     @property
     def params(self) -> NamedTuple:
@@ -102,6 +120,36 @@ class _EstimatorBase:
         empty request batch."""
         raise NotImplementedError
 
+    def fit_sharded(self, X, y=None, *, mesh, axis: str = "data"
+                    ) -> "Estimator":
+        """Data-parallel fit over ``mesh``'s ``axis`` (DESIGN.md §5).
+
+        Every subclass implements ``_fit_sharded``; the base records the
+        mesh so ``predict_batch_sharded_fn()`` can default to it.
+        """
+        self._fit_sharded(X, y, mesh, axis)
+        self.mesh, self.mesh_axis = mesh, axis
+        return self
+
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        raise NotImplementedError
+
+    def _resolve_mesh(self, mesh, axis):
+        mesh = mesh if mesh is not None else self.mesh
+        axis = axis if axis is not None else self.mesh_axis
+        assert mesh is not None, \
+            f"{type(self).__name__}: fit_sharded first or pass mesh="
+        return mesh, axis
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        """Pure ``(params, X) -> (preds, aux)`` over a sharded data axis:
+        the batch rows are partitioned across shards (kNN instead shards
+        its reference set and merges candidates) and the merged result is
+        exactly the single-device ``predict_batch_fn()`` output.  Ragged
+        batch sizes are padded to the shard count and sliced back."""
+        raise NotImplementedError
+
 
 class KNNEstimator(_EstimatorBase):
     """Fig. 6 pipeline; hot path = ("knn", "distance_topk") in the registry.
@@ -124,6 +172,20 @@ class KNNEstimator(_EstimatorBase):
                                      n_class=n_class)
         return self
 
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        """kNN "training" is storing the reference set — the sharded fit
+        makes it SHARD-RESIDENT: padded to the shard count (with far-away
+        rows that can never enter a top-k) and device_put row-sharded, so
+        serving's shard_map never reshards the big array."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.fit(X, y)
+        c = mesh.shape[axis]
+        Ap, _ = _cluster._pad_rows(self._params.A, c, value=_cluster._FAR)
+        A_res = jax.device_put(Ap, NamedSharding(mesh, PartitionSpec(axis)))
+        self._params = self._params._replace(A=A_res)
+
     @classmethod
     def from_params(cls, model: _knn.KNNModel, k: int = 4,
                     **kw) -> "KNNEstimator":
@@ -145,6 +207,21 @@ class KNNEstimator(_EstimatorBase):
                                   n_class=n_class)
             return _knn.knn_classify_batch(model, X, k, policy=policy,
                                            path=path)
+
+        return fn
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        k, policy, path = self.k, self.policy, self.path
+        n_class = self.params.n_class
+
+        def fn(params: _knn.KNNModel, X):
+            X = policy.cast(X) if policy else X
+            model = _knn.KNNModel(A=params.A, labels=params.labels,
+                                  n_class=n_class)
+            return _cluster.knn_classify_batch_shardmap(
+                model, X, k, mesh, axis, policy=policy, path=path)
 
         return fn
 
@@ -178,6 +255,12 @@ class KMeansEstimator(_EstimatorBase):
         self._params = state._replace(centroids=self._cast(state.centroids))
         return self
 
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        state, _ = _cluster.kmeans_fit_shardmap(
+            jnp.asarray(X), self.n_clusters, mesh, axis,
+            threshold=self.threshold, max_iters=self.max_iters)
+        self._params = state._replace(centroids=self._cast(state.centroids))
+
     @classmethod
     def from_params(cls, state: _kmeans.KMeansState,
                     **kw) -> "KMeansEstimator":
@@ -192,6 +275,20 @@ class KMeansEstimator(_EstimatorBase):
             X = policy.cast(X) if policy else X
             dist, ids = dispatch.distance_argmin(X, params.centroids,
                                                  policy=policy, path=path)
+            return ids, dist
+
+        return fn
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        policy, path = self.policy, self.path
+        assign = dispatch.sharded("kmeans", "distance_argmin")
+
+        def fn(params: _kmeans.KMeansState, X):
+            X = policy.cast(X) if policy else X
+            dist, ids = assign(X, params.centroids, mesh=mesh, axis=axis,
+                               policy=policy, path=path)
             return ids, dist
 
         return fn
@@ -224,6 +321,17 @@ class GNBEstimator(_EstimatorBase):
                                      log_prior=model.log_prior)
         return self
 
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        assert y is not None, "GNB is supervised"
+        y = jnp.asarray(y, jnp.int32)
+        n_class = self.n_class or int(jnp.max(y)) + 1
+        model = _cluster.gnb_fit_shardmap(jnp.asarray(X), y, n_class, mesh,
+                                          axis,
+                                          var_smoothing=self.var_smoothing)
+        self._params = _gnb.GNBModel(mu=self._cast(model.mu),
+                                     var=self._cast(model.var),
+                                     log_prior=model.log_prior)
+
     @classmethod
     def from_params(cls, model: _gnb.GNBModel, **kw) -> "GNBEstimator":
         est = cls(n_class=model.mu.shape[0], **kw)
@@ -237,6 +345,21 @@ class GNBEstimator(_EstimatorBase):
             X = policy.cast(X) if policy else X
             return _gnb.gnb_classify_batch(params, X, policy=policy,
                                            path=path)
+
+        return fn
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        policy, path = self.policy, self.path
+        scores_of = dispatch.sharded("gnb", "scores")
+
+        def fn(params: _gnb.GNBModel, X):
+            X = policy.cast(X) if policy else X
+            scores = scores_of(X, params.mu, params.var, params.log_prior,
+                               mesh=mesh, axis=axis, policy=policy,
+                               path=path)
+            return jnp.argmax(scores, axis=1), scores
 
         return fn
 
@@ -270,6 +393,13 @@ class GMMEstimator(_EstimatorBase):
                                       var=self._cast(state.var))
         return self
 
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        state, _ = _cluster.gmm_fit_shardmap(
+            jnp.asarray(X), self.n_components, mesh, axis,
+            max_iters=self.max_iters, tol=self.tol)
+        self._params = state._replace(mu=self._cast(state.mu),
+                                      var=self._cast(state.var))
+
     @classmethod
     def from_params(cls, state: _gmm.GMMState, **kw) -> "GMMEstimator":
         est = cls(n_components=state.mu.shape[0], **kw)
@@ -283,6 +413,21 @@ class GMMEstimator(_EstimatorBase):
             X = policy.cast(X) if policy else X
             return _gmm.gmm_classify_batch(params, X, policy=policy,
                                            path=path, n_cores=n_cores)
+
+        return fn
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        policy, path, n_cores = self.policy, self.path, self.n_cores
+        resp_of = dispatch.sharded("gmm", "responsibilities")
+
+        def fn(params: _gmm.GMMState, X):
+            X = policy.cast(X) if policy else X
+            lr, _ = resp_of(params.mu, params.var, params.log_pi, X,
+                            mesh=mesh, axis=axis, policy=policy, path=path,
+                            n_cores=n_cores)
+            return jnp.argmax(lr, axis=1), lr
 
         return fn
 
@@ -319,6 +464,15 @@ class RandomForestEstimator(_EstimatorBase):
                                         seed=self.seed)
         return self
 
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        assert y is not None, "RF is supervised"
+        import numpy as np
+        n_class = self.n_class or int(np.max(np.asarray(y))) + 1
+        self._params = _rf.train_forest_sharded(
+            X, y, n_class, mesh.shape[axis], n_trees=self.n_trees,
+            max_depth=self.max_depth, min_samples=self.min_samples,
+            seed=self.seed)
+
     @classmethod
     def from_params(cls, forest: _rf.Forest,
                     **kw) -> "RandomForestEstimator":
@@ -338,6 +492,24 @@ class RandomForestEstimator(_EstimatorBase):
                                 n_class=n_class)
             return dispatch.forest_votes(forest, X, policy=policy,
                                          path=path, n_cores=n_cores)
+
+        return fn
+
+    def predict_batch_sharded_fn(self, mesh=None,
+                                 axis: Optional[str] = None) -> Callable:
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        policy, path, n_cores = self.policy, self.path, self.n_cores
+        n_class = self.params.n_class
+        votes_of = dispatch.sharded("rf", "forest_votes")
+
+        def fn(params: _rf.Forest, X):
+            X = policy.cast(X) if policy else X
+            forest = _rf.Forest(feature=params.feature,
+                                threshold=params.threshold,
+                                left=params.left, right=params.right,
+                                n_class=n_class)
+            return votes_of(forest, X, mesh=mesh, axis=axis, policy=policy,
+                            path=path, n_cores=n_cores)
 
         return fn
 
@@ -371,9 +543,15 @@ _GROUP_KWARG = {"kmeans": "n_clusters", "gmm": "n_components",
 
 
 def make_fitted(algorithm: str, X, y=None, *,
-                n_groups: Optional[int] = None, **kwargs) -> Estimator:
+                n_groups: Optional[int] = None, mesh=None,
+                mesh_axis: str = "data", **kwargs) -> Estimator:
     """Construct AND fit, mapping the generic ``n_groups`` (classes,
-    clusters, or mixture components) onto the algorithm's kwarg."""
+    clusters, or mixture components) onto the algorithm's kwarg.  With
+    ``mesh=`` the fit runs data-parallel over that mesh axis
+    (``fit_sharded``)."""
     if n_groups is not None:
         kwargs.setdefault(_GROUP_KWARG[algorithm], n_groups)
-    return make_estimator(algorithm, **kwargs).fit(X, y)
+    est = make_estimator(algorithm, **kwargs)
+    if mesh is not None:
+        return est.fit_sharded(X, y, mesh=mesh, axis=mesh_axis)
+    return est.fit(X, y)

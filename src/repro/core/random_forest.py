@@ -151,18 +151,25 @@ def _build_tree(X, y, n_class, max_depth, min_samples, rng):
     return nodes
 
 
-def train_forest(X, y, n_class: int, *, n_trees: int = 16, max_depth: int = 8,
-                 min_samples: int = 2, seed: int = 0) -> Forest:
-    X = np.asarray(X, np.float32)
-    y = np.asarray(y, np.int32)
-    rng = np.random.default_rng(seed)
-    all_nodes = []
-    for _ in range(n_trees):
-        boot = rng.integers(0, len(y), size=len(y))
-        all_nodes.append(_build_tree(X[boot], y[boot], n_class,
-                                     max_depth, min_samples, rng))
+def _train_tree_nodes(X, y, n_class: int, tree_id: int, seed: int,
+                      max_depth: int, min_samples: int):
+    """Train ONE tree with its own rng stream seeded by (seed, tree_id).
+
+    Per-tree seeding makes tree t a pure function of (data, seed, t) —
+    independent of how many other trees exist or which worker trains it —
+    which is what lets the tree-parallel sharded fit stitch per-shard
+    blocks into a forest bit-equal to the sequential one.
+    """
+    rng = np.random.default_rng((seed, tree_id))
+    boot = rng.integers(0, len(y), size=len(y))
+    return _build_tree(X[boot], y[boot], n_class, max_depth, min_samples,
+                       rng)
+
+
+def _pack_forest(all_nodes, n_class: int) -> Forest:
+    """Node lists -> the paper's four flat (T, M) arrays."""
     M = max(len(n) for n in all_nodes)
-    T = n_trees
+    T = len(all_nodes)
     feature = np.full((T, M), -1, np.int32)
     threshold = np.zeros((T, M), np.float32)
     left = np.zeros((T, M), np.int32)
@@ -176,3 +183,43 @@ def train_forest(X, y, n_class: int, *, n_trees: int = 16, max_depth: int = 8,
     return Forest(feature=jnp.asarray(feature), threshold=jnp.asarray(threshold),
                   left=jnp.asarray(left), right=jnp.asarray(right),
                   n_class=n_class)
+
+
+def train_forest(X, y, n_class: int, *, n_trees: int = 16, max_depth: int = 8,
+                 min_samples: int = 2, seed: int = 0,
+                 tree_range=None) -> Forest:
+    """Train the forest (offline numpy CART, like the paper's sklearn).
+
+    ``tree_range`` restricts training to trees [lo, hi) — one shard's
+    block of the tree-parallel fit (``train_forest_sharded``); the full
+    forest is the concatenation of the blocks.
+    """
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int32)
+    lo, hi = tree_range if tree_range is not None else (0, n_trees)
+    all_nodes = [_train_tree_nodes(X, y, n_class, t, seed, max_depth,
+                                   min_samples) for t in range(lo, hi)]
+    return _pack_forest(all_nodes, n_class)
+
+
+def train_forest_sharded(X, y, n_class: int, n_shards: int, *,
+                         n_trees: int = 16, max_depth: int = 8,
+                         min_samples: int = 2, seed: int = 0) -> Forest:
+    """Tree-parallel fit (Fig. 8 Independent-Tasks applied to TRAINING):
+    trees are statically blocked over ``n_shards`` workers (ceil-divided —
+    ragged counts just give the last workers one tree fewer), each block
+    is trained independently, and the blocks are stitched back in tree
+    order.  Bit-equal to ``train_forest`` by per-tree rng construction —
+    training is host-side numpy (the paper trains offline), so the mesh
+    only fixes the partition; on a multi-host deployment each host trains
+    its block.
+    """
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int32)
+    per = -(-n_trees // n_shards)
+    blocks = []
+    for s in range(n_shards):
+        blocks.extend(_train_tree_nodes(X, y, n_class, t, seed, max_depth,
+                                        min_samples)
+                      for t in range(s * per, min((s + 1) * per, n_trees)))
+    return _pack_forest(blocks, n_class)

@@ -374,3 +374,86 @@ def forest_votes(forest, X, *, policy: Optional[PrecisionPolicy] = None,
     return kp.fn(forest.feature, forest.threshold, forest.left, forest.right,
                  X, n_class=forest.n_class, n_cores=n_cores,
                  interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware arm — every hot-path op over a sharded data axis
+# ---------------------------------------------------------------------------
+#
+# The sharded arm is keyed like the single-device registry but takes a
+# ``mesh``/``axis`` pair: inside the shard_map each shard runs the SAME
+# registry-dispatched kernel (fused / blocked / ref still selected per
+# per-shard shape, and REPRO_BACKEND / ``path=`` still override), and the
+# per-shard outputs merge exactly as the paper's OP-last step — candidate
+# merge for kNN (Fig. 6 OP3), plain row concatenation for the
+# query-sharded ops.  Implementations live in core/cluster.py; the
+# deferred imports break the core -> dispatch -> cluster -> core cycle.
+
+_SHARDED: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_sharded(algorithm: str, op: str):
+    def deco(fn):
+        _SHARDED[(algorithm, op)] = fn
+        return fn
+
+    return deco
+
+
+def sharded(algorithm: str, op: str) -> Callable:
+    """The mesh-aware executor for ``(algorithm, op)``; raises KeyError for
+    ops with no sharded arm (mirrors ``resolve`` for unknown keys)."""
+    key = (algorithm, op)
+    if key not in _SHARDED:
+        raise KeyError(f"no sharded arm for {key}; "
+                       f"known: {sorted(_SHARDED)}")
+    return _SHARDED[key]
+
+
+def sharded_registered() -> Tuple[Tuple[str, str], ...]:
+    """(algorithm, op) keys with a mesh-aware arm, for docs and tests."""
+    return tuple(sorted(_SHARDED))
+
+
+@register_sharded("knn", "distance_topk")
+def distance_topk_sharded(a, c, k, *, mesh, axis="data", policy=None,
+                          path=None):
+    """Reference set row-sharded, per-shard fused kernel, candidate merge;
+    bit-equal to ``distance_topk``."""
+    from repro.core import cluster
+    return cluster.distance_topk_shardmap(a, c, k, mesh, axis,
+                                          policy=policy, path=path)
+
+
+@register_sharded("kmeans", "distance_argmin")
+def distance_argmin_sharded(a, c, *, mesh, axis="data", policy=None,
+                            path=None):
+    from repro.core import cluster
+    return cluster.distance_argmin_shardmap(a, c, mesh, axis,
+                                            policy=policy, path=path)
+
+
+@register_sharded("gnb", "scores")
+def gnb_scores_sharded(X, mu, var, log_prior, *, mesh, axis="data",
+                       policy=None, path=None):
+    from repro.core import cluster
+    return cluster.gnb_scores_shardmap(X, mu, var, log_prior, mesh, axis,
+                                       policy=policy, path=path)
+
+
+@register_sharded("gmm", "responsibilities")
+def gmm_responsibilities_sharded(mu, var, log_pi, X, *, mesh, axis="data",
+                                 policy=None, path=None, n_cores=8):
+    from repro.core import cluster
+    return cluster.gmm_responsibilities_shardmap(mu, var, log_pi, X, mesh,
+                                                 axis, policy=policy,
+                                                 path=path, n_cores=n_cores)
+
+
+@register_sharded("rf", "forest_votes")
+def forest_votes_sharded(forest, X, *, mesh, axis="data", policy=None,
+                         path=None, n_cores=8):
+    from repro.core import cluster
+    return cluster.forest_votes_shardmap(forest, X, mesh, axis,
+                                         policy=policy, path=path,
+                                         n_cores=n_cores)

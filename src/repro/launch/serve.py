@@ -11,6 +11,14 @@ kernels/dispatch.py registry:
 
   PYTHONPATH=src python -m repro.launch.serve --algo knn --batch 64 \
       --requests 256 --policy fp32
+
+Sharded Non-Neural serving — ``--mesh N`` fits AND serves data-parallel
+over an N-shard mesh axis (fit_sharded + the engine's sharded bucket
+path, DESIGN.md §5).  N must not exceed the visible device count; on a
+CPU box, force virtual devices BEFORE jax initialises:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --algo kmeans --mesh 8
 """
 from __future__ import annotations
 
@@ -70,9 +78,21 @@ def serve_nonneural(args):
     X, Q = X[: args.train_size], X[args.train_size:]
     y, yq = y[: args.train_size], y[args.train_size:]
 
+    mesh = None
+    if args.mesh > 1:
+        n_dev = len(jax.devices())
+        if n_dev < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices, only "
+                f"{n_dev} visible; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh} "
+                f"(before jax initialises) or run on a pod")
+        from repro.launch.mesh import _mk
+        mesh = _mk((args.mesh,), ("data",))
+
     est = make_fitted(args.algo, X, y, n_groups=n_class,
-                      policy=get_policy(args.policy))
-    engine = NonNeuralServeEngine(est, max_batch=args.batch)
+                      policy=get_policy(args.policy), mesh=mesh)
+    engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh)
     engine.warmup(Q)
     t0 = time.time()
     result = engine.classify(Q)
@@ -81,6 +101,7 @@ def serve_nonneural(args):
     acc = float(jnp.mean(result.classes == jnp.asarray(yq))) \
         if args.algo in ("knn", "gnb", "rf") else float("nan")
     print(f"[serve] algo={args.algo} policy={args.policy} "
+          f"shards={engine.n_shards} "
           f"served {args.requests} queries in {dt:.3f}s "
           f"({args.requests/dt:.0f} q/s, {result.launches} launches, "
           f"buckets={engine.bucket_launches}) acc={acc:.3f}")
@@ -102,6 +123,10 @@ def main(argv=None):
     ap.add_argument("--policy", default="fp32",
                     help="PrecisionPolicy name: fp32, bf16, or "
                          "<dtype>@<cost_backend> (e.g. fp32@libgcc)")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shard count for data-parallel Non-Neural "
+                         "fit/serve (1 = single-device); needs that many "
+                         "visible devices")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--train-size", type=int, default=400)
     ap.add_argument("--dim", type=int, default=21)

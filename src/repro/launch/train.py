@@ -29,7 +29,6 @@ from repro.data.datasets import token_stream
 from repro.data.pipeline import Prefetcher, TokenBatcher
 from repro.models import transformer
 from repro.runtime.fault_tolerance import FaultTolerantRunner, RunState
-from repro.training import optimizer as opt_mod
 from repro.training import trainer
 
 
@@ -63,7 +62,7 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(train_cfg.seed)
     params = transformer.init_params(key, cfg)
-    opt_state = opt_mod.init_opt_state(params)
+    opt_state = trainer.init_opt_state(params, train_cfg)
     step_fn = jax.jit(trainer.make_train_step(cfg, train_cfg),
                       donate_argnums=(0, 1))
 
@@ -71,6 +70,12 @@ def main(argv=None):
                           cfg.vocab_size)
     batcher = TokenBatcher(stream, args.batch, args.seq)
     data = Prefetcher(iter(batcher))
+    # fixed probe batch for the logged loss: per-step training batches
+    # differ, so evaluating on "the current batch" measures batch noise,
+    # not convergence.  steps+1 sits beyond the training range, though
+    # batch_at wraps modulo the stream, so on long runs its windows can
+    # overlap trained ones — a fixed probe, not a strict held-out set
+    eval_batch = batcher.batch_at(args.steps + 1)
 
     ckpt = Checkpointer(Path(args.ckpt_dir) / cfg.arch_id)
     runner = FaultTolerantRunner(ckpt, ckpt_every=args.ckpt_every)
@@ -87,7 +92,9 @@ def main(argv=None):
         state = runner.run_step(step_fn, state, batch)
         if state.step % args.log_every == 0 or state.step == args.steps:
             # metrics come back from step_fn via runner; re-evaluate loss
-            loss, _ = trainer.loss_fn(state.params, batch, cfg, train_cfg)
+            # on the fixed held-out batch so the curve is comparable
+            loss, _ = trainer.loss_fn(state.params, eval_batch, cfg,
+                                      train_cfg)
             losses.append(float(loss))
             dt = time.time() - t0
             print(f"step {state.step:5d} loss {float(loss):.4f} "

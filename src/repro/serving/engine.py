@@ -48,21 +48,44 @@ class NonNeuralServeEngine:
     closure would bake a copy of the training set / forest into every
     per-bucket executable.  ``bucket_launches`` counts launches per bucket
     size for capacity accounting.
+
+    Sharded serving (DESIGN.md §5): with ``mesh=`` (or ``sharded=True``
+    after a ``fit_sharded`` estimator) each bucket is partitioned over the
+    mesh's data axis and per-shard fused-kernel outputs are merged —
+    results are exactly the single-device path's.  Buckets are clamped to
+    at least the shard count so every shard sees work.
     """
 
-    def __init__(self, estimator: Estimator, *, max_batch: int = 1024):
+    def __init__(self, estimator: Estimator, *, max_batch: int = 1024,
+                 sharded: bool = False, mesh=None, mesh_axis: str = "data"):
         assert estimator.fitted, "fit the estimator before serving it"
         self.estimator = estimator
         self.algorithm = estimator.algorithm
         self.max_batch = int(max_batch)
         self.bucket_launches: Dict[int, int] = {}
-        self._fn = jax.jit(estimator.predict_batch_fn())
+        if mesh is None and sharded:
+            mesh = estimator.mesh
+            mesh_axis = estimator.mesh_axis
+            assert mesh is not None, \
+                "sharded=True needs a fit_sharded estimator or mesh="
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+        if mesh is not None:
+            self.n_shards = mesh.shape[mesh_axis]
+            self._fn = jax.jit(
+                estimator.predict_batch_sharded_fn(mesh, mesh_axis))
+        else:
+            self.n_shards = 1
+            self._fn = jax.jit(estimator.predict_batch_fn())
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
 
     def _bucket(self, b: int) -> int:
         size = 1
         while size < b:
             size *= 2
-        return min(size, self.max_batch)
+        return max(min(size, self.max_batch), self.n_shards)
 
     def _empty(self) -> ClassifyResult:
         return ClassifyResult(classes=jnp.zeros((0,), jnp.int32),

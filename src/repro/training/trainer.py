@@ -9,7 +9,7 @@ clipping, AdamW, ZeRO-1-shardable state.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +18,31 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.models import transformer
 from repro.training import optimizer as opt_mod
 from repro.training.grad_compression import compress_tree, decompress_tree
+
+
+class CompressedOptState(NamedTuple):
+    """Optimizer state + the error-feedback residual pytree.
+
+    The int8 grad-compression scheme is only convergent when the
+    quantisation error of step t is added back into the gradient of step
+    t+1 (grad_compression.py), so the residual must survive across steps —
+    it rides in the opt_state slot, which every driver already threads
+    through ``train_step`` and checkpoints.
+    """
+
+    adam: opt_mod.AdamState
+    resid: Any
+
+
+def init_opt_state(params, train_cfg: TrainConfig):
+    """Optimizer state for ``make_train_step``: plain AdamState, or
+    AdamState + a zero error-feedback residual when compression is on."""
+    adam = opt_mod.init_opt_state(params)
+    if train_cfg.grad_compression == "int8":
+        resid = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        return CompressedOptState(adam=adam, resid=resid)
+    return adam
 
 
 def cross_entropy(logits, targets, label_smoothing: float = 0.0):
@@ -86,11 +111,15 @@ def make_train_step(cfg: ModelConfig, train_cfg: TrainConfig, plan=None):
             loss, parts, grads = grads_of(params, batch)
 
         if train_cfg.grad_compression == "int8":
-            qtree, _resid = compress_tree(grads)
+            adam, resid = opt_state
+            qtree, resid = compress_tree(grads, resid)
             grads = decompress_tree(qtree)
-
-        params, opt_state, stats = opt_mod.adamw_update(
-            params, grads, opt_state, train_cfg)
+            params, adam, stats = opt_mod.adamw_update(
+                params, grads, adam, train_cfg)
+            opt_state = CompressedOptState(adam=adam, resid=resid)
+        else:
+            params, opt_state, stats = opt_mod.adamw_update(
+                params, grads, opt_state, train_cfg)
         metrics = {"loss": loss, **parts, **stats}
         return params, opt_state, metrics
 

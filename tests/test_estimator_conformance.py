@@ -1,0 +1,163 @@
+"""Estimator conformance suite: every ``make_estimator`` algorithm must
+honour the same contract whatever the PrecisionPolicy or registry arm —
+``predict`` agrees row-wise with ``predict_batch``, the zero-query
+``empty_aux`` shape/dtype contract holds, bf16 outputs stay finite, and
+``fit`` is idempotent (refitting the same data reproduces the params
+bit-for-bit).
+
+Hypothesis drives the data shapes; the arm axis covers the registry
+selector (``path=None`` — which also follows a REPRO_BACKEND env override,
+the CI matrix's second entry) and the forced jnp oracle (``path="ref"``).
+Where hypothesis is unavailable (the bare container) the same properties
+run over a fixed deterministic shape grid instead of skipping — CI
+installs requirements-dev.txt and gets the fuzzed axis.
+"""
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _NullStrategies:
+        """Keeps the strategy expressions importable without hypothesis;
+        ``shape_cases`` never evaluates them on the fallback path."""
+
+        def integers(self, *a, **kw):
+            return None
+
+    st = _NullStrategies()
+
+from repro.core import estimator as E
+from repro.kernels.dispatch import get_policy
+
+ALGORITHMS = sorted(E.ESTIMATORS)
+ARMS = (None, "ref")          # registry-selected vs forced jnp oracle
+POLICIES = ("fp32", "bf16")
+
+
+def shape_cases(*fallback, **strats):
+    """``@given(**strats)`` under hypothesis; a fixed parametrize grid of
+    ``fallback`` tuples (in ``strats`` key order) otherwise."""
+    names = ",".join(strats)
+
+    def deco(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=3, deadline=None)(
+                given(**strats)(f))
+        return pytest.mark.parametrize(names, list(fallback))(f)
+
+    return deco
+
+
+def _blobs(n, d, n_class, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_class, d)) * 3.0
+    y = rng.integers(0, n_class, size=n).astype(np.int32)
+    X = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return X, y
+
+
+def _fitted(algo, X, y, policy_name, path):
+    return E.make_fitted(algo, X, y, n_groups=int(y.max()) + 1,
+                         policy=get_policy(policy_name), path=path)
+
+
+@pytest.mark.parametrize("path", ARMS)
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@shape_cases((24, 5, 3, 0), (37, 12, 2, 7),
+             n=st.integers(24, 60), d=st.integers(3, 12),
+             n_class=st.integers(2, 4), seed=st.integers(0, 2**31 - 1))
+def test_predict_rowwise_matches_batch(algo, policy, path, n, d, n_class,
+                                       seed):
+    """Single-query ``predict`` must equal the matching ``predict_batch``
+    row — the serving engine relies on batch decomposability."""
+    X, y = _blobs(n, d, n_class, seed)
+    est = _fitted(algo, X, y, policy, path)
+    Q = X[:5]
+    batch_cls, batch_aux = est.predict_batch(Q)
+    for i in range(Q.shape[0]):
+        cls_i, aux_i = est.predict(Q[i])
+        assert int(cls_i) == int(batch_cls[i]), (algo, policy, path, i)
+        # evidence rows: exact for integer aux; float aux may see a
+        # different XLA tiling at batch 1 vs batch 5
+        if jnp.issubdtype(batch_aux.dtype, jnp.floating):
+            np.testing.assert_allclose(
+                np.asarray(aux_i, np.float32),
+                np.asarray(batch_aux[i], np.float32),
+                rtol=2e-2 if policy == "bf16" else 1e-5,
+                atol=2e-2 if policy == "bf16" else 1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(aux_i),
+                                          np.asarray(batch_aux[i]))
+
+
+@pytest.mark.parametrize("path", ARMS)
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@shape_cases((32, 7, 3), (41, 4, 11),
+             n=st.integers(24, 48), d=st.integers(3, 10),
+             seed=st.integers(0, 2**31 - 1))
+def test_empty_aux_contract(algo, policy, path, n, d, seed):
+    """``empty_aux`` must be the zero-row image of ``predict_batch``'s
+    aux: same trailing shape, same dtype kind — what the engine returns
+    for an empty request batch."""
+    X, y = _blobs(n, d, 3, seed)
+    est = _fitted(algo, X, y, policy, path)
+    empty = est.empty_aux()
+    assert empty.shape[0] == 0
+    _, aux = est.predict_batch(X[:4])
+    assert empty.shape[1:] == aux.shape[1:], (algo, empty.shape, aux.shape)
+    assert jnp.issubdtype(empty.dtype, jnp.floating) == \
+        jnp.issubdtype(aux.dtype, jnp.floating), (algo, empty.dtype,
+                                                  aux.dtype)
+
+
+@pytest.mark.parametrize("path", ARMS)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@shape_cases((32, 7, 3), (25, 10, 5),
+             n=st.integers(24, 48), d=st.integers(3, 10),
+             seed=st.integers(0, 2**31 - 1))
+def test_bf16_outputs_finite(algo, path, n, d, seed):
+    """The reduced-precision arm must not overflow/NaN on well-scaled
+    data — bf16 shares fp32's exponent range, so finiteness is the
+    contract (precision is not)."""
+    X, y = _blobs(n, d, 3, seed)
+    est = _fitted(algo, X, y, "bf16", path)
+    cls, aux = est.predict_batch(X[:8])
+    assert bool(jnp.all(jnp.isfinite(aux.astype(jnp.float32)))), algo
+    assert bool(jnp.all((cls >= 0) & (cls < 8)))
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@shape_cases((32, 7, 3), (45, 5, 13),
+             n=st.integers(24, 48), d=st.integers(3, 10),
+             seed=st.integers(0, 2**31 - 1))
+def test_fit_idempotent(algo, n, d, seed):
+    """Fitting the same data twice must reproduce the params bit-for-bit
+    (deterministic training is what makes the sharded fit provable)."""
+    X, y = _blobs(n, d, 3, seed)
+    a = E.make_fitted(algo, X, y, n_groups=3)
+    b = E.make_fitted(algo, X, y, n_groups=3)
+    for name, pa, pb in zip(a.params._fields, a.params, b.params):
+        if hasattr(pa, "shape"):
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
+                                          err_msg=f"{algo}.{name}")
+        else:
+            assert pa == pb, (algo, name)
+
+
+def test_every_algorithm_covered():
+    """The conformance matrix must not silently drop an algorithm when a
+    new estimator is registered."""
+    assert ALGORITHMS == sorted(E.ESTIMATORS)
+    assert set(ALGORITHMS) == {"knn", "kmeans", "gnb", "gmm", "rf"}

@@ -1,0 +1,173 @@
+"""Mesh parity: ``fit_sharded`` / sharded serve must reproduce the
+single-device path for every estimator, across mesh sizes {1, 2, 4, 8}
+and ragged (non-divisible) data/bucket sizes.
+
+Deployment contract (ISSUE/DESIGN.md §5): KNN and RF merges are EXACT
+(bit-equal params and outputs — candidate merge and tree stitching do not
+touch per-row arithmetic); K-Means/GNB/GMM fits are tolerance-bounded
+(the psum associates per-shard partial sums differently than the
+single-device chunked accumulate), while their SERVE outputs stay exact
+because query rows are computed independently per shard.
+
+Runs in a subprocess with XLA_FLAGS forcing 8 host devices (tests
+otherwise see one device) — same pattern as test_cluster_shardmap.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+if os.environ.get("REPRO_BACKEND"):
+    # parity must hold on whatever arm the CI matrix pinned (per-shard
+    # kernels go through the same dispatch selector/override)
+    ENV["REPRO_BACKEND"] = os.environ["REPRO_BACKEND"]
+
+HEADER = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import _mk
+    from repro.core.estimator import make_fitted, make_estimator, ESTIMATORS
+
+    rng = np.random.default_rng(0)
+    N, d, C = 93, 13, 3                    # ragged: 93 % {2,4,8} != 0
+    centers = rng.normal(size=(C, d)) * 3.0
+    y = rng.integers(0, C, size=N).astype(np.int32)
+    X = (centers[y] + rng.normal(size=(N, d))).astype(np.float32)
+
+    def fitted(algo, mesh=None):
+        return make_fitted(algo, X, y, n_groups=C, mesh=mesh)
+
+    MESH_SIZES = (1, 2, 4, 8)
+    EXACT_FIT = ("knn", "rf")              # bit-equal merges
+""")
+
+FIT_PARITY = textwrap.dedent("""
+    for c in MESH_SIZES:
+        mesh = _mk((c,), ("data",))
+        for algo in sorted(ESTIMATORS):
+            ref = fitted(algo)
+            sh = fitted(algo, mesh=mesh)
+            assert sh.mesh is mesh and sh.mesh_axis == "data"
+            for name, a, b in zip(ref.params._fields, ref.params, sh.params):
+                if not hasattr(a, "shape"):
+                    assert a == b, (algo, name, a, b)
+                    continue
+                a, b = np.asarray(a), np.asarray(b)
+                if algo == "knn" and name == "A":
+                    b = b[: a.shape[0]]     # shard-residency pads the rows
+                if algo in EXACT_FIT:
+                    np.testing.assert_array_equal(
+                        a, b, err_msg=f"{algo}/{name} mesh={c}")
+                elif name in ("shift", "n_iter", "log_lik"):
+                    pass                    # loop metadata, not params
+                else:
+                    np.testing.assert_allclose(
+                        a, b, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{algo}/{name} mesh={c}")
+    print("FIT_PARITY_OK")
+""")
+
+SERVE_PARITY = textwrap.dedent("""
+    from repro.serving import NonNeuralServeEngine
+
+    RAGGED_BATCHES = (1, 5, 19)            # never a multiple of the mesh
+    for c in MESH_SIZES:
+        mesh = _mk((c,), ("data",))
+        for algo in sorted(ESTIMATORS):
+            ref = fitted(algo)             # SAME params on both paths
+            plain = NonNeuralServeEngine(ref, max_batch=32)
+            shard = NonNeuralServeEngine(ref, max_batch=32, mesh=mesh)
+            assert shard.sharded and shard.n_shards == c
+            fn = jax.jit(ref.predict_batch_sharded_fn(mesh))
+            for B in RAGGED_BATCHES:
+                Q = X[:B]
+                want = plain.classify(Q)
+                got = shard.classify(Q)
+                np.testing.assert_array_equal(
+                    np.asarray(got.classes), np.asarray(want.classes),
+                    err_msg=f"{algo} mesh={c} B={B}")
+                # serve outputs are exact for every algorithm: per-row
+                # arithmetic is untouched by the batch/reference partition
+                np.testing.assert_array_equal(
+                    np.asarray(got.aux), np.asarray(want.aux),
+                    err_msg=f"{algo} aux mesh={c} B={B}")
+                dcls, daux = fn(ref.params, Q)
+                np.testing.assert_array_equal(
+                    np.asarray(dcls), np.asarray(want.classes))
+            # zero-query contract survives the sharded path
+            empty = shard.classify(X[:0])
+            assert empty.classes.shape == (0,) and empty.launches == 0
+        # regression: k larger than one shard's chunk (93 rows / 8 shards
+        # = 12-row chunks, k=16) must clamp the local candidate count,
+        # not crash the per-shard kernel
+        big = make_fitted("knn", X, y, n_groups=C, k=16)
+        wc, wa = big.predict_batch(X[:5])
+        gc, ga = jax.jit(big.predict_batch_sharded_fn(mesh))(big.params,
+                                                             X[:5])
+        np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+    print("SERVE_PARITY_OK")
+""")
+
+
+def _run(payload: str, marker: str):
+    res = subprocess.run(
+        [sys.executable, "-c", HEADER + payload], capture_output=True,
+        text=True, timeout=560, env=ENV)
+    assert marker in res.stdout, (res.stdout[-800:], res.stderr[-2000:])
+
+
+def test_fit_sharded_matches_single_device():
+    """fit_sharded params == fit params: bit-equal for KNN/RF,
+    tolerance-bounded for the psum'd K-Means/GNB/GMM fits."""
+    _run(FIT_PARITY, "FIT_PARITY_OK")
+
+
+def test_sharded_serve_matches_single_device():
+    """The engine's sharded bucket path returns exactly the single-device
+    results for ragged batch sizes at every mesh size."""
+    _run(SERVE_PARITY, "SERVE_PARITY_OK")
+
+
+def test_rf_tree_parallel_fit_ragged_shards():
+    """Tree-parallel RF fit is bit-equal to the sequential fit for ANY
+    shard count — including counts that do not divide n_trees and counts
+    exceeding it (per-tree rng makes the partition irrelevant).  Host-side
+    numpy, so no forced devices needed."""
+    import numpy as np
+
+    from repro.core import random_forest as RF
+
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(80, 6)).astype(np.float32)
+    y = rng.integers(0, 3, size=80).astype(np.int32)
+    ref = RF.train_forest(X, y, 3, n_trees=10, max_depth=4, seed=2)
+    for n_shards in (1, 3, 6, 10, 16):
+        got = RF.train_forest_sharded(X, y, 3, n_shards, n_trees=10,
+                                      max_depth=4, seed=2)
+        for name, a, b in zip(ref._fields, ref, got):
+            if hasattr(a, "shape"):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{name} n_shards={n_shards}")
+            else:
+                assert a == b
+
+
+def test_sharded_arm_registry_covers_every_hot_op():
+    """Every single-device hot op must own a mesh-aware arm — a new
+    estimator without one would silently lose the sharded path."""
+    import pytest
+
+    from repro.kernels import dispatch
+
+    assert dispatch.sharded_registered() == (
+        ("gmm", "responsibilities"), ("gnb", "scores"),
+        ("kmeans", "distance_argmin"), ("knn", "distance_topk"),
+        ("rf", "forest_votes"))
+    assert set(dispatch.sharded_registered()) == set(dispatch.registered())
+    with pytest.raises(KeyError):
+        dispatch.sharded("svm", "qp")
