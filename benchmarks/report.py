@@ -21,6 +21,8 @@ BENCH_ESTIMATORS = Path(__file__).resolve().parents[1] / \
     "BENCH_estimators.json"
 BENCH_SHARDED = Path(__file__).resolve().parents[1] / \
     "BENCH_sharded.json"
+BENCH_SERVING = Path(__file__).resolve().parents[1] / \
+    "BENCH_serving.json"
 
 # Required keys per BENCH accumulator: every entry must carry the
 # envelope, every result record the per-kind keys.  The trajectory files
@@ -34,6 +36,9 @@ _RESULT_KEYS = {
     "fused_topk": ("shape", "fused", "two_pass", "speedup"),
     "sharded": ("algorithm", "shards", "us_per_query_1shard",
                 "us_per_query_8shard", "measured_speedup", "amdahl_bound"),
+    "serving": ("algorithm", "rate", "max_wait", "p50", "p95", "p99",
+                "throughput", "occupancy", "hit_rate",
+                "deadline_miss_rate"),
 }
 
 
@@ -176,6 +181,31 @@ def write_sharded_entry(results, path: Path = BENCH_SHARDED) -> dict:
     return _append_entry(results, path, "sharded")
 
 
+def write_serving_entry(results, path: Path = BENCH_SERVING) -> dict:
+    """Append one request-stream scheduler load sweep (rate x algorithm x
+    bucket policy, SLO accounting from ServingStats) to
+    BENCH_serving.json."""
+    return _append_entry(results, path, "serving")
+
+
+def serving_table(path: Path = BENCH_SERVING) -> str:
+    if not path.exists():
+        return "(no BENCH_serving.json yet — run benchmarks/serving_load.py)"
+    data = load_bench(path, "serving")
+    lines = ["| when | algo | rate | max_wait | p50 | p95 | p99 | "
+             "req/tick | occupancy | hit | miss |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | {r['rate']:g} | "
+                f"{r['max_wait']} | {r['p50']:.0f} | {r['p95']:.0f} | "
+                f"{r['p99']:.0f} | {r['throughput']:.2f} | "
+                f"{r['occupancy']:.2f} | {r['hit_rate']:.2f} | "
+                f"{r['deadline_miss_rate']:.2f} |")
+    return "\n".join(lines)
+
+
 def estimators_table(path: Path = BENCH_ESTIMATORS) -> str:
     if not path.exists():
         return "(no BENCH_estimators.json yet — run benchmarks/run.py)"
@@ -255,7 +285,17 @@ def main():
                     help="measure the 1-vs-8-shard serving speedup "
                          "(forced-8-device subprocess) and append an "
                          "entry to BENCH_sharded.json")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the request-stream scheduler load sweep "
+                         "(rate x algorithm x bucket policy) and append "
+                         "an entry to BENCH_serving.json")
     args = ap.parse_args()
+    if args.serving:
+        from benchmarks.serving_load import run as run_serving
+        write_serving_entry(run_serving([], quick=True))
+        print("\n### Serving load\n")
+        print(serving_table())
+        return
     if args.sharded:
         from benchmarks.parallel_speedup import run_sharded
         write_sharded_entry(run_sharded([], quick=True))

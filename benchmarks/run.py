@@ -24,7 +24,7 @@ def main() -> None:
 
     from benchmarks import cortex_m4, estimator_sweep, fp_backends
     from benchmarks import kernel_blocks, parallel_speedup, report
-    from benchmarks import roofline, sorting
+    from benchmarks import roofline, serving_load, sorting
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
@@ -37,6 +37,8 @@ def main() -> None:
     report.write_estimators_entry(est)          # algorithm x backend x bucket
     sharded = parallel_speedup.run_sharded(csv_rows, quick=args.quick)
     report.write_sharded_entry(sharded)         # 1-vs-8-shard vs Amdahl
+    serving = serving_load.run(csv_rows, quick=args.quick)
+    report.write_serving_entry(serving)         # rate x algo x bucket policy
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

@@ -93,6 +93,8 @@ def serve_nonneural(args):
     est = make_fitted(args.algo, X, y, n_groups=n_class,
                       policy=get_policy(args.policy), mesh=mesh)
     engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh)
+    if args.stream:
+        return serve_stream(args, engine, Q)
     engine.warmup(Q)
     t0 = time.time()
     result = engine.classify(Q)
@@ -106,6 +108,36 @@ def serve_nonneural(args):
           f"({args.requests/dt:.0f} q/s, {result.launches} launches, "
           f"buckets={engine.bucket_launches}) acc={acc:.3f}")
     return result
+
+
+def serve_stream(args, engine, Q):
+    """--stream: replay a Poisson-ish arrival trace (seeded rng) through
+    the micro-batching RequestScheduler and report the SLO accounting
+    (serving/scheduler.py; time is drain ticks, so the replay is
+    deterministic for a given --seed)."""
+    from repro.serving import RequestScheduler, poisson_trace, replay_trace
+
+    engine.warmup_buckets(Q.shape[1])
+    sched = RequestScheduler(engine, max_wait=args.max_wait,
+                             cache_size=args.cache_size)
+    counts = poisson_trace(args.rate, args.ticks, seed=args.seed)
+    t0 = time.time()
+    ids = replay_trace(sched, Q, counts, deadline=args.deadline)
+    dt = time.time() - t0
+    s = sched.stats.summary()
+    print(f"[stream] algo={args.algo} policy={args.policy} "
+          f"shards={engine.n_shards} rate={args.rate} ticks={args.ticks} "
+          f"max_wait={args.max_wait} cache={args.cache_size}")
+    print(f"[stream] served {len(ids)} requests in {dt:.3f}s wall "
+          f"({s['launches']} launches, buckets={engine.bucket_launches}, "
+          f"straggler events={len(sched.events)})")
+    print(f"[stream] latency ticks p50={s['p50']:.0f} p95={s['p95']:.0f} "
+          f"p99={s['p99']:.0f}  throughput={s['throughput']:.2f} req/tick  "
+          f"occupancy={s['occupancy']:.2f}  hit_rate={s['hit_rate']:.2f}  "
+          f"deadline_miss={s['deadline_miss_rate']:.2f}")
+    assert set(engine.bucket_launches) <= sched.warmed, \
+        "stream compiled a new bucket mid-flight"
+    return sched.stats
 
 
 def main(argv=None):
@@ -127,6 +159,22 @@ def main(argv=None):
                     help="shard count for data-parallel Non-Neural "
                          "fit/serve (1 = single-device); needs that many "
                          "visible devices")
+    ap.add_argument("--stream", action="store_true",
+                    help="replay a Poisson-ish request stream through the "
+                         "micro-batching RequestScheduler instead of one "
+                         "pre-formed batch (Non-Neural algos only)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="--stream mean arrivals per drain tick")
+    ap.add_argument("--ticks", type=int, default=64,
+                    help="--stream trace length in drain ticks")
+    ap.add_argument("--max-wait", type=int, default=4,
+                    help="--stream coalescing window in drain ticks")
+    ap.add_argument("--cache-size", type=int, default=0,
+                    help="--stream LRU result cache entries (0 = off)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="--stream per-request SLO in drain ticks")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="--stream arrival-trace rng seed")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--train-size", type=int, default=400)
     ap.add_argument("--dim", type=int, default=21)

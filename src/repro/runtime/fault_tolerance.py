@@ -55,11 +55,15 @@ class FaultTolerantRunner:
                 params, opt_state, metrics = step_fn(
                     state.params, state.opt_state, batch)
                 verdict = self.timer.record(self.host, time.time() - t0)
-                if verdict.action == "checkpoint":
-                    self.events.append(("straggler_checkpoint", state.step))
-                    self.checkpoint(RunState(state.step, params, opt_state))
                 new_state = RunState(state.step + 1, params, opt_state)
-                if new_state.step % self.ckpt_every == 0:
+                if verdict.action == "checkpoint":
+                    # the post-step params belong to step+1: labelling them
+                    # with the pre-step counter makes a restore replay an
+                    # already-applied update (double-applied step)
+                    self.events.append(("straggler_checkpoint",
+                                        new_state.step))
+                    self.checkpoint(new_state)
+                elif new_state.step % self.ckpt_every == 0:
                     self.checkpoint(new_state)
                 return new_state
             except Exception as e:  # transient device failure path

@@ -5,4 +5,11 @@ from repro.serving.engine import (  # noqa: F401
     NonNeuralServeEngine,
     ServeEngine,
 )
+from repro.serving.scheduler import (  # noqa: F401
+    RequestResult,
+    RequestScheduler,
+    ServingStats,
+    poisson_trace,
+    replay_trace,
+)
 from repro.serving import quant  # noqa: F401

@@ -33,10 +33,17 @@ class ClassifyResult:
     classes: jnp.ndarray       # (B,) int32 prediction per query
     aux: jnp.ndarray           # (B, ...) algorithm evidence (see estimator)
     launches: int              # kernel launches used for this request
+    algorithm: str = "knn"     # which estimator produced this result
 
     @property
     def neighbors(self) -> jnp.ndarray:
         """kNN back-compat alias: aux is the (B, k) neighbour indices."""
+        if self.algorithm != "knn":
+            raise AttributeError(
+                f"ClassifyResult.neighbors is kNN-only (aux = neighbour "
+                f"indices); this result came from {self.algorithm!r}, whose "
+                f"aux is its own evidence — use .aux (see "
+                f"Estimator.empty_aux for the per-algorithm shape)")
         return self.aux
 
 
@@ -63,6 +70,7 @@ class NonNeuralServeEngine:
         self.algorithm = estimator.algorithm
         self.max_batch = int(max_batch)
         self.bucket_launches: Dict[int, int] = {}
+        self.warmed: set = set()   # bucket sizes with a compiled executable
         if mesh is None and sharded:
             mesh = estimator.mesh
             mesh_axis = estimator.mesh_axis
@@ -89,17 +97,42 @@ class NonNeuralServeEngine:
 
     def _empty(self) -> ClassifyResult:
         return ClassifyResult(classes=jnp.zeros((0,), jnp.int32),
-                              aux=self.estimator.empty_aux(), launches=0)
+                              aux=self.estimator.empty_aux(), launches=0,
+                              algorithm=self.algorithm)
+
+    def _warm_one(self, size: int, chunk) -> None:
+        """Compile one bucket through the jitted fn DIRECTLY — warmup must
+        never land in ``bucket_launches``, which counts production launches
+        for capacity accounting."""
+        pad = size - chunk.shape[0]
+        if pad:
+            chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+        jax.block_until_ready(self._fn(self.estimator.params, chunk)[0])
+        self.warmed.add(size)
 
     def warmup(self, X) -> int:
         """Compile every bucket a classify(X) call would hit (including the
         smaller trailing-chunk bucket) so jit compiles never land inside a
-        caller's timed window.  Returns the number of buckets warmed."""
+        caller's timed window.  Returns the number of buckets warmed.
+        Compile-time launches do NOT count into ``bucket_launches``."""
         X = jnp.asarray(X)
         sizes = {self._bucket(min(self.max_batch, X.shape[0] - lo))
                  for lo in range(0, X.shape[0], self.max_batch)}
         for size in sorted(sizes):
-            jax.block_until_ready(self.classify(X[:size]).classes)
+            self._warm_one(size, X[:size])
+        return len(sizes)
+
+    def warmup_buckets(self, d: int, *, dtype=jnp.float32) -> int:
+        """Compile EVERY bucket ``classify`` can ever route a (B, d) batch
+        to — what a request-stream scheduler needs so no jit compile can
+        land mid-stream (scheduler.py coalesces only into ``warmed``).
+        Returns the number of buckets warmed."""
+        sizes, b = set(), 1
+        while b < 2 * self.max_batch:
+            sizes.add(self._bucket(b))
+            b *= 2
+        for size in sorted(sizes):
+            self._warm_one(size, jnp.zeros((size, d), dtype))
         return len(sizes)
 
     def classify(self, X) -> ClassifyResult:
@@ -121,10 +154,12 @@ class NonNeuralServeEngine:
             auxes.append(aux[: bucket - pad])
             self.bucket_launches[bucket] = \
                 self.bucket_launches.get(bucket, 0) + 1
+            self.warmed.add(bucket)
             launches += 1
         return ClassifyResult(classes=jnp.concatenate(classes),
                               aux=jnp.concatenate(auxes),
-                              launches=launches)
+                              launches=launches,
+                              algorithm=self.algorithm)
 
 
 class KNNServeEngine(NonNeuralServeEngine):
@@ -167,6 +202,13 @@ class ServeEngine:
     def generate(self, prompt_tokens, n_new: int, *, temperature: float = 0.0,
                  key: Optional[jax.Array] = None, **frontend
                  ) -> GenerationResult:
+        if temperature > 0.0 and key is None:
+            # validate BEFORE prefill: without this the first sampling step
+            # dies inside jax.random.split(None) with an opaque traceback
+            raise ValueError(
+                "generate(temperature>0) samples and needs key= (a jax "
+                "PRNGKey for reproducible draws); greedy decoding "
+                "(temperature=0.0) needs no key")
         logits, cache = self.prefill(prompt_tokens, **frontend)
         B = prompt_tokens.shape[0]
         toks, lps = [], []

@@ -41,16 +41,21 @@ def qmatmul(x, qt: QuantTensor):
     return (y * qt.scale.reshape(1, -1)).astype(x.dtype)
 
 
+def _should_quantize(p, min_size: int) -> bool:
+    """The ONE quantise-this-leaf predicate — ``quantize_params`` and
+    ``quant_bytes`` must agree on it, or the size estimate describes a
+    different quantization than the one actually applied."""
+    return (hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating)
+            and p.size >= min_size and p.ndim >= 2)
+
+
 def quantize_params(params, *, min_size: int = 1 << 16):
     """Quantise every float leaf with >= min_size elements (weights), keep
     small leaves (norms, biases) in their original dtype. Returns a pytree
     of QuantTensor | original leaves plus a matching is-quantised mask."""
 
     def one(p):
-        if (hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating)
-                and p.size >= min_size and p.ndim >= 2):
-            return quantize_weight(p)
-        return p
+        return quantize_weight(p) if _should_quantize(p, min_size) else p
 
     return jax.tree.map(one, params)
 
@@ -61,15 +66,17 @@ def dequantize_params(qparams, dtype=jnp.bfloat16):
         qparams, is_leaf=lambda x: isinstance(x, QuantTensor))
 
 
-def quant_bytes(params) -> int:
-    """Serialized size if quantised (int8 + f32 scales) — for the roofline
-    memory-term estimate in EXPERIMENTS.md."""
+def quant_bytes(params, *, min_size: int = 1 << 16) -> int:
+    """Serialized size if quantised with ``quantize_params(min_size=...)``
+    (int8 + f32 scales) — for the roofline memory-term estimate in
+    EXPERIMENTS.md.  Shares ``_should_quantize`` with ``quantize_params``
+    so the estimate matches the actual serialized bytes for any
+    ``min_size``."""
     total = 0
     for p in jax.tree.leaves(params):
-        if (jnp.issubdtype(p.dtype, jnp.floating) and p.size >= (1 << 16)
-                and p.ndim >= 2):
-            total += p.size  # int8
-            total += 4 * p.shape[-1]
+        if _should_quantize(p, min_size):
+            total += p.size          # int8 payload
+            total += 4 * p.shape[-1]  # f32 per-output-channel scales
         else:
             total += p.size * p.dtype.itemsize
     return total

@@ -1,0 +1,313 @@
+"""Request-stream scheduler with SLO accounting for NonNeuralServeEngine.
+
+The paper's case is latency/energy-bounded near-sensor serving (§5:
+parallel speedup up to 7.04x cuts latency/energy up to 87%); the engine
+below it serves one pre-formed batch per call.  This layer turns that
+into a traffic-facing system: many logical clients ``submit()`` single
+queries (or small batches), and a ``drain()`` step coalesces the queue
+into the largest power-of-two bucket the engine has ALREADY compiled —
+never a new one, so no jit compile can land mid-stream — runs one
+launch, and scatters per-request results back with per-request metrics
+(``queue_time``, ``batch_time``, ``bucket``, ``deadline_missed``).
+
+Time is measured in drain TICKS, not wall-clock: ``max_wait`` (the
+coalescing window) and request deadlines are tick counts, so a replayed
+trace is bit-deterministic and the SLO accounting in ``ServingStats``
+(p50/p95/p99 latency, throughput, bucket occupancy, cache hit-rate) can
+be checked against a hand-computed trace.  Wall-clock appears only in
+``batch_time`` (the launch duration), which feeds the per-drain
+``runtime/straggler.StepTimer`` watch/checkpoint/evict escalation.
+
+Bucket occupancy (valid rows / bucket rows per launch) is the serving
+analogue of the paper's §5.3 core-utilization analysis: a launch with a
+half-empty bucket wastes the same silicon a stalled PULP core does.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.runtime.straggler import StepTimer
+from repro.serving.engine import NonNeuralServeEngine
+
+
+@dataclass
+class RequestResult:
+    """One completed request: prediction + evidence + SLO accounting."""
+    request_id: int
+    prediction: Any            # scalar class / cluster id
+    aux: Any                   # per-query algorithm evidence row
+    queue_time: int            # drain ticks from submit to completion
+    batch_time: float          # wall-clock seconds of the serving launch
+    bucket: int                # bucket the launch ran in (0 = cache hit)
+    deadline_missed: bool
+    cache_hit: bool = False
+
+
+@dataclass
+class _Pending:
+    request_id: int
+    x: np.ndarray              # (d,) query row
+    submit_tick: int
+    deadline: Optional[int]    # relative ticks, None = no SLO
+    cache_key: Optional[bytes]
+
+
+class ServingStats:
+    """SLO accumulator over completed requests and drains.
+
+    Percentiles use the nearest-rank definition (sorted latencies,
+    ``ceil(q * n)``-th value) so a hand-computed trace matches exactly.
+    """
+
+    def __init__(self):
+        self.latencies: List[int] = []     # ticks, per completed request
+        self.completed = 0
+        self.cache_hits = 0
+        self.deadline_misses = 0
+        self.launches = 0
+        self.ticks = 0
+        self.occupancies: List[float] = []  # valid rows / bucket, per launch
+        self.bucket_launches: Dict[int, int] = {}
+        self.batch_times: List[float] = []
+
+    def observe_tick(self) -> None:
+        self.ticks += 1
+
+    def observe_launch(self, bucket: int, n_valid: int,
+                       batch_time: float) -> None:
+        self.launches += 1
+        self.occupancies.append(n_valid / bucket)
+        self.bucket_launches[bucket] = \
+            self.bucket_launches.get(bucket, 0) + 1
+        self.batch_times.append(batch_time)
+
+    def observe(self, r: RequestResult) -> None:
+        self.completed += 1
+        self.latencies.append(r.queue_time)
+        self.cache_hits += r.cache_hit
+        self.deadline_misses += r.deadline_missed
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile of request latency, in ticks."""
+        if not self.latencies:
+            return float("nan")
+        vals = sorted(self.latencies)
+        rank = max(1, int(np.ceil(q * len(vals))))
+        return float(vals[rank - 1])
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.completed if self.completed else 0.0
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return self.deadline_misses / self.completed if self.completed \
+            else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Completed requests per drain tick (deterministic)."""
+        return self.completed / self.ticks if self.ticks else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancies)) if self.occupancies \
+            else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "completed": self.completed,
+            "ticks": self.ticks,
+            "launches": self.launches,
+            "p50": self.percentile(0.50),
+            "p95": self.percentile(0.95),
+            "p99": self.percentile(0.99),
+            "throughput": self.throughput,
+            "occupancy": self.mean_occupancy,
+            "hit_rate": self.hit_rate,
+            "deadline_miss_rate": self.deadline_miss_rate,
+        }
+
+
+class RequestScheduler:
+    """Micro-batching front of ``NonNeuralServeEngine``.
+
+    Policy knobs:
+      * ``max_wait`` — coalescing window in drain ticks: a drain launches
+        once the oldest pending request has waited that many ticks (or the
+        queue already fills ``max_batch``), otherwise it keeps coalescing.
+      * ``max_batch`` — cap on requests per launch (default: the engine's).
+      * ``cache_size`` — optional LRU result cache keyed on the query's
+        bytes, for repeated-query traffic (0 = off).
+
+    The engine must be warmed first (``engine.warmup_buckets(d)`` /
+    ``engine.warmup(X)``): drains coalesce ONLY into ``engine.warmed``
+    buckets, so a steady-state stream never triggers a jit compile.
+    """
+
+    def __init__(self, engine: NonNeuralServeEngine, *, max_wait: int = 4,
+                 max_batch: Optional[int] = None, cache_size: int = 0,
+                 timer: Optional[StepTimer] = None, host: int = 0):
+        assert engine.warmed, \
+            "warm the engine first (engine.warmup_buckets(d)) — the " \
+            "scheduler only coalesces into already-compiled buckets"
+        self.engine = engine
+        self.max_wait = int(max_wait)
+        self.max_batch = min(int(max_batch or engine.max_batch),
+                             engine.max_batch)
+        # snapshot NOW: drains coalesce only into buckets compiled before
+        # the stream started, so `bucket_launches keys ⊆ sched.warmed` is a
+        # real no-compile-mid-stream invariant (engine.warmed itself grows
+        # with every launch, which would make the check vacuous)
+        self.warmed = frozenset(b for b in engine.warmed
+                                if b <= self.max_batch)
+        assert self.warmed, (engine.warmed, self.max_batch)
+        self.cache_size = int(cache_size)
+        self._cache: "OrderedDict[bytes, Any]" = OrderedDict()
+        self.timer = timer or StepTimer()
+        self.host = host
+        self.tick = 0
+        self.queue: Deque[_Pending] = deque()
+        self.stats = ServingStats()
+        self.results: Dict[int, RequestResult] = {}
+        self.events: List[tuple] = []      # straggler escalations per drain
+        self._next_id = 0
+
+    # ------------------------------------------------------------ submit
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def _submit_one(self, row: np.ndarray, deadline: Optional[int]) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        key = row.tobytes() if self.cache_size else None
+        if key is not None and key in self._cache:
+            self._cache.move_to_end(key)
+            pred, aux = self._cache[key]
+            res = RequestResult(request_id=rid, prediction=pred, aux=aux,
+                                queue_time=0, batch_time=0.0, bucket=0,
+                                deadline_missed=False, cache_hit=True)
+            self.results[rid] = res
+            self.stats.observe(res)
+            return rid
+        self.queue.append(_Pending(request_id=rid, x=row,
+                                   submit_tick=self.tick,
+                                   deadline=deadline, cache_key=key))
+        return rid
+
+    def submit(self, x, deadline: Optional[int] = None):
+        """Enqueue one query (``(d,)`` -> request id) or a small batch
+        (``(B, d)`` -> list of ids).  ``deadline`` is an SLO in drain
+        ticks relative to now; a request completing later than that is
+        counted as a deadline miss (it is still served)."""
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            return self._submit_one(x, deadline)
+        return [self._submit_one(row, deadline) for row in x]
+
+    # ------------------------------------------------------------- drain
+
+    def _pick_bucket(self, n: int) -> int:
+        """The largest power-of-two bucket that fits: the smallest WARMED
+        bucket covering all ``n`` coalesced requests (padding the tail), or
+        the biggest warmed bucket when the queue overflows it (the rest
+        waits — backpressure).  Never a size outside the init-time warmed
+        snapshot, so no jit compile can land mid-stream."""
+        warmed = sorted(self.warmed)
+        covering = [b for b in warmed if b >= n]
+        return covering[0] if covering else warmed[-1]
+
+    def drain(self, force: bool = False) -> List[RequestResult]:
+        """One scheduler tick: coalesce + launch if the window expired (or
+        ``force``), else keep coalescing.  Returns completed requests."""
+        self.tick += 1
+        self.stats.observe_tick()
+        if not self.queue:
+            return []
+        ready = (force
+                 or len(self.queue) >= self.max_batch
+                 or self.tick - self.queue[0].submit_tick >= self.max_wait)
+        if not ready:
+            return []
+        n = min(len(self.queue), self.max_batch)
+        bucket = self._pick_bucket(n)
+        taken = [self.queue.popleft() for _ in range(min(n, bucket))]
+        batch = np.stack([p.x for p in taken])
+        if batch.shape[0] < bucket:      # pad so the engine reuses the
+            batch = np.concatenate(      # compiled bucket-sized executable
+                [batch, np.zeros((bucket - batch.shape[0], batch.shape[1]),
+                                 batch.dtype)])
+        t0 = time.perf_counter()
+        res = self.engine.classify(batch)
+        jax.block_until_ready(res.classes)
+        batch_time = time.perf_counter() - t0
+
+        verdict = self.timer.record(self.host, batch_time)
+        if verdict.action != "ok":
+            self.events.append((verdict.action, self.tick, verdict.ratio))
+        self.stats.observe_launch(bucket, len(taken), batch_time)
+
+        classes = np.asarray(res.classes)
+        aux = np.asarray(res.aux)
+        out = []
+        for i, p in enumerate(taken):
+            queue_time = self.tick - p.submit_tick
+            missed = p.deadline is not None and queue_time > p.deadline
+            r = RequestResult(request_id=p.request_id,
+                              prediction=classes[i], aux=aux[i],
+                              queue_time=queue_time, batch_time=batch_time,
+                              bucket=bucket, deadline_missed=missed)
+            self.results[p.request_id] = r
+            self.stats.observe(r)
+            if p.cache_key is not None:
+                # copy the rows: views would pin the launch's whole
+                # bucket-sized arrays for the cache entry's lifetime
+                self._cache[p.cache_key] = (classes[i].copy(),
+                                            aux[i].copy())
+                self._cache.move_to_end(p.cache_key)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+            out.append(r)
+        return out
+
+    def flush(self) -> List[RequestResult]:
+        """Drain until the queue is empty (end-of-trace)."""
+        out: List[RequestResult] = []
+        while self.queue:
+            out.extend(self.drain(force=True))
+        return out
+
+
+# ----------------------------------------------------------------- traces
+
+def poisson_trace(rate: float, ticks: int, seed: int = 0) -> np.ndarray:
+    """Poisson-ish arrival counts per drain tick from a seeded rng — the
+    deterministic open-loop load model for --stream and serving_load."""
+    rng = np.random.default_rng(seed)
+    return rng.poisson(rate, size=int(ticks)).astype(np.int64)
+
+
+def replay_trace(scheduler: RequestScheduler, queries: np.ndarray,
+                 counts, *, deadline: Optional[int] = None) -> List[int]:
+    """Open-loop replay: at each tick submit ``counts[t]`` queries (cycling
+    the rows of ``queries``) then drain once; flush the tail at the end.
+    Returns the request ids in submission order."""
+    queries = np.asarray(queries, np.float32)
+    ids: List[int] = []
+    i = 0
+    for c in counts:
+        for _ in range(int(c)):
+            ids.append(scheduler.submit(queries[i % len(queries)],
+                                        deadline=deadline))
+            i += 1
+        scheduler.drain()
+    scheduler.flush()
+    return ids

@@ -99,6 +99,33 @@ def test_quantize_params_selective():
     assert Q.quant_bytes(params) < 0.6 * (512 * 256 * 2 + 256 * 2)
 
 
+def _serialized_bytes(qparams) -> int:
+    """Ground truth: bytes of the leaves quantize_params actually made."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            qparams, is_leaf=lambda x: isinstance(x, Q.QuantTensor)):
+        if isinstance(leaf, Q.QuantTensor):
+            total += leaf.q.size * leaf.q.dtype.itemsize
+            total += leaf.scale.size * leaf.scale.dtype.itemsize
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+@pytest.mark.parametrize("min_size", [1, 1 << 8, 1 << 11, 1 << 16])
+def test_quant_bytes_matches_quantize_params(min_size):
+    """Regression: quant_bytes hardcoded the 1<<16 threshold, so callers of
+    quantize_params(min_size=...) got a size estimate for a DIFFERENT
+    quantization.  Both must share one _should_quantize predicate."""
+    params = {"w_big": jnp.ones((64, 32), jnp.float32),        # 2048 elems
+              "w_small": jnp.ones((8, 4), jnp.float32),        # 32 elems
+              "bias": jnp.ones((300,), jnp.float32),           # ndim 1: never
+              "emb": jnp.ones((16, 16, 4), jnp.float32),       # 1024 elems
+              "ids": jnp.ones((40, 40), jnp.int32)}            # int: never
+    qp = Q.quantize_params(params, min_size=min_size)
+    assert Q.quant_bytes(params, min_size=min_size) == _serialized_bytes(qp)
+
+
 def test_quantized_model_generates():
     """End-to-end: int8-quantised smoke model still decodes sensibly
     (logits close to the bf16 model's)."""

@@ -74,6 +74,50 @@ def test_empty_batch(blobs):
     assert res.neighbors.shape == (0, 4) and res.neighbors.dtype == jnp.int32
 
 
+def test_warmup_keeps_bucket_launches_clean(blobs):
+    """Regression: warmup used to route through classify(), so compile-time
+    launches landed in bucket_launches and inflated production capacity
+    counts.  Warmup must compile (tracked via .warmed) without counting."""
+    X, y = blobs
+    eng = NonNeuralServeEngine(_fit("gnb", X, y), max_batch=32)
+    n = eng.warmup(X[:40])                     # chunks 32 + 8
+    assert n == 2
+    assert eng.bucket_launches == {}           # capacity accounting clean
+    assert eng.warmed == {8, 32}
+    eng.classify(X[:40])                       # production launches DO count
+    assert eng.bucket_launches == {32: 1, 8: 1}
+
+
+def test_warmup_buckets_covers_every_bucket(blobs):
+    """warmup_buckets compiles the full classify-reachable bucket set (what
+    the request scheduler coalesces into) without touching the counters."""
+    X, y = blobs
+    eng = NonNeuralServeEngine(_fit("kmeans", X, y), max_batch=16)
+    assert eng.warmup_buckets(X.shape[1]) == 5
+    assert eng.warmed == {1, 2, 4, 8, 16}
+    assert eng.bucket_launches == {}
+
+
+def test_neighbors_is_knn_only(blobs):
+    """Regression: .neighbors silently returned non-neighbour aux (GNB
+    log-posteriors, RF votes, ...) for non-kNN estimators."""
+    X, y = blobs
+    for algo in sorted(E.ESTIMATORS):
+        res = NonNeuralServeEngine(_fit(algo, X, y),
+                                   max_batch=32).classify(X[:8])
+        assert res.algorithm == algo
+        if algo == "knn":
+            assert res.neighbors.shape == (8, 4)
+        else:
+            with pytest.raises(AttributeError, match="kNN-only"):
+                _ = res.neighbors
+    # the zero-query result carries the algorithm too
+    res = NonNeuralServeEngine(_fit("gnb", X, y), max_batch=32).classify(X[:0])
+    assert res.algorithm == "gnb"
+    with pytest.raises(AttributeError, match="kNN-only"):
+        _ = res.neighbors
+
+
 def test_unfitted_estimator_rejected():
     with pytest.raises(AssertionError):
         NonNeuralServeEngine(E.GNBEstimator(n_class=3))

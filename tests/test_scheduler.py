@@ -1,0 +1,212 @@
+"""Request-stream scheduler (serving/scheduler.py): streaming results must
+match one-shot classify for every algorithm (and under sharded engines),
+SLO accounting must match a hand-computed trace (time is drain ticks, so
+traces are deterministic), and a steady-state stream must never trigger a
+jit compile after warmup (bucket_launches keys stay within the warmed
+set)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.runtime.straggler import StragglerVerdict
+from repro.serving import (
+    NonNeuralServeEngine,
+    RequestScheduler,
+    poisson_trace,
+    replay_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=240, d=13, n_class=3)
+
+
+def _fit(algo, X, y):
+    return E.make_fitted(algo, X, y, n_groups=3)
+
+
+def _warmed_engine(algo, X, y, max_batch=8):
+    eng = NonNeuralServeEngine(_fit(algo, X, y), max_batch=max_batch)
+    eng.warmup_buckets(X.shape[1])
+    return eng
+
+
+# ------------------------------------------------------- streaming parity
+
+@pytest.mark.parametrize("algo", sorted(E.ESTIMATORS))
+def test_stream_matches_oneshot(algo, blobs):
+    """Every request served through the coalescing stream gets exactly the
+    prediction one-shot classify() gives the concatenated queries."""
+    X, y = blobs
+    est = _fit(algo, X, y)
+    eng = NonNeuralServeEngine(est, max_batch=16)
+    eng.warmup_buckets(X.shape[1])
+    sched = RequestScheduler(eng, max_wait=3)
+    ids = replay_trace(sched, X[:60], poisson_trace(2.5, 40, seed=7))
+    assert sched.pending == 0 and len(ids) > 40
+    Q = X[np.arange(len(ids)) % 60]
+    want_cls, want_aux = est.predict_batch(Q)
+    got_cls = np.array([sched.results[i].prediction for i in ids])
+    np.testing.assert_array_equal(got_cls, np.asarray(want_cls))
+    got_aux = np.stack([sched.results[i].aux for i in ids])
+    if np.issubdtype(got_aux.dtype, np.floating):
+        # float evidence: bucket padding changes XLA tiling, see
+        # test_nonneural_serving.test_bucket_routing_matches_direct_batch
+        np.testing.assert_allclose(got_aux, np.asarray(want_aux),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(got_aux, np.asarray(want_aux))
+
+
+def test_sharded_stream_matches_oneshot():
+    """The same stream contract over a 4-shard engine — subprocess with
+    forced host devices, same pattern as test_mesh_parity."""
+    import os
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    if os.environ.get("REPRO_BACKEND"):
+        env["REPRO_BACKEND"] = os.environ["REPRO_BACKEND"]
+    payload = textwrap.dedent("""
+        import numpy as np
+        from repro.launch.mesh import _mk
+        from repro.core.estimator import make_fitted, ESTIMATORS
+        from repro.serving import (NonNeuralServeEngine, RequestScheduler,
+                                   poisson_trace, replay_trace)
+
+        rng = np.random.default_rng(0)
+        N, d, C = 93, 13, 3
+        centers = rng.normal(size=(C, d)) * 3.0
+        y = rng.integers(0, C, size=N).astype(np.int32)
+        X = (centers[y] + rng.normal(size=(N, d))).astype(np.float32)
+        mesh = _mk((4,), ("data",))
+        for algo in sorted(ESTIMATORS):
+            est = make_fitted(algo, X, y, n_groups=C)
+            eng = NonNeuralServeEngine(est, max_batch=16, mesh=mesh)
+            eng.warmup_buckets(d)
+            assert eng.bucket_launches == {}, algo
+            assert min(eng.warmed) >= 4      # buckets clamp to shard count
+            sched = RequestScheduler(eng, max_wait=2)
+            ids = replay_trace(sched, X[:40], poisson_trace(3.0, 20, seed=5))
+            Q = X[np.arange(len(ids)) % 40]
+            want, _ = est.predict_batch(Q)
+            got = np.array([sched.results[i].prediction for i in ids])
+            np.testing.assert_array_equal(got, np.asarray(want),
+                                          err_msg=algo)
+            assert set(eng.bucket_launches) <= sched.warmed, algo
+        print("SCHED_SHARDED_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", payload],
+                         capture_output=True, text=True, timeout=560,
+                         env=env)
+    assert "SCHED_SHARDED_OK" in res.stdout, (res.stdout[-800:],
+                                              res.stderr[-2000:])
+
+
+# ------------------------------------------------- steady-state compiles
+
+def test_steady_state_never_recompiles(blobs):
+    """After warmup_buckets, a whole stream must reuse compiled buckets
+    only: bucket_launches keys ⊆ warmed, and warmed never grows."""
+    X, y = blobs
+    eng = _warmed_engine("kmeans", X, y, max_batch=16)
+    warmed = set(eng.warmed)
+    assert eng.bucket_launches == {}       # warmup left the counters clean
+    sched = RequestScheduler(eng, max_wait=2)
+    replay_trace(sched, X[:50], poisson_trace(5.0, 30, seed=3))
+    assert sched.stats.completed > 100
+    assert set(eng.bucket_launches) <= warmed
+    assert eng.warmed == warmed            # nothing compiled mid-stream
+
+
+def test_unwarmed_engine_rejected(blobs):
+    X, y = blobs
+    eng = NonNeuralServeEngine(_fit("gnb", X, y), max_batch=8)
+    with pytest.raises(AssertionError, match="warm"):
+        RequestScheduler(eng)
+
+
+# ------------------------------------------------------- SLO accounting
+
+def test_stats_match_hand_computed_trace(blobs):
+    """Fixed trace, hand-computed accounting.  Warmed buckets {1,2,4,8}.
+
+    tick 0: submit q0..q4 (deadline 2)
+    tick 1: drain -> window open (wait 1 < max_wait 2), no launch
+    tick 2: drain -> launch bucket 8 (5 valid rows), latencies all 2
+            resubmit q0 -> LRU hit, latency 0
+            submit q10 (deadline 1)
+    tick 3: drain -> window open
+    tick 4: drain -> launch bucket 1, latency 2 -> deadline missed
+    """
+    X, y = blobs
+    eng = _warmed_engine("gnb", X, y, max_batch=8)
+    assert eng.warmed == {1, 2, 4, 8}
+    sched = RequestScheduler(eng, max_wait=2, cache_size=8)
+    ids = sched.submit(X[:5], deadline=2)
+    assert sched.drain() == []
+    done = sched.drain()
+    assert [r.request_id for r in done] == ids
+    assert all(r.queue_time == 2 and r.bucket == 8 and not r.cache_hit
+               and not r.deadline_missed for r in done)
+    hit = sched.results[sched.submit(X[0], deadline=2)]
+    assert hit.cache_hit and hit.queue_time == 0 and hit.bucket == 0
+    late = sched.submit(X[10], deadline=1)
+    assert sched.drain() == []
+    (r,) = sched.drain()
+    assert r.request_id == late and r.queue_time == 2 and r.deadline_missed
+
+    s = sched.stats.summary()
+    # latencies sorted: [0, 2, 2, 2, 2, 2, 2] -> nearest-rank p50/p95/p99=2
+    assert s["completed"] == 7 and s["ticks"] == 4 and s["launches"] == 2
+    assert s["p50"] == 2.0 and s["p95"] == 2.0 and s["p99"] == 2.0
+    assert s["throughput"] == pytest.approx(7 / 4)
+    assert s["occupancy"] == pytest.approx((5 / 8 + 1 / 1) / 2)
+    assert s["hit_rate"] == pytest.approx(1 / 7)
+    assert s["deadline_miss_rate"] == pytest.approx(1 / 7)
+    assert sched.stats.bucket_launches == {8: 1, 1: 1}
+
+
+def test_lru_cache_eviction(blobs):
+    """cache_size=2 LRU: the oldest entry falls out, recent ones hit."""
+    X, y = blobs
+    eng = _warmed_engine("gnb", X, y)
+    sched = RequestScheduler(eng, max_wait=1, cache_size=2)
+    for i in (0, 1, 2):                    # inserts x0, x1, x2 -> evicts x0
+        sched.submit(X[i])
+        sched.drain()
+    rid = sched.submit(X[0])               # x0 was evicted -> queued
+    sched.drain()
+    assert not sched.results[rid].cache_hit
+    assert sched.results[sched.submit(X[2])].cache_hit   # x2 still resident
+
+
+def test_drain_feeds_straggler_escalation(blobs):
+    """Per-drain batch_time feeds StepTimer; non-ok verdicts land in
+    scheduler.events (the watch/checkpoint/evict escalation hook)."""
+    X, y = blobs
+
+    class Scripted:
+        calls = 0
+
+        def record(self, host, dt):
+            Scripted.calls += 1
+            action = "checkpoint" if Scripted.calls == 2 else "ok"
+            return StragglerVerdict(host=host, ratio=9.9, action=action)
+
+    eng = _warmed_engine("gnb", X, y)
+    sched = RequestScheduler(eng, max_wait=1, timer=Scripted())
+    for i in range(3):
+        sched.submit(X[i])
+        sched.drain()
+    assert Scripted.calls == 3
+    assert sched.events == [("checkpoint", 2, 9.9)]

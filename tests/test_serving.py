@@ -35,6 +35,22 @@ def test_engine_greedy_matches_reference(arch_id):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_generate_temperature_without_key_raises():
+    """Regression: temperature>0 with key=None used to die at decode step 1
+    inside jax.random.split(None); it must fail fast with a clear error,
+    and both valid paths (greedy keyless, sampled keyed) must work."""
+    cfg = get_smoke_config("stablelm-3b")
+    params = T.init_params(KEY, cfg)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    engine = ServeEngine(cfg, params, ServeConfig(max_seq=16))
+    with pytest.raises(ValueError, match="PRNGKey"):
+        engine.generate(prompts, 2, temperature=0.7)
+    assert engine.generate(prompts, 2).tokens.shape == (1, 2)
+    sampled = engine.generate(prompts, 2, temperature=0.7,
+                              key=jax.random.PRNGKey(1))
+    assert sampled.tokens.shape == (1, 2)
+
+
 def test_engine_sampling_reproducible():
     cfg = get_smoke_config("stablelm-3b")
     params = T.init_params(KEY, cfg)
