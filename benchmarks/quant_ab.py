@@ -1,0 +1,134 @@
+"""Representation A/B: fp32-ref vs fp32-fused vs bf16 vs int8 per
+algorithm x batch bucket — the repo's analogue of the paper's FP-backend
+study (§5.2, Figs. 9-11), with the quantized tier as the rung below
+bf16/fp32.
+
+For every estimator the sweep fits once per arm on the same blob problem
+(fits are deterministic, so all arms share the fitted model), jits the
+arm's ``predict_batch_fn`` and reports warm per-query latency plus the
+label-agreement-vs-fp32 column — the accuracy axis the paper reports
+alongside every representation change.  Results accumulate in
+BENCH_quant.json via benchmarks/report.py.
+
+The acceptance row: the int8 fused distance arm (kNN) must beat the fp32
+fused arm at the largest bucket — int8 tiles stream 4x more rows per VMEM
+budget and the packed integer selection keys delete the tie-break
+machinery from the top-k merge (kernels/quantized.py, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ALGORITHMS = ("knn", "kmeans", "gnb", "gmm", "rf")
+# arm label -> (PrecisionPolicy name, registry path override)
+ARMS = (
+    ("fp32-ref", "fp32", "ref"),
+    ("fp32-fused", "fp32", None),      # registry-selected hot arm
+    ("bf16", "bf16", None),
+    ("int8", "int8", None),            # quantized estimator tier
+)
+BUCKETS = (32, 128, 512)
+BUCKETS_QUICK = (16, 64)
+# seed=1: non-degenerate fits (one K-Means centroid per blob) — see
+# tests/test_estimator_conformance.py::test_int8_label_agreement_bound
+SEED = 1
+
+
+def _fit(algo, X, y, pname, path):
+    from repro.core.estimator import make_fitted
+    from repro.kernels.dispatch import get_policy
+    return make_fitted(algo, X, y, n_groups=int(y.max()) + 1,
+                       policy=get_policy(pname), path=path)
+
+
+def _arm_path(algo: str, est, bucket: int, d: int) -> str:
+    """Which executable path actually serves this arm at this shape."""
+    if est.quantized:
+        return "quant"
+    from repro.kernels import dispatch
+    if algo == "knn":
+        kw = dict(N=est.params.A.shape[0], d=d, Q=bucket, k=est.k)
+    elif algo == "kmeans":
+        kw = dict(N=bucket, d=d, K=est.params.centroids.shape[0])
+    elif algo == "gnb":
+        kw = dict(B=bucket, d=d, C=est.params.mu.shape[0])
+    else:
+        kw = {}
+    op = {"knn": "distance_topk", "kmeans": "distance_argmin",
+          "gnb": "scores", "gmm": "responsibilities",
+          "rf": "forest_votes"}[algo]
+    return dispatch.resolve(algo, op, path=est.path, **kw).name
+
+
+def _bench(fn, params, batch, iters: int) -> float:
+    import jax
+    jax.block_until_ready(fn(params, batch)[0])       # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, batch)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6 / batch.shape[0]                # us per query
+
+
+def run(csv_rows: list, quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.datasets import class_blobs
+
+    n, d = (384, 16) if quick else (1024, 21)
+    buckets = BUCKETS_QUICK if quick else BUCKETS
+    iters = 2 if quick else 5
+    n_eval = max(buckets)
+    X, y = class_blobs(n=n + n_eval, d=d, seed=SEED)
+    Xt, yt, Q = X[:n], y[:n], X[n:]
+
+    results = []
+    print("\n== Quant A/B (fp32-ref / fp32-fused / bf16 / int8) ==")
+    print(f"{'algo':7s} {'arm':10s} {'bucket':>6s} {'path':6s} "
+          f"{'us/query':>9s} {'agree':>6s}")
+    for algo in ALGORITHMS:
+        fns, agree = {}, {}
+        for arm, pname, path in ARMS:
+            est = _fit(algo, Xt, yt, pname, path)
+            fns[arm] = (est, jax.jit(est.predict_batch_fn()))
+        # label agreement vs the fp32 hot arm on the full eval set
+        base_est, base_fn = fns["fp32-fused"]
+        baseline_cls = base_fn(base_est.params, jnp.asarray(Q))[0]
+        for arm, _, _ in ARMS:
+            est, fn = fns[arm]
+            cls = fn(est.params, jnp.asarray(Q))[0]
+            agree[arm] = float(jnp.mean(cls == baseline_cls))
+        for arm, pname, path in ARMS:
+            est, fn = fns[arm]
+            for bucket in buckets:
+                batch = jnp.asarray(Q[:bucket])
+                us_q = _bench(fn, est.params, batch, iters)
+                pth = _arm_path(algo, est, bucket, d)
+                rec = {"algorithm": algo, "arm": arm, "bucket": bucket,
+                       "path": pth, "us_per_query": us_q,
+                       "label_agreement": agree[arm]}
+                results.append(rec)
+                print(f"{algo:7s} {arm:10s} {bucket:6d} {pth:6s} "
+                      f"{us_q:9.1f} {agree[arm]:6.3f}")
+                csv_rows.append(
+                    (f"quant_ab/{algo}/{arm}/b{bucket}", us_q,
+                     f"path={pth};agreement={agree[arm]:.3f}"))
+        # the acceptance comparison, printed next to the data
+        big = max(buckets)
+        fused = next(r for r in results
+                     if r["algorithm"] == algo and r["arm"] == "fp32-fused"
+                     and r["bucket"] == big)
+        q8 = next(r for r in results
+                  if r["algorithm"] == algo and r["arm"] == "int8"
+                  and r["bucket"] == big)
+        print(f"{algo:7s} int8 vs fp32-fused @b{big}: "
+              f"{fused['us_per_query'] / q8['us_per_query']:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run([], quick=True)

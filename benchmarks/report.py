@@ -23,6 +23,8 @@ BENCH_SHARDED = Path(__file__).resolve().parents[1] / \
     "BENCH_sharded.json"
 BENCH_SERVING = Path(__file__).resolve().parents[1] / \
     "BENCH_serving.json"
+BENCH_QUANT = Path(__file__).resolve().parents[1] / \
+    "BENCH_quant.json"
 
 # Required keys per BENCH accumulator: every entry must carry the
 # envelope, every result record the per-kind keys.  The trajectory files
@@ -39,6 +41,8 @@ _RESULT_KEYS = {
     "serving": ("algorithm", "rate", "max_wait", "p50", "p95", "p99",
                 "throughput", "occupancy", "hit_rate",
                 "deadline_miss_rate"),
+    "quant": ("algorithm", "arm", "bucket", "path", "us_per_query",
+              "label_agreement"),
 }
 
 
@@ -188,6 +192,29 @@ def write_serving_entry(results, path: Path = BENCH_SERVING) -> dict:
     return _append_entry(results, path, "serving")
 
 
+def write_quant_entry(results, path: Path = BENCH_QUANT) -> dict:
+    """Append one representation A/B sweep (fp32-ref / fp32-fused / bf16 /
+    int8 per algorithm x bucket, latency + label agreement — the Fig. 9-11
+    analogue) to BENCH_quant.json."""
+    return _append_entry(results, path, "quant")
+
+
+def quant_table(path: Path = BENCH_QUANT) -> str:
+    if not path.exists():
+        return "(no BENCH_quant.json yet — run benchmarks/run.py)"
+    data = load_bench(path, "quant")
+    lines = ["| when | algo | arm | bucket | path | us/query | "
+             "agreement vs fp32 |",
+             "|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | {r['arm']} | "
+                f"{r['bucket']} | {r['path']} | {r['us_per_query']:.1f} | "
+                f"{r['label_agreement']:.3f} |")
+    return "\n".join(lines)
+
+
 def serving_table(path: Path = BENCH_SERVING) -> str:
     if not path.exists():
         return "(no BENCH_serving.json yet — run benchmarks/serving_load.py)"
@@ -289,7 +316,17 @@ def main():
                     help="run the request-stream scheduler load sweep "
                          "(rate x algorithm x bucket policy) and append "
                          "an entry to BENCH_serving.json")
+    ap.add_argument("--quant", action="store_true",
+                    help="run the representation A/B (fp32-ref / "
+                         "fp32-fused / bf16 / int8 per algorithm x "
+                         "bucket) and append an entry to BENCH_quant.json")
     args = ap.parse_args()
+    if args.quant:
+        from benchmarks.quant_ab import run as run_quant
+        write_quant_entry(run_quant([], quick=True))
+        print("\n### Quant A/B\n")
+        print(quant_table())
+        return
     if args.serving:
         from benchmarks.serving_load import run as run_serving
         write_serving_entry(run_serving([], quick=True))

@@ -23,7 +23,7 @@ def main() -> None:
     csv_rows: list = []
 
     from benchmarks import cortex_m4, estimator_sweep, fp_backends
-    from benchmarks import kernel_blocks, parallel_speedup, report
+    from benchmarks import kernel_blocks, parallel_speedup, quant_ab, report
     from benchmarks import roofline, serving_load, sorting
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
@@ -39,6 +39,8 @@ def main() -> None:
     report.write_sharded_entry(sharded)         # 1-vs-8-shard vs Amdahl
     serving = serving_load.run(csv_rows, quick=args.quick)
     report.write_serving_entry(serving)         # rate x algo x bucket policy
+    quant = quant_ab.run(csv_rows, quick=args.quick)
+    report.write_quant_entry(quant)             # representation A/B (§5.2)
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import cluster as _cluster
@@ -44,8 +45,10 @@ from repro.core import gmm as _gmm
 from repro.core import gnb as _gnb
 from repro.core import kmeans as _kmeans
 from repro.core import knn as _knn
+from repro.core import quantization as _quant
 from repro.core import random_forest as _rf
 from repro.kernels import dispatch
+from repro.kernels import quantized as _qk
 from repro.kernels.dispatch import PrecisionPolicy
 
 
@@ -92,6 +95,7 @@ class _EstimatorBase:
         self._params: Optional[NamedTuple] = None
         self.mesh = None           # set by fit_sharded
         self.mesh_axis = "data"
+        self._cal_absmax = None    # per-feature |X| max recorded by fit
 
     @property
     def params(self) -> NamedTuple:
@@ -102,6 +106,14 @@ class _EstimatorBase:
     @property
     def fitted(self) -> bool:
         return self._params is not None
+
+    @property
+    def quantized(self) -> bool:
+        """True once ``quantize()`` rewrote the params to their int8 form
+        (core/quantization.py) — the serving hot path then runs the
+        quantized kernels regardless of ``path``."""
+        return self._params is not None and \
+            _quant.is_quantized_params(self._params)
 
     def _cast(self, x):
         return self.policy.cast(jnp.asarray(x)) if self.policy \
@@ -120,6 +132,37 @@ class _EstimatorBase:
         empty request batch."""
         raise NotImplementedError
 
+    def _finalize_fit(self, X) -> "Estimator":
+        """Record the per-feature calibration statistics every fit leaves
+        behind, then quantize in place when the policy asks for the int8
+        tier (DESIGN.md §8)."""
+        self._cal_absmax = _quant.calibrate_absmax(X)
+        if self.policy is not None and self.policy.quantized:
+            self.quantize()
+        return self
+
+    def quantize(self) -> "Estimator":
+        """Rewrite the fitted params into their int8 lattice form
+        (idempotent).  Calibration scales come from the training data the
+        fit recorded; ``from_params`` estimators fall back to bounds
+        derivable from the params (core/quantization.py)."""
+        assert self.fitted, f"fit {type(self).__name__} before quantize()"
+        if not self.quantized:
+            self._params = self._quantize(self._params, self._cal_absmax)
+        return self
+
+    def _quantize(self, params, absmax) -> NamedTuple:
+        raise NotImplementedError
+
+    def dequantize_params(self) -> NamedTuple:
+        """Reconstruct the fp32 param NamedTuple from the quantized form —
+        exact up to lattice rounding (the round-trip bound tests)."""
+        assert self.quantized, f"{type(self).__name__} is not quantized"
+        return self._dequantize(self._params)
+
+    def _dequantize(self, qparams) -> NamedTuple:
+        raise NotImplementedError
+
     def fit_sharded(self, X, y=None, *, mesh, axis: str = "data"
                     ) -> "Estimator":
         """Data-parallel fit over ``mesh``'s ``axis`` (DESIGN.md §5).
@@ -127,6 +170,11 @@ class _EstimatorBase:
         Every subclass implements ``_fit_sharded``; the base records the
         mesh so ``predict_batch_sharded_fn()`` can default to it.
         """
+        if self.policy is not None and self.policy.quantized:
+            raise NotImplementedError(
+                "the int8 tier is single-device: quantized params have no "
+                "sharded serving arm yet (DESIGN.md §8) — fit_sharded with "
+                "policy fp32/bf16 or drop mesh=")
         self._fit_sharded(X, y, mesh, axis)
         self.mesh, self.mesh_axis = mesh, axis
         return self
@@ -170,7 +218,7 @@ class KNNEstimator(_EstimatorBase):
         n_class = self.n_class or int(jnp.max(y)) + 1
         self._params = _knn.KNNModel(A=self._cast(X), labels=y,
                                      n_class=n_class)
-        return self
+        return self._finalize_fit(X)
 
     def _fit_sharded(self, X, y, mesh, axis) -> None:
         """kNN "training" is storing the reference set — the sharded fit
@@ -195,11 +243,27 @@ class KNNEstimator(_EstimatorBase):
                                     n_class=model.n_class)
         return est
 
+    def _quantize(self, params, absmax):
+        return _quant.quantize_knn(params, absmax)
+
+    def _dequantize(self, qparams):
+        return _quant.dequantize_knn(qparams)
+
     def predict_batch_fn(self) -> Callable:
-        k, policy, path = self.k, self.policy, self.path
+        k = self.k
         # n_class is static shape metadata (vote array length) — close over
         # it so jitted callers can pass params as traced device buffers
         n_class = self.params.n_class
+        if self.quantized:
+            def qfn(params: _quant.QuantKNNModel, X):
+                xq = _qk.quantize_rows(X, params.scale)
+                _, nbr = _qk.distance_topk_q8(params.qa, xq, k)
+                classes = jax.vmap(
+                    lambda nb: _knn._vote(params.labels, nb, n_class))(nbr)
+                return classes, nbr
+
+            return qfn
+        policy, path = self.policy, self.path
 
         def fn(params: _knn.KNNModel, X):
             X = policy.cast(X) if policy else X
@@ -253,7 +317,7 @@ class KMeansEstimator(_EstimatorBase):
                                       max_iters=self.max_iters,
                                       n_cores=self.n_cores)
         self._params = state._replace(centroids=self._cast(state.centroids))
-        return self
+        return self._finalize_fit(X)
 
     def _fit_sharded(self, X, y, mesh, axis) -> None:
         state, _ = _cluster.kmeans_fit_shardmap(
@@ -268,7 +332,20 @@ class KMeansEstimator(_EstimatorBase):
         est._params = state
         return est
 
+    def _quantize(self, params, absmax):
+        return _quant.quantize_kmeans(params, absmax)
+
+    def _dequantize(self, qparams):
+        return _quant.dequantize_kmeans(qparams)
+
     def predict_batch_fn(self) -> Callable:
+        if self.quantized:
+            def qfn(params: _quant.QuantKMeansParams, X):
+                xq = _qk.quantize_rows(X, params.scale)
+                lat, ids = _qk.distance_argmin_q8(xq, params.qc)
+                return ids, lat.astype(jnp.float32) * params.dequant
+
+            return qfn
         policy, path = self.policy, self.path
 
         def fn(params: _kmeans.KMeansState, X):
@@ -314,12 +391,12 @@ class GNBEstimator(_EstimatorBase):
     def fit(self, X, y=None) -> "GNBEstimator":
         assert y is not None, "GNB is supervised"
         y = jnp.asarray(y, jnp.int32)
-        n_class = self.n_class or int(jnp.max(y)) + 1
+        n_class = self.n_class = self.n_class or int(jnp.max(y)) + 1
         model = _gnb.fit_gnb(jnp.asarray(X), y, n_class, self.var_smoothing)
         self._params = _gnb.GNBModel(mu=self._cast(model.mu),
                                      var=self._cast(model.var),
                                      log_prior=model.log_prior)
-        return self
+        return self._finalize_fit(X)
 
     def _fit_sharded(self, X, y, mesh, axis) -> None:
         assert y is not None, "GNB is supervised"
@@ -338,7 +415,21 @@ class GNBEstimator(_EstimatorBase):
         est._params = model
         return est
 
+    def _quantize(self, params, absmax):
+        return _quant.quantize_gnb(params, absmax)
+
+    def _dequantize(self, qparams):
+        return _quant.dequantize_gnb(qparams)
+
     def predict_batch_fn(self) -> Callable:
+        if self.quantized:
+            def qfn(params: _quant.QuantGNBParams, X):
+                scores = _qk.affine_scores(
+                    _qk.quantize_rows(X, params.scale), params.quad,
+                    params.lin, params.const + params.log_prior)
+                return jnp.argmax(scores, axis=1), scores
+
+            return qfn
         policy, path = self.policy, self.path
 
         def fn(params: _gnb.GNBModel, X):
@@ -364,7 +455,10 @@ class GNBEstimator(_EstimatorBase):
         return fn
 
     def empty_aux(self) -> jnp.ndarray:
-        return jnp.zeros((0, self.params.mu.shape[0]), jnp.float32)
+        # class count from static config, not params.mu — the quantized
+        # param form stores score tables instead of moments
+        n_class = self.n_class or self.params.mu.shape[0]
+        return jnp.zeros((0, n_class), jnp.float32)
 
 
 class GMMEstimator(_EstimatorBase):
@@ -391,7 +485,7 @@ class GMMEstimator(_EstimatorBase):
                                 n_cores=self.n_cores)
         self._params = state._replace(mu=self._cast(state.mu),
                                       var=self._cast(state.var))
-        return self
+        return self._finalize_fit(X)
 
     def _fit_sharded(self, X, y, mesh, axis) -> None:
         state, _ = _cluster.gmm_fit_shardmap(
@@ -406,7 +500,22 @@ class GMMEstimator(_EstimatorBase):
         est._params = state
         return est
 
+    def _quantize(self, params, absmax):
+        return _quant.quantize_gmm(params, absmax)
+
+    def _dequantize(self, qparams):
+        return _quant.dequantize_gmm(qparams)
+
     def predict_batch_fn(self) -> Callable:
+        if self.quantized:
+            def qfn(params: _quant.QuantGMMParams, X):
+                joint = _qk.affine_scores(
+                    _qk.quantize_rows(X, params.scale), params.quad,
+                    params.lin, params.const + params.log_pi)
+                lr = joint - jax.nn.logsumexp(joint, axis=1, keepdims=True)
+                return jnp.argmax(lr, axis=1), lr
+
+            return qfn
         policy, path, n_cores = self.policy, self.path, self.n_cores
 
         def fn(params: _gmm.GMMState, X):
@@ -432,7 +541,7 @@ class GMMEstimator(_EstimatorBase):
         return fn
 
     def empty_aux(self) -> jnp.ndarray:
-        return jnp.zeros((0, self.params.mu.shape[0]), jnp.float32)
+        return jnp.zeros((0, self.n_components), jnp.float32)
 
 
 class RandomForestEstimator(_EstimatorBase):
@@ -462,7 +571,7 @@ class RandomForestEstimator(_EstimatorBase):
                                         max_depth=self.max_depth,
                                         min_samples=self.min_samples,
                                         seed=self.seed)
-        return self
+        return self._finalize_fit(X)
 
     def _fit_sharded(self, X, y, mesh, axis) -> None:
         assert y is not None, "RF is supervised"
@@ -480,9 +589,27 @@ class RandomForestEstimator(_EstimatorBase):
         est._params = forest
         return est
 
+    def _quantize(self, params, absmax):
+        return _quant.quantize_forest(params, absmax)
+
+    def _dequantize(self, qparams):
+        return _quant.dequantize_forest(qparams)
+
     def predict_batch_fn(self) -> Callable:
         policy, path, n_cores = self.policy, self.path, self.n_cores
         n_class = self.params.n_class          # static (vote array length)
+        if self.quantized:
+            def qfn(params: _quant.QuantForest, X):
+                # int8-vs-int8 node compares through the SAME traversal
+                # code path — Forest is dtype-generic in its thresholds
+                forest = _rf.Forest(feature=params.feature,
+                                    threshold=params.qthreshold,
+                                    left=params.left, right=params.right,
+                                    n_class=n_class)
+                xq = _qk.quantize_rows(X, params.scale)
+                return _rf.forest_classify_batch(forest, xq, n_cores)
+
+            return qfn
 
         def fn(params: _rf.Forest, X):
             X = policy.cast(X) if policy else X

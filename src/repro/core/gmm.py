@@ -33,10 +33,22 @@ class GMMState(NamedTuple):
 
 
 def _log_gauss(x, mu, var):
-    """x: (m, d); mu/var: (k, d) -> (m, k) component log-densities."""
-    diff = x[:, None, :] - mu[None]
-    return -0.5 * jnp.sum(diff * diff / var[None] + jnp.log(var)[None]
-                          + _LOG2PI, axis=-1)
+    """x: (m, d); mu/var: (k, d) -> (m, k) component log-densities.
+
+    GEMM-identity form: expanding (x - mu)^2 = x^2 - 2*x*mu + mu^2 turns
+    the log-density into two (m, d) x (d, k) matmuls plus an x-free
+    per-component constant — the (m, k, d) broadcast diff tensor the old
+    formula materialised never exists, and the fp32 path shares the exact
+    arithmetic shape of the quant arm's affine score tables
+    (core/quantization.py::gauss_score_tables), so the int8 A/B measures
+    representation, not a free tensor-contraction rewrite.  Equal to the
+    dense formula to accumulation-order tolerance
+    (tests/test_core_algorithms.py::test_log_gauss_gemm_identity)."""
+    inv = 1.0 / var                                    # (k, d)
+    quad = (x * x) @ (-0.5 * inv).T                    # (m, k)
+    lin = x @ (mu * inv).T                             # (m, k)
+    const = -0.5 * jnp.sum(mu * mu * inv + jnp.log(var) + _LOG2PI, axis=1)
+    return quad + lin + const[None, :]
 
 
 def gmm_e_step(A, mu, var, log_pi, n_cores: int = 8):

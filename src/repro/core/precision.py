@@ -66,6 +66,16 @@ BACKENDS: Dict[str, BackendCosts] = {
                             exp=2000, elem=8, ielem=8),
     "fpu": BackendCosts("fpu", add=1, mul=1, div=11, cmp=1, exp=75, elem=2,
                         ielem=7),
+    # int8 SIMD (PULP-NN style): 4x 8-bit MACs per cycle on the paper's
+    # RI5CY cores, so add/mul/cmp cost a quarter cycle in the steady
+    # state; div/exp stay fp32 (the quant arms fold them into fp32 score
+    # tables at calibration — core/quantization.py — so the per-inference
+    # census keeps them only where a kernel genuinely evaluates them);
+    # per-element overhead halves (loads move 4-packed bytes); integer
+    # traversal work (ielem) is representation-invariant — the same
+    # reason RF only gains 2.48x from the FPU (§5.2)
+    "int8": BackendCosts("int8", add=0.25, mul=0.25, div=11, cmp=0.25,
+                         exp=75, elem=1, ielem=7),
     "cortex-m4": BackendCosts("cortex-m4", add=1, mul=1, div=14, cmp=1.5,
                               exp=140, elem=7, ielem=9.5),
 }

@@ -1,0 +1,242 @@
+"""Per-estimator int8 calibration: quantized param pytrees + round trips.
+
+The paper's FP-representation study (§5.2) swaps the numeric library under
+an unchanged algorithm; the quant arm swaps the *stored representation* of
+the fitted parameters.  Calibration derives per-feature symmetric scales
+from the fitted training data (``Estimator.fit`` records the feature
+abs-max; ``from_params`` estimators fall back to bounds derivable from the
+params themselves) and rewrites each estimator's params into an int8 form
+its quant serving path consumes directly:
+
+  kNN       -> int8 reference rows on the feature lattice,
+  K-Means   -> int8 centroids (+ the mean-squared-scale dequant factor for
+               the reported assignment distances),
+  GNB / GMM -> fp32 per-class affine score tables over int8 features (the
+               GEMM identity folds every divide/log/exp of the Gaussian
+               log-density into calibration time),
+  RF        -> int8 thresholds on the same lattice as the features (the
+               traversal compares int8 against int8).
+
+Every ``quantize_*`` has a ``dequantize_*`` inverse reconstructing the
+original param NamedTuple up to lattice rounding — the round-trip bound
+tests in tests/test_estimator_conformance.py pin the error to half a
+lattice step (features/thresholds) or float rounding (table algebra).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gmm import GMMState
+from repro.core.gnb import GNBModel
+from repro.core.kmeans import KMeansState
+from repro.core.knn import KNNModel
+from repro.core.random_forest import Forest
+from repro.kernels import quantized as qk
+
+_LOG2PI = math.log(2.0 * math.pi)
+
+
+# ---------------------------------------------------------------------------
+# Quantized param pytrees (NamedTuples so they flow through jit unchanged)
+# ---------------------------------------------------------------------------
+
+
+class QuantKNNModel(NamedTuple):
+    qa: jax.Array        # (N, d) int8 reference rows
+    scale: jax.Array     # (d,) f32 per-feature symmetric scale
+    labels: jax.Array    # (N,) int32
+    n_class: int
+
+
+class QuantKMeansParams(NamedTuple):
+    qc: jax.Array        # (K, d) int8 centroids
+    scale: jax.Array     # (d,) f32
+    dequant: jax.Array   # () f32 mean squared scale: lattice -> f32 distance
+
+
+class QuantGNBParams(NamedTuple):
+    quad: jax.Array      # (C, d) f32: -0.5 * scale^2 / var
+    lin: jax.Array       # (C, d) f32: scale * mu / var
+    const: jax.Array     # (C,) f32: the x-free Gaussian terms
+    log_prior: jax.Array  # (C,) f32 (kept separate so the round trip is exact)
+    scale: jax.Array     # (d,) f32
+
+
+class QuantGMMParams(NamedTuple):
+    quad: jax.Array      # (k, d) f32
+    lin: jax.Array       # (k, d) f32
+    const: jax.Array     # (k,) f32
+    log_pi: jax.Array    # (k,) f32
+    scale: jax.Array     # (d,) f32
+
+
+class QuantForest(NamedTuple):
+    feature: jax.Array     # (T, M) int32; < 0 marks a leaf (unchanged)
+    qthreshold: jax.Array  # (T, M) int8 thresholds on the feature lattice
+    left: jax.Array        # (T, M) int32
+    right: jax.Array       # (T, M) int32
+    scale: jax.Array       # (d,) f32
+    n_class: int
+
+
+QUANT_PARAM_TYPES = (QuantKNNModel, QuantKMeansParams, QuantGNBParams,
+                     QuantGMMParams, QuantForest)
+
+
+def is_quantized_params(params) -> bool:
+    return isinstance(params, QUANT_PARAM_TYPES)
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_absmax(X) -> jax.Array:
+    """Per-feature abs-max of the training data — what ``fit`` records."""
+    return jnp.max(jnp.abs(jnp.asarray(X, jnp.float32)), axis=0)
+
+
+def gauss_absmax(mu, var, n_sigma: float = 4.0) -> jax.Array:
+    """Feature range implied by per-class Gaussians: |mu| + n_sigma*sigma,
+    max over classes — the fallback when no training data was recorded."""
+    return jnp.max(jnp.abs(mu) + n_sigma * jnp.sqrt(var), axis=0)
+
+
+def forest_absmax(feature, threshold, d: int) -> jax.Array:
+    """Per-feature abs-max over the thresholds that actually test that
+    feature (leaves excluded); features never tested get scale-neutral 1.0
+    — their lattice value cannot influence any comparison."""
+    f = feature.reshape(-1)
+    t = jnp.abs(threshold.reshape(-1))
+    valid = f >= 0
+    out = jnp.zeros((d,), jnp.float32).at[jnp.where(valid, f, 0)].max(
+        jnp.where(valid, t, 0.0))
+    return jnp.where(out > 0, out, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# kNN
+# ---------------------------------------------------------------------------
+
+
+def quantize_knn(model: KNNModel,
+                 absmax: Optional[jax.Array] = None) -> QuantKNNModel:
+    absmax = calibrate_absmax(model.A) if absmax is None else absmax
+    scale = qk.feature_scales(absmax)
+    return QuantKNNModel(qa=qk.quantize_rows(model.A, scale), scale=scale,
+                         labels=model.labels, n_class=model.n_class)
+
+
+def dequantize_knn(qp: QuantKNNModel) -> KNNModel:
+    return KNNModel(A=qk.dequantize_rows(qp.qa, qp.scale), labels=qp.labels,
+                    n_class=qp.n_class)
+
+
+# ---------------------------------------------------------------------------
+# K-Means
+# ---------------------------------------------------------------------------
+
+
+def quantize_kmeans(state: KMeansState,
+                    absmax: Optional[jax.Array] = None) -> QuantKMeansParams:
+    absmax = calibrate_absmax(state.centroids) if absmax is None else absmax
+    scale = qk.feature_scales(absmax)
+    return QuantKMeansParams(qc=qk.quantize_rows(state.centroids, scale),
+                             scale=scale,
+                             dequant=jnp.mean(scale * scale))
+
+
+def dequantize_kmeans(qp: QuantKMeansParams) -> KMeansState:
+    return KMeansState(centroids=qk.dequantize_rows(qp.qc, qp.scale),
+                       shift=jnp.zeros(()), n_iter=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# GNB / GMM — the Gaussian log-density as affine tables over the lattice
+# ---------------------------------------------------------------------------
+
+
+def gauss_score_tables(mu, var, scale):
+    """Fold the diagonal-Gaussian log-density into per-class affine tables
+    over int8 lattice features: with x ~= scale * xq,
+
+      sum_f -0.5*((x-mu)^2/var + log var + log 2pi)
+        = sum_f quad[c,f]*xq^2 + lin[c,f]*xq + const[c].
+    """
+    mu = jnp.asarray(mu, jnp.float32)
+    var = jnp.asarray(var, jnp.float32)
+    quad = -0.5 * (scale * scale)[None, :] / var
+    lin = (scale[None, :] * mu) / var
+    const = -0.5 * jnp.sum(mu * mu / var + jnp.log(var) + _LOG2PI, axis=1)
+    return quad, lin, const
+
+
+def _tables_to_gauss(quad, lin, scale):
+    """Invert ``gauss_score_tables`` (exact up to float rounding)."""
+    var = -0.5 * (scale * scale)[None, :] / quad
+    mu = lin * var / scale[None, :]
+    return mu, var
+
+
+def quantize_gnb(model: GNBModel,
+                 absmax: Optional[jax.Array] = None) -> QuantGNBParams:
+    absmax = gauss_absmax(model.mu, model.var) if absmax is None else absmax
+    scale = qk.feature_scales(absmax)
+    quad, lin, const = gauss_score_tables(model.mu, model.var, scale)
+    return QuantGNBParams(quad=quad, lin=lin, const=const,
+                          log_prior=model.log_prior, scale=scale)
+
+
+def dequantize_gnb(qp: QuantGNBParams) -> GNBModel:
+    mu, var = _tables_to_gauss(qp.quad, qp.lin, qp.scale)
+    return GNBModel(mu=mu, var=var, log_prior=qp.log_prior)
+
+
+def quantize_gmm(state: GMMState,
+                 absmax: Optional[jax.Array] = None) -> QuantGMMParams:
+    absmax = gauss_absmax(state.mu, state.var) if absmax is None else absmax
+    scale = qk.feature_scales(absmax)
+    quad, lin, const = gauss_score_tables(state.mu, state.var, scale)
+    return QuantGMMParams(quad=quad, lin=lin, const=const,
+                          log_pi=state.log_pi, scale=scale)
+
+
+def dequantize_gmm(qp: QuantGMMParams) -> GMMState:
+    mu, var = _tables_to_gauss(qp.quad, qp.lin, qp.scale)
+    return GMMState(mu=mu, var=var, log_pi=qp.log_pi,
+                    log_lik=jnp.zeros(()), n_iter=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# RF — int8 threshold-compare traversal
+# ---------------------------------------------------------------------------
+
+
+def quantize_forest(forest: Forest,
+                    absmax: Optional[jax.Array] = None,
+                    d: Optional[int] = None) -> QuantForest:
+    if absmax is None:
+        d = int(jnp.max(forest.feature)) + 1 if d is None else d
+        absmax = forest_absmax(forest.feature, forest.threshold, d)
+    scale = qk.feature_scales(absmax)
+    node_scale = scale[jnp.maximum(forest.feature, 0)]
+    qt = jnp.round(forest.threshold / node_scale)
+    qt = jnp.where(forest.feature >= 0,
+                   jnp.clip(qt, -qk._QMAX, qk._QMAX), 0.0)
+    return QuantForest(feature=forest.feature,
+                       qthreshold=qt.astype(jnp.int8),
+                       left=forest.left, right=forest.right, scale=scale,
+                       n_class=forest.n_class)
+
+
+def dequantize_forest(qp: QuantForest) -> Forest:
+    node_scale = qp.scale[jnp.maximum(qp.feature, 0)]
+    thr = jnp.where(qp.feature >= 0,
+                    qp.qthreshold.astype(jnp.float32) * node_scale, 0.0)
+    return Forest(feature=qp.feature, threshold=thr, left=qp.left,
+                  right=qp.right, n_class=qp.n_class)

@@ -53,20 +53,38 @@ def tree_predict(feature, threshold, left, right, x):
 
 def forest_predict(forest: Forest, x, n_cores: int = 8):
     """Fig. 8: DTs statically chunked over cores; per-core tree execution;
-    vote update (the critical section -> one-hot reduction); ArgMax."""
+    vote update (the critical section -> one-hot reduction); ArgMax.
+
+    Ragged forests (T not a multiple of n_cores) are padded with
+    single-leaf dummy trees voting for a sentinel bin one past the real
+    classes, which is sliced off before the ArgMax — the same
+    pad-then-slice contract every row-chunked op already honours."""
     T = forest.feature.shape[0]
-    assert T % n_cores == 0, (T, n_cores)
-    fc = split_chunks(forest.feature, n_cores)
-    tc = split_chunks(forest.threshold, n_cores)
-    lc = split_chunks(forest.left, n_cores)
-    rc = split_chunks(forest.right, n_cores)
+    pad = (-T) % n_cores
+    feature, threshold = forest.feature, forest.threshold
+    left, right = forest.left, forest.right
+    n_bins = forest.n_class + (1 if pad else 0)
+    if pad:
+        M = feature.shape[1]
+        # a pad tree is one leaf whose "class" is the sentinel bin
+        feature = jnp.concatenate(
+            [feature, jnp.full((pad, M), -(forest.n_class + 1), jnp.int32)])
+        threshold = jnp.concatenate(
+            [threshold, jnp.zeros((pad, M), threshold.dtype)])
+        left = jnp.concatenate([left, jnp.zeros((pad, M), jnp.int32)])
+        right = jnp.concatenate([right, jnp.zeros((pad, M), jnp.int32)])
+    fc = split_chunks(feature, n_cores)
+    tc = split_chunks(threshold, n_cores)
+    lc = split_chunks(left, n_cores)
+    rc = split_chunks(right, n_cores)
 
     def per_core(f, t, l, r):
         preds = jax.vmap(lambda ff, tt, ll, rr: tree_predict(ff, tt, ll, rr, x)
                          )(f, t, l, r)                       # (T/c,)
-        return jnp.zeros((forest.n_class,), jnp.int32).at[preds].add(1)
+        return jnp.zeros((n_bins,), jnp.int32).at[preds].add(1)
 
-    votes = jnp.sum(jax.vmap(per_core)(fc, tc, lc, rc), axis=0)
+    votes = jnp.sum(jax.vmap(per_core)(fc, tc, lc, rc),
+                    axis=0)[: forest.n_class]
     return jnp.argmax(votes), votes
 
 

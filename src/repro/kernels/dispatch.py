@@ -12,12 +12,21 @@ up to three executable paths
                 fallback; also the arm for ops whose work is
                 integer/gather-bound and gains nothing from a Pallas
                 kernel — see DESIGN.md §4),
+  ``quant``   — the int8 lattice arm (kernels/quantized.py): per-feature
+                symmetric scales derived from the op's reference-side
+                operand, exact integer distance/score arithmetic — the
+                repo's analogue of the paper's FP-representation rungs
+                (DESIGN.md §8).  Lossy by design, so the shape selector
+                never picks it: only an explicit ``path="quant"`` /
+                ``REPRO_BACKEND=quant`` or a quantized estimator does,
 
 selected per shape against the VMEM budget.  ``REPRO_BACKEND`` (env) or an
 explicit ``path=`` kwarg overrides the selector; explicit ``path=`` wins
 over the environment.  Every op MUST register a ``ref`` arm so
 ``REPRO_BACKEND=ref`` can force the whole suite onto the oracle paths (the
-second CI matrix entry).
+second CI matrix entry), and every batched classify op registers a
+``quant`` arm so ``REPRO_BACKEND=quant`` forces the int8 tier suite-wide
+(the third matrix entry).
 
 ``PrecisionPolicy`` threads the paper's three-FP-backend axis (§3.4,
 Figs. 9–11) through every layer: a compute dtype (fp32 native vs bf16
@@ -44,7 +53,9 @@ def _precision_mod():
     return precision
 
 ENV_VAR = "REPRO_BACKEND"
-PATH_NAMES = ("fused", "blocked", "ref")
+# "quant" is listed after "ref" so ops without a selector still default to
+# the exact arms (resolve() falls back to the first registered name here)
+PATH_NAMES = ("fused", "blocked", "ref", "quant")
 VMEM_BUDGET = ops._VMEM_BUDGET
 
 # re-exported: the working-set formula IS the dispatch criterion, so the
@@ -76,6 +87,14 @@ class PrecisionPolicy:
     dtype: Any
     cost_backend: str = "fpu"
 
+    @property
+    def quantized(self) -> bool:
+        """True for the int8 tier: inputs stay fp32 at the API boundary
+        (quantization is an explicit lattice step, not a dtype cast) and
+        estimators rewrite their fitted params to int8 at the end of
+        ``fit`` (core/quantization.py)."""
+        return self.name.split("@")[0] == "int8"
+
     def cast(self, x):
         """Cast float arrays to the policy dtype; integers pass through."""
         if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
@@ -100,6 +119,10 @@ class PrecisionPolicy:
 POLICIES: Dict[str, PrecisionPolicy] = {
     "fp32": PrecisionPolicy("fp32", jnp.float32, "fpu"),
     "bf16": PrecisionPolicy("bf16", jnp.bfloat16, "fpu"),
+    # int8: float inputs pass through (the lattice quantization happens in
+    # the quant arms / quantized estimators, not as a cast); costed with
+    # the int8 SIMD backend (PULP-NN style 4x MACs, core/precision.py)
+    "int8": PrecisionPolicy("int8", jnp.float32, "int8"),
 }
 DEFAULT_POLICY = POLICIES["fp32"]
 
@@ -216,6 +239,21 @@ def _knn_ref(a, c, k, *, bn=None, interpret=None):
     return ref.distance_topk(a, c, k)
 
 
+@register("knn", "distance_topk", "quant")
+def _knn_quant(a, c, k, *, bn=None, interpret=None):
+    """Dynamic int8 arm: per-feature scales derived from the REFERENCE
+    rows (never the query batch, so single-query and batched calls share
+    one lattice and ``predict == predict_batch`` stays exact); distances
+    are exact lattice integers, dequantized with the mean squared scale."""
+    from repro.kernels import quantized as qk
+    scale = qk.feature_scales(jnp.max(jnp.abs(a.astype(jnp.float32)),
+                                      axis=0))
+    aq = qk.quantize_rows(a, scale)
+    cq = qk.quantize_rows(c, scale)
+    vals, idx = qk.distance_topk_q8(aq, cq, k, bn=bn, interpret=interpret)
+    return vals.astype(jnp.float32) * jnp.mean(scale * scale), idx
+
+
 @selector("knn", "distance_topk")
 def _knn_select(*, N, d, Q, k, policy=None, budget=VMEM_BUDGET):
     # fused streams A in bn-row blocks but keeps C, the merge window, and
@@ -267,6 +305,19 @@ def _km_ref(a, c, *, bn=None, interpret=None):
     return ref.distance_argmin(a, c)
 
 
+@register("kmeans", "distance_argmin", "quant")
+def _km_quant(a, c, *, bn=None, interpret=None):
+    from repro.kernels import quantized as qk
+    scale = qk.feature_scales(jnp.max(jnp.abs(c.astype(jnp.float32)),
+                                      axis=0))
+    aq = qk.quantize_rows(a, scale)
+    cq = qk.quantize_rows(c, scale)
+    vals, idx = qk.distance_argmin_q8(aq, cq, interpret=interpret) \
+        if bn is None else qk.distance_argmin_q8(aq, cq, bn=bn,
+                                                 interpret=interpret)
+    return vals.astype(jnp.float32) * jnp.mean(scale * scale), idx
+
+
 @selector("kmeans", "distance_argmin")
 def _km_select(*, N, d, K, policy=None, budget=VMEM_BUDGET):
     if argmin_working_set_bytes(8, d, K) <= budget:
@@ -299,6 +350,20 @@ def _gnb_blocked(X, mu, var, log_prior, *, interpret=None):
 @register("gnb", "scores", "ref")
 def _gnb_ref(X, mu, var, log_prior, *, interpret=None):
     return ref.gnb_scores_batch(X, mu, var, log_prior)
+
+
+@register("gnb", "scores", "quant")
+def _gnb_quant(X, mu, var, log_prior, *, interpret=None):
+    """int8 features against precomputed per-class affine score tables:
+    the Gaussian divide/log work folds into calibration, the hot loop is
+    two (B, d) x (d, C) matmuls over exact integer features."""
+    from repro.core import quantization as cq
+    from repro.kernels import quantized as qk
+    scale = qk.feature_scales(cq.gauss_absmax(mu.astype(jnp.float32),
+                                              var.astype(jnp.float32)))
+    quad, lin, const = cq.gauss_score_tables(mu, var, scale)
+    xq = qk.quantize_rows(X, scale)
+    return qk.affine_scores(xq, quad, lin, const + log_prior)
 
 
 @selector("gnb", "scores")
@@ -337,6 +402,24 @@ def _gmm_ref(mu, var, log_pi, X, *, n_cores=8, interpret=None):
     return gmm_e_step(X, mu, var, log_pi, n_cores)
 
 
+@register("gmm", "responsibilities", "quant")
+def _gmm_quant(mu, var, log_pi, X, *, n_cores=8, interpret=None):
+    """GMM E-step over the lattice: the same affine-table GEMM identity as
+    GNB, normalized per row.  The mean log-likelihood is computed from the
+    quantized joints (same contract as the ref arm)."""
+    import jax
+
+    from repro.core import quantization as cq
+    from repro.kernels import quantized as qk
+    scale = qk.feature_scales(cq.gauss_absmax(mu.astype(jnp.float32),
+                                              var.astype(jnp.float32)))
+    quad, lin, const = cq.gauss_score_tables(mu, var, scale)
+    joint = qk.affine_scores(qk.quantize_rows(X, scale), quad, lin,
+                             const + log_pi)
+    norm = jax.nn.logsumexp(joint, axis=1, keepdims=True)
+    return joint - norm, jnp.mean(norm[:, 0])
+
+
 def gmm_responsibilities(mu, var, log_pi, X, *,
                          policy: Optional[PrecisionPolicy] = None,
                          path: Optional[str] = None, n_cores: int = 8,
@@ -362,6 +445,27 @@ def _rf_ref(feature, threshold, left, right, X, *, n_class, n_cores=8,
     forest = Forest(feature=feature, threshold=threshold, left=left,
                     right=right, n_class=n_class)
     return forest_classify_batch(forest, X, n_cores)
+
+
+@register("rf", "forest_votes", "quant")
+def _rf_quant(feature, threshold, left, right, X, *, n_class, n_cores=8,
+              interpret=None):
+    """int8 threshold-compare traversal: thresholds and features land on
+    the same per-feature lattice (scales from the thresholds — the only
+    feature statistics the fitted forest carries), so every node compare
+    is int8 vs int8.  The gather/branch structure is unchanged — exactly
+    why the paper's RF only gains 2.48x from a better FP backend (§5.2)."""
+    from repro.core import quantization as cq
+    from repro.core.random_forest import Forest, forest_classify_batch
+    from repro.kernels import quantized as qk
+    d = X.shape[1]
+    forest = Forest(feature=feature, threshold=threshold, left=left,
+                    right=right, n_class=n_class)
+    qf = cq.quantize_forest(forest, d=d)
+    int_forest = Forest(feature=qf.feature, threshold=qf.qthreshold,
+                        left=qf.left, right=qf.right, n_class=n_class)
+    return forest_classify_batch(int_forest, qk.quantize_rows(X, qf.scale),
+                                 n_cores)
 
 
 def forest_votes(forest, X, *, policy: Optional[PrecisionPolicy] = None,

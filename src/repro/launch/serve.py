@@ -92,7 +92,19 @@ def serve_nonneural(args):
 
     est = make_fitted(args.algo, X, y, n_groups=n_class,
                       policy=get_policy(args.policy), mesh=mesh)
-    engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh)
+    engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh,
+                                  policy=args.policy)
+    if engine.quant_report:
+        r = engine.quant_report
+        ratio = r["bytes_fp32"] / max(r["bytes_int8"], 1)
+        # GNB/GMM trade bytes for ops: their fp32 score tables are LARGER
+        # than the moments they replace (the win there is the folded
+        # div/log work, DESIGN.md §8) — report the direction honestly
+        direction = f"{ratio:.2f}x smaller" if ratio >= 1.0 \
+            else f"{1.0 / ratio:.2f}x larger (score tables trade bytes " \
+                 f"for folded div/log work)"
+        print(f"[quant] params {r['bytes_fp32']}B fp32 -> "
+              f"{r['bytes_int8']}B int8 ({direction})")
     if args.stream:
         return serve_stream(args, engine, Q)
     engine.warmup(Q)
@@ -153,7 +165,8 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", default="fp32",
-                    help="PrecisionPolicy name: fp32, bf16, or "
+                    help="PrecisionPolicy name: fp32, bf16, int8 (the "
+                         "quantized serving tier, DESIGN.md §8), or "
                          "<dtype>@<cost_backend> (e.g. fp32@libgcc)")
     ap.add_argument("--mesh", type=int, default=1,
                     help="shard count for data-parallel Non-Neural "

@@ -64,8 +64,36 @@ class NonNeuralServeEngine:
     """
 
     def __init__(self, estimator: Estimator, *, max_batch: int = 1024,
-                 sharded: bool = False, mesh=None, mesh_axis: str = "data"):
+                 sharded: bool = False, mesh=None, mesh_axis: str = "data",
+                 policy: Optional[str] = None):
         assert estimator.fitted, "fit the estimator before serving it"
+        wants_int8 = (policy is not None
+                      and str(policy).split("@")[0] == "int8") \
+            or getattr(estimator, "quantized", False)
+        if wants_int8 and (mesh is not None or sharded):
+            # mirror fit_sharded's guard: the sharded predict fns trace
+            # fp32 param fields the quantized NamedTuples do not carry
+            raise NotImplementedError(
+                "the int8 tier is single-device: quantized params have no "
+                "sharded serving arm yet (DESIGN.md §8) — serve without "
+                "mesh=/sharded= or use policy fp32/bf16")
+        if policy is not None and str(policy).split("@")[0] == "int8":
+            # the int8 serving tier: quantize in place (idempotent — a fit
+            # under the int8 PrecisionPolicy already did it) and record the
+            # footprint A/B through serving/quant.py's byte accounting
+            from repro.serving import quant as _q
+            estimator.quantize()
+            fp32 = estimator.dequantize_params()
+            self.quant_report = {
+                "bytes_int8": _q.param_bytes(estimator.params),
+                "bytes_fp32": _q.param_bytes(fp32),
+                # what quantize_params(min_size=1) WOULD serialize — the
+                # shared _should_quantize predicate keeps the estimate and
+                # the actual int8 payload accounting in one place
+                "bytes_predicted": _q.quant_bytes(fp32, min_size=1),
+            }
+        else:
+            self.quant_report = None
         self.estimator = estimator
         self.algorithm = estimator.algorithm
         self.max_batch = int(max_batch)

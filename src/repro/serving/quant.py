@@ -74,12 +74,24 @@ def quant_bytes(params, *, min_size: int = 1 << 16) -> int:
     ``min_size``."""
     total = 0
     for p in jax.tree.leaves(params):
+        if not hasattr(p, "dtype"):   # static metadata leaves (e.g. n_class)
+            continue
         if _should_quantize(p, min_size):
             total += p.size          # int8 payload
             total += 4 * p.shape[-1]  # f32 per-output-channel scales
         else:
             total += p.size * p.dtype.itemsize
     return total
+
+
+def param_bytes(params) -> int:
+    """Actual serialized byte count of a param pytree (any leaf dtypes —
+    int8 payloads count 1 byte/elem).  The counterpart of ``quant_bytes``'s
+    prediction: for a pytree quantized leaf-for-leaf under
+    ``_should_quantize`` the two agree, which is how NonNeuralServeEngine
+    reports the int8 tier's footprint next to its fp32 baseline."""
+    return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params)
+               if hasattr(p, "dtype"))
 
 
 def relative_error(w, qt: QuantTensor) -> float:

@@ -161,3 +161,51 @@ def test_rf_accuracy_and_vote_counts(blobs):
     assert float(jnp.mean(preds == y[:200])) > 0.9
     _, votes = RF.forest_predict(f, jnp.asarray(X[0]))
     assert int(jnp.sum(votes)) == 16          # every tree votes exactly once
+
+
+def test_rf_ragged_forest_pads_tree_chunks(blobs):
+    """T=10 trees over n_cores=8 used to die on a hard divisibility
+    assert; the pad trees vote into a sentinel bin that is sliced off, so
+    a ragged forest must match a per-tree numpy traversal exactly."""
+    X, y = blobs
+    f = RF.train_forest(X, y, 3, n_trees=10, max_depth=5, seed=3)
+    cls, votes = RF.forest_predict(f, jnp.asarray(X[0]), n_cores=8)
+    assert votes.shape == (3,)
+    assert int(jnp.sum(votes)) == 10          # pad trees must not vote
+    feats, thr = np.asarray(f.feature), np.asarray(f.threshold)
+    l, r = np.asarray(f.left), np.asarray(f.right)
+    for i in (0, 7, 31):
+        want_votes = np.zeros(3, np.int64)
+        for t in range(10):
+            want_votes[_numpy_tree_predict(feats[t], thr[t], l[t], r[t],
+                                           X[i])] += 1
+        got_cls, got_votes = RF.forest_predict(f, jnp.asarray(X[i]),
+                                               n_cores=8)
+        np.testing.assert_array_equal(np.asarray(got_votes), want_votes)
+        assert int(got_cls) == int(np.argmax(want_votes))
+    # batch path rides the same padding
+    bcls, bvotes = RF.forest_classify_batch(f, jnp.asarray(X[:16]),
+                                            n_cores=8)
+    assert bvotes.shape == (16, 3)
+    assert np.all(np.asarray(jnp.sum(bvotes, axis=1)) == 10)
+
+
+def test_log_gauss_gemm_identity(blobs):
+    """core/gmm.py::_log_gauss now runs the GEMM-identity form (no
+    (m, k, d) broadcast diff tensor); it must match the dense formula to
+    accumulation-order tolerance."""
+    from repro.core import gmm as GMM
+
+    X, _ = blobs
+    rng = np.random.default_rng(11)
+    for (m, k, d) in [(37, 3, 21), (8, 5, 7), (64, 2, 12)]:
+        x = jnp.asarray(rng.normal(size=(m, d)) * 2.0, jnp.float32)
+        mu = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        var = jnp.asarray(rng.uniform(0.3, 2.5, size=(k, d)), jnp.float32)
+        got = GMM._log_gauss(x, mu, var)
+        diff = x[:, None, :] - mu[None]
+        want = -0.5 * jnp.sum(diff * diff / var[None]
+                              + jnp.log(var)[None]
+                              + np.log(2.0 * np.pi), axis=-1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,250 @@
+"""int8 quantized kernel arm (DESIGN.md §8): bit-parity of the Pallas
+lattice kernels against their integer oracles, the dispatch registry's
+``quant`` tier (selection, overrides, selector never auto-picking a lossy
+arm), calibration batch-independence (predict == predict_batch under the
+dynamic arm), and int8 serving through the existing bucket/warmup/stream
+machinery without mid-stream compiles."""
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import quantization as cq
+from repro.core.estimator import make_fitted
+from repro.kernels import dispatch
+from repro.kernels import quantized as qk
+
+
+@pytest.fixture(autouse=True)
+def _default_selection(monkeypatch):
+    """Pin down the registry's default behaviour; a suite-wide
+    REPRO_BACKEND (the ref/quant CI matrix entries) must not leak in."""
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=240, d=21, n_class=3)
+
+
+RNG = np.random.default_rng(7)
+
+
+# --------------------------------------------------- kernel bit-parity
+
+
+@pytest.mark.parametrize("shape", [(100, 5, 7, 3), (400, 21, 64, 4),
+                                   (257, 12, 33, 8), (64, 3, 5, 1),
+                                   (40, 2, 3, 40)])
+def test_quant_topk_matches_integer_oracle(shape):
+    """The packed-key streaming kernel must be bit-equal to the exact
+    int32 lattice oracle — values AND indices, smallest-index ties."""
+    N, d, Q, k = shape
+    for lo, hi in ((-3, 4), (-127, 128)):   # narrow range forces ties
+        aq = jnp.asarray(RNG.integers(lo, hi, size=(N, d)), jnp.int8)
+        cg = jnp.asarray(RNG.integers(lo, hi, size=(Q, d)), jnp.int8)
+        v, i = qk.distance_topk_q8(aq, cg, k)
+        rv, ri = qk.ref_distance_topk_q8(aq, cg, k)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_quant_topk_duplicate_rows_stable_ties():
+    """Duplicated reference rows give exactly tied distances; the kernel
+    must keep the smallest global row index first, across block
+    boundaries too (bn=32 forces the duplicates into separate tiles)."""
+    base = RNG.integers(-5, 6, size=(48, 4))
+    aq = jnp.asarray(np.concatenate([base, base]), jnp.int8)    # rows i, i+48
+    cg = jnp.asarray(RNG.integers(-5, 6, size=(9, 4)), jnp.int8)
+    v, i = qk.distance_topk_q8(aq, cg, 6, bn=32)
+    rv, ri = qk.ref_distance_topk_q8(aq, cg, 6)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+@pytest.mark.parametrize("shape", [(100, 5, 3), (400, 21, 8), (65, 12, 2)])
+def test_quant_argmin_matches_integer_oracle(shape):
+    N, d, K = shape
+    aq = jnp.asarray(RNG.integers(-127, 128, size=(N, d)), jnp.int8)
+    cg = jnp.asarray(RNG.integers(-127, 128, size=(K, d)), jnp.int8)
+    v, i = qk.distance_argmin_q8(aq, cg)
+    rv, ri = qk.ref_distance_argmin_q8(aq, cg)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_quantize_rows_saturates_and_rounds():
+    scale = qk.feature_scales(jnp.asarray([1.27, 12.7]))
+    q = qk.quantize_rows(jnp.asarray([[1.27, -12.7], [99.0, 0.049]]), scale)
+    np.testing.assert_array_equal(np.asarray(q),
+                                  [[127, -127], [127, 0]])
+    assert q.dtype == jnp.int8
+
+
+def test_block_autotune_respects_packing_and_budget():
+    # the packed key must fit int32: bn is capped by the distance span
+    assert qk.quant_topk_block_rows(4096, 784, 64, 4) <= \
+        qk.packed_rows_limit(784)
+    # int8 tiles shrink the working set 4x vs fp32 on the feature terms
+    from repro.kernels import ops
+    assert qk.quant_topk_working_set_bytes(256, 128, 64, 4) < \
+        ops.fused_topk_working_set_bytes(256, 128, 64, 4)
+    with pytest.raises(ValueError):
+        qk.quant_topk_block_rows(100, qk._MAX_D + 1, 8, 2)
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_quant_arm_registered_for_every_classify_op():
+    reg = dispatch.registered()
+    for key in (("knn", "distance_topk"), ("kmeans", "distance_argmin"),
+                ("gnb", "scores"), ("gmm", "responsibilities"),
+                ("rf", "forest_votes")):
+        assert "quant" in reg[key], key
+
+
+def test_selector_never_auto_picks_quant():
+    """quant is lossy: only an explicit path= or REPRO_BACKEND may choose
+    it, never the shape selector."""
+    assert dispatch.resolve("knn", "distance_topk", N=512, d=8, Q=16,
+                            k=4).name != "quant"
+    assert dispatch.resolve("gmm", "responsibilities").name == "ref"
+    assert dispatch.resolve("rf", "forest_votes").name == "ref"
+
+
+def test_env_override_forces_quant(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "quant")
+    kp = dispatch.resolve("knn", "distance_topk", N=64, d=8, Q=8, k=2)
+    assert kp.name == "quant"
+    assert dispatch.resolve("gmm", "responsibilities").name == "quant"
+    assert dispatch.resolve("rf", "forest_votes").name == "quant"
+    # explicit path= still wins over the environment
+    kp = dispatch.resolve("knn", "distance_topk", path="ref",
+                          N=64, d=8, Q=8, k=2)
+    assert kp.name == "ref"
+
+
+def test_int8_policy_registered():
+    p = dispatch.get_policy("int8")
+    assert p.quantized and p.dtype == jnp.float32
+    assert not dispatch.get_policy("fp32").quantized
+    # the analytic costing has the int8 SIMD backend rung (§5.2 analogue)
+    from repro.core.precision import BACKENDS
+    assert "int8" in BACKENDS
+    for algo in ("knn", "kmeans", "gnb", "gmm", "rf"):
+        fp = dispatch.get_policy("fp32").estimated_cycles(algo)
+        q8 = p.estimated_cycles(algo)
+        assert q8 <= fp, (algo, q8, fp)
+    # RF is integer-traversal bound — int8 must buy it the LEAST, the
+    # quant echo of the paper's "RF only 2.48x from the FPU" (§5.2)
+    gains = {a: dispatch.get_policy("fp32").estimated_cycles(a)
+             / p.estimated_cycles(a)
+             for a in ("knn", "kmeans", "gnb", "gmm", "rf")}
+    assert gains["rf"] == min(gains.values()), gains
+
+
+# ------------------------------------- dynamic-arm batch independence
+
+
+@pytest.mark.parametrize("algo", ["knn", "kmeans", "gnb", "gmm", "rf"])
+def test_dynamic_quant_arm_scales_are_batch_independent(algo, blobs):
+    """The dynamic quant arms calibrate from the REFERENCE side only, so
+    classifying one query alone or inside a batch lands on the same
+    lattice — predictions must match row-for-row."""
+    X, y = blobs
+    est = make_fitted(algo, X[:200], y[:200], n_groups=3, path="quant")
+    Q = jnp.asarray(X[200:216])
+    batch_cls, _ = est.predict_batch(Q)
+    for i in (0, 5, 15):
+        cls_i, _ = est.predict(Q[i])
+        assert int(cls_i) == int(batch_cls[i]), (algo, i)
+
+
+# ----------------------------------------------------- int8 serving
+
+
+def test_int8_stream_serving_stays_compile_free(blobs):
+    """Acceptance: int8 serving goes through the existing warmup/bucket
+    path — steady-state bucket_launches keys ⊆ warmed under a streamed
+    trace (no mid-stream compiles)."""
+    from repro.serving import (NonNeuralServeEngine, RequestScheduler,
+                               poisson_trace, replay_trace)
+
+    X, y = blobs
+    est = make_fitted("knn", X[:160], y[:160], n_groups=3,
+                      policy=dispatch.get_policy("int8"))
+    assert est.quantized
+    eng = NonNeuralServeEngine(est, max_batch=16, policy="int8")
+    eng.warmup_buckets(X.shape[1])
+    warmed = set(eng.warmed)
+    assert eng.bucket_launches == {}
+    sched = RequestScheduler(eng, max_wait=2)
+    replay_trace(sched, X[160:], poisson_trace(4.0, 25, seed=3))
+    assert sched.stats.completed > 50
+    assert set(eng.bucket_launches) <= warmed
+    assert eng.warmed == warmed
+    # the footprint report rides along (serving/quant.py byte accounting)
+    rep = eng.quant_report
+    assert rep["bytes_int8"] < rep["bytes_fp32"]
+    assert rep["bytes_int8"] == rep["bytes_predicted"]   # kNN: exact match
+
+
+def test_quantized_engine_matches_estimator(blobs):
+    from repro.serving import NonNeuralServeEngine
+
+    X, y = blobs
+    for algo in ("knn", "kmeans", "gnb", "gmm", "rf"):
+        est = make_fitted(algo, X[:160], y[:160], n_groups=3,
+                          policy=dispatch.get_policy("int8"))
+        want, _ = est.predict_batch(X[160:200])
+        eng = NonNeuralServeEngine(est, max_batch=32)
+        res = eng.classify(X[160:200])
+        np.testing.assert_array_equal(np.asarray(res.classes),
+                                      np.asarray(want))
+
+
+def test_int8_fit_sharded_raises(blobs):
+    X, y = blobs
+
+    class _FakeMesh:
+        shape = {"data": 2}
+
+    with pytest.raises(NotImplementedError):
+        make_fitted("knn", X, y, n_groups=3,
+                    policy=dispatch.get_policy("int8"), mesh=_FakeMesh())
+
+
+# ----------------------------------------------- forest quantization
+
+
+def test_quant_forest_unused_features_are_neutral(blobs):
+    """Without recorded training statistics (``from_params`` estimators),
+    forest calibration falls back to the thresholds; features never
+    tested by any node then get a neutral scale — their lattice value can
+    never flip a traversal."""
+    from repro.core import random_forest as RF
+
+    X, y = blobs
+    forest = RF.train_forest(X[:160], y[:160], 3, n_trees=4, max_depth=3)
+    qf = cq.quantize_forest(forest, d=X.shape[1])
+    used = set(np.asarray(qf.feature)[np.asarray(qf.feature) >= 0].tolist())
+    unused = [f for f in range(X.shape[1]) if f not in used]
+    if unused:                               # depth-3 forests leave plenty
+        np.testing.assert_allclose(
+            np.asarray(qf.scale)[unused], 1.0 / 127.0, rtol=1e-6)
+    # leaves carry a zero threshold in both forms
+    leaves = np.asarray(qf.feature) < 0
+    assert np.all(np.asarray(qf.qthreshold)[leaves] == 0)
+    # the fitted estimator calibrates from the training data instead
+    est = make_fitted("rf", X[:160], y[:160], n_groups=3, n_trees=4,
+                      max_depth=3, policy=dispatch.get_policy("int8"))
+    assert isinstance(est.params, cq.QuantForest)
+    np.testing.assert_allclose(
+        np.asarray(est.params.scale),
+        np.abs(X[:160]).max(axis=0) / 127.0, rtol=1e-6)
