@@ -156,12 +156,44 @@ _SHARD_CENSUS = {"knn": "knn", "kmeans": "kmeans_iter", "gnb": "gnb",
                  "gmm": "gmm_iter", "rf": "rf"}
 _SHARD_MARKER = "SHARDED_RESULTS_JSON:"
 
+# Per-algorithm serve shapes: the strategy A/B needs a big enough batch
+# that the query partition's per-shard work reduction is visible, and a
+# big enough model that the reference partition has something to shard.
+# (train_n, d, n_groups, serve batch, extra estimator kwargs)
+_SHARD_SHAPES = {
+    "knn":    (1024, 32, 4, 256, {}),
+    "kmeans": (2048, 32, 64, 8192, {}),
+    "gnb":    (512, 64, 16, 4096, {}),
+    "gmm":    (512, 64, 16, 4096, {}),
+    "rf":     (512, 16, 4, 8192, {"n_trees": 64}),
+}
+# quick keeps the kNN / K-Means cells at full size — the CI smoke step
+# asserts their dispatcher-selected speedup stays > 1, and shrinking the
+# batch would shrink the cache-residency effect the assertion measures
+_SHARD_SHAPES_QUICK = {
+    "knn":    (1024, 32, 4, 256, {}),
+    "kmeans": (2048, 32, 64, 8192, {}),
+    "gnb":    (256, 64, 16, 1024, {}),
+    "gmm":    (256, 64, 16, 1024, {}),
+    "rf":     (256, 16, 4, 2048, {"n_trees": 64}),
+}
+
+
+def _time_engine(eng, batch, iters: int) -> float:
+    import jax
+    jax.block_until_ready(eng.classify(batch).classes)      # compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.classify(batch).classes)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6 / batch.shape[0]
+
 
 def _sharded_worker(quick: bool) -> list:
     """Runs INSIDE the forced-8-device subprocess: serve every estimator
-    through the engine's 1-shard and 8-shard paths and time both."""
-    import jax
-
+    single-device and through each 8-shard partition strategy (query,
+    reference, and the cost-model 'auto' route) and time all four."""
     from repro.core.amdahl import analyze_parallel
     from repro.core.estimator import make_fitted
     from repro.core.precision import BACKENDS, PAPER_CENSUSES
@@ -169,34 +201,38 @@ def _sharded_worker(quick: bool) -> list:
     from repro.launch.mesh import _mk
     from repro.serving import NonNeuralServeEngine
 
-    n, d = (240, 16) if quick else (400, 21)
-    B = 128 if quick else 256
-    iters = 2 if quick else 5
-    X, y = class_blobs(n=n, d=d)
-    batch = np.resize(X, (B, d)).astype(np.float32)
+    shapes = _SHARD_SHAPES_QUICK if quick else _SHARD_SHAPES
+    iters = 3 if quick else 5
+    mesh = _mk((8,), ("data",))
 
     results = []
     for algo in SHARD_ALGOS:
-        est = make_fitted(algo, X, y, n_groups=int(y.max()) + 1)
+        n, d, g, B, kwargs = shapes[algo]
+        X, y = class_blobs(n=n, d=d, n_class=min(g, 16))
+        batch = np.resize(X, (B, d)).astype(np.float32)
+        est = make_fitted(algo, X, y, n_groups=g, **kwargs)
+
+        us1 = _time_engine(
+            NonNeuralServeEngine(est, max_batch=B), batch, iters)
         us = {}
-        for shards in (1, 8):
-            mesh = _mk((shards,), ("data",)) if shards > 1 else None
-            eng = NonNeuralServeEngine(est, max_batch=B, mesh=mesh)
-            jax.block_until_ready(eng.classify(batch).classes)  # compile
-            best = float("inf")
-            for _ in range(iters):
-                t0 = time.perf_counter()
-                jax.block_until_ready(eng.classify(batch).classes)
-                best = min(best, time.perf_counter() - t0)
-            us[shards] = best * 1e6 / B
+        for strat in ("query", "reference"):
+            us[strat] = _time_engine(
+                NonNeuralServeEngine(est, max_batch=B, mesh=mesh,
+                                     strategy=strat), batch, iters)
+        auto = NonNeuralServeEngine(est, max_batch=B, mesh=mesh)
+        us_auto = _time_engine(auto, batch, iters)
+        route = auto.bucket_strategies[auto._bucket(B)]
+
         m = analyze_parallel(PAPER_CENSUSES[_SHARD_CENSUS[algo]],
                              BACKENDS["fpu"], n_cores=8,
                              kernel=_SHARD_CENSUS[algo],
                              iters=ITERS.get(_SHARD_CENSUS[algo], 1.0))
         results.append({
-            "algorithm": algo, "shards": 8,
-            "us_per_query_1shard": us[1], "us_per_query_8shard": us[8],
-            "measured_speedup": us[1] / us[8],
+            "algorithm": algo, "shards": 8, "strategy": route, "bucket": B,
+            "us_per_query_1shard": us1, "us_per_query_8shard": us_auto,
+            "us_per_query_query": us["query"],
+            "us_per_query_reference": us["reference"],
+            "measured_speedup": us1 / us_auto,
             "amdahl_bound": m.theoretical_speedup,
         })
     return results
@@ -214,7 +250,7 @@ def run_sharded(csv_rows: list, quick: bool = False):
     env["PYTHONPATH"] = f"{root / 'src'}:{env.get('PYTHONPATH', '')}"
     cmd = [sys.executable, "-m", "benchmarks.parallel_speedup",
            "--sharded-worker"] + (["--quick"] if quick else [])
-    res = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+    res = subprocess.run(cmd, capture_output=True, text=True, timeout=1200,
                          env=env, cwd=root)
     line = next((ln for ln in res.stdout.splitlines()
                  if ln.startswith(_SHARD_MARKER)), None)
@@ -222,16 +258,23 @@ def run_sharded(csv_rows: list, quick: bool = False):
     results = json.loads(line[len(_SHARD_MARKER):])
 
     print("\n== Sharded serving speedup (1 vs 8 shards) vs Amdahl ==")
-    print(f"{'algo':7s} {'us/q@1':>8s} {'us/q@8':>8s} {'measured':>9s} "
+    print(f"{'algo':7s} {'strategy':10s} {'us/q@1':>8s} {'us/q@8':>8s} "
+          f"{'us/q qry':>9s} {'us/q ref':>9s} {'measured':>9s} "
           f"{'amdahl':>7s}")
     for r in results:
-        print(f"{r['algorithm']:7s} {r['us_per_query_1shard']:8.1f} "
+        print(f"{r['algorithm']:7s} {r['strategy']:10s} "
+              f"{r['us_per_query_1shard']:8.1f} "
               f"{r['us_per_query_8shard']:8.1f} "
+              f"{r['us_per_query_query']:9.1f} "
+              f"{r['us_per_query_reference']:9.1f} "
               f"{r['measured_speedup']:8.2f}x {r['amdahl_bound']:6.2f}x")
         csv_rows.append(
             (f"sharded_serve/{r['algorithm']}/8shard",
              r["us_per_query_8shard"],
              f"us_1shard={r['us_per_query_1shard']:.1f};"
+             f"strategy={r['strategy']};"
+             f"us_query={r['us_per_query_query']:.1f};"
+             f"us_reference={r['us_per_query_reference']:.1f};"
              f"measured_speedup={r['measured_speedup']:.2f};"
              f"amdahl_bound={r['amdahl_bound']:.2f}"))
     return results

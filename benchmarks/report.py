@@ -36,7 +36,7 @@ _ENTRY_KEYS = ("timestamp", "backend", "results")
 _RESULT_KEYS = {
     "estimators": ("algorithm", "policy", "bucket", "path", "us_per_query"),
     "fused_topk": ("shape", "fused", "two_pass", "speedup"),
-    "sharded": ("algorithm", "shards", "us_per_query_1shard",
+    "sharded": ("algorithm", "shards", "strategy", "us_per_query_1shard",
                 "us_per_query_8shard", "measured_speedup", "amdahl_bound"),
     "serving": ("algorithm", "rate", "max_wait", "p50", "p95", "p99",
                 "throughput", "occupancy", "hit_rate",
@@ -256,15 +256,22 @@ def sharded_table(path: Path = BENCH_SHARDED) -> str:
     if not path.exists():
         return "(no BENCH_sharded.json yet — run benchmarks/run.py)"
     data = load_bench(path, "sharded")
-    lines = ["| when | algo | us/q 1-shard | us/q 8-shard | measured | "
-             "amdahl bound |",
-             "|---|---|---|---|---|---|"]
+    lines = ["| when | algo | strategy | us/q 1-shard | us/q 8-shard | "
+             "us/q query | us/q reference | measured | amdahl bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+
+    def _us(r, key):
+        return f"{r[key]:.1f}" if key in r else "—"
+
     for e in data["entries"]:
         for r in e["results"]:
             lines.append(
                 f"| {e['timestamp']} | {r['algorithm']} | "
+                f"{r['strategy']} | "
                 f"{r['us_per_query_1shard']:.1f} | "
                 f"{r['us_per_query_8shard']:.1f} | "
+                f"{_us(r, 'us_per_query_query')} | "
+                f"{_us(r, 'us_per_query_reference')} | "
                 f"{r['measured_speedup']:.2f}x | "
                 f"{r['amdahl_bound']:.2f}x |")
     return "\n".join(lines)

@@ -41,29 +41,48 @@ from repro.sharding.compat import shard_map as _shard_map
 # inf - inf = NaN) up to d ~ 3000 features
 _FAR = 1e17
 
+# serving partition strategies (DESIGN.md §9): "reference" shards the
+# model-side axis (kNN rows / centroids / classes / components / trees)
+# and merges per-shard partials; "query" shards the batch rows against a
+# replicated model — zero merge collective; "single" bypasses the mesh
+STRATEGY_NAMES = ("single", "query", "reference")
+
+
+def _check_divisible(what: str, n: int, mesh: Mesh, axis: str) -> int:
+    """The paper-fidelity single-query ports statically partition one model
+    axis across the mesh — an incompatible mesh must fail with the shape
+    and mesh named, not an opaque AssertionError."""
+    c = mesh.shape[axis]
+    if n % c != 0:
+        raise ValueError(
+            f"{what}={n} does not divide across the {c}-shard mesh axis "
+            f"{axis!r} (mesh shape {dict(mesh.shape)}); use a mesh whose "
+            f"{axis!r} size divides {what}, or the batched "
+            f"*_batch_shardmap serving layer which pads ragged shapes")
+    return c
+
 
 def knn_classify_shardmap(model: KNNModel, x, k: int, mesh: Mesh,
                           axis: str = "data"):
     """Fig. 6 over a mesh axis: OP1 local distances, OP2 local SS top-k,
     OP3 all-gather the c*k candidates and merge (every shard redundantly
-    computes the merge — cheaper than a roundtrip at c*k elements)."""
-    c = mesh.shape[axis]
+    computes the merge — cheaper than a roundtrip at c*k elements).
+    Each shard gathers only its k WINNERS' labels alongside the candidate
+    (value, index) pairs, so the label traffic is c*k rows — not the whole
+    N-row label array."""
     N = model.A.shape[0]
-    assert N % c == 0, (N, c)
+    c = _check_divisible("N", N, mesh, axis)
     chunk_len = N // c
 
     def local(a_chunk, labels_chunk, xq):
-        core = jax.lax.axis_index(axis)
         e = sq_distances(a_chunk, xq)                       # OP1
         lv, li = selection_topk_smallest(e, k)              # OP2 (local SS)
-        li = li + core * chunk_len
+        ll = labels_chunk[li]                               # local winners
         all_v = jax.lax.all_gather(lv, axis).reshape(-1)    # -> master merge
-        all_i = jax.lax.all_gather(li, axis).reshape(-1)
+        all_l = jax.lax.all_gather(ll, axis).reshape(-1)    # c*k labels only
         gv, gi = selection_topk_smallest(all_v, k)          # OP3
-        nbr = all_i[gi]
-        labels_all = jax.lax.all_gather(labels_chunk, axis).reshape(-1)
         votes = jnp.zeros((model.n_class,), jnp.int32).at[
-            labels_all[nbr]].add(1)
+            all_l[gi]].add(1)
         return jnp.argmax(votes)
 
     # the all_gather + redundant merge is replicated by construction, but
@@ -77,9 +96,8 @@ def knn_classify_shardmap(model: KNNModel, x, k: int, mesh: Mesh,
 def kmeans_iteration_shardmap(A, centroids, mesh: Mesh, axis: str = "data"):
     """Fig. 7 over a mesh axis: OP1/OP2 local, OP3 local accumulate,
     OP4 psum combine (the global centroid update)."""
-    c = mesh.shape[axis]
     N = A.shape[0]
-    assert N % c == 0, (N, c)
+    c = _check_divisible("N", N, mesh, axis)
     k = centroids.shape[0]
 
     def local(a_chunk, cent):
@@ -102,9 +120,8 @@ def kmeans_iteration_shardmap(A, centroids, mesh: Mesh, axis: str = "data"):
 def gnb_decision_shardmap(model: GNBModel, x, mesh: Mesh, axis: str = "data"):
     """Fig. 5 over a mesh axis: features sharded (vertical split); OP1 local
     partial log-lik sums; OP2 psum + prior; OP3 argmax."""
-    c = mesh.shape[axis]
     d = model.mu.shape[1]
-    assert d % c == 0, (d, c)
+    c = _check_divisible("d", d, mesh, axis)
 
     def local(mu_k, var_k, x_k, log_prior):
         partial = jnp.sum(_log_gaussian(x_k[None, :], mu_k, var_k), axis=1)
@@ -131,8 +148,7 @@ def forest_predict_shardmap(forest, x, mesh: Mesh, axis: str = "data"):
     from repro.core.random_forest import tree_predict
 
     T = forest.feature.shape[0]
-    c = mesh.shape[axis]
-    assert T % c == 0, (T, c)
+    c = _check_divisible("T", T, mesh, axis)
 
     def local(feat, thr, left, right, xq):
         preds = jax.vmap(lambda f, t, l, r: tree_predict(f, t, l, r, xq))(
@@ -160,36 +176,95 @@ def _pad_rows(x, c: int, value=0.0):
     return pad_to_multiple(x, c, axis=0, value=value)
 
 
+def _butterfly_topk_merge(lv, li, k: int, c: int, axis: str):
+    """Hierarchical OP3: XOR-partner butterfly all-reduce of the per-shard
+    (value, global-index) candidates — log2(c) rounds each moving k rows
+    per query, instead of one all-gather of all c·kl candidates.  Bit-equal
+    to the gather merge: every round keeps the k smallest by (value, global
+    index), exactly the tie order a flat stable top-k over shard-major
+    candidates resolves to (shard blocks are contiguous ascending row
+    ranges, so position order == global index order)."""
+    kl = lv.shape[1]
+    if kl < k:
+        # a shard holds at most chunk_len candidates; pad the merge slots
+        # with +inf sentinels that can never displace a real candidate
+        lv = jnp.pad(lv, ((0, 0), (0, k - kl)),
+                     constant_values=jnp.inf)
+        li = jnp.pad(li, ((0, 0), (0, k - kl)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+    for r in range(c.bit_length() - 1):
+        stride = 1 << r
+        perm = [(i, i ^ stride) for i in range(c)]
+        pv = jax.lax.ppermute(lv, axis, perm)
+        pi = jax.lax.ppermute(li, axis, perm)
+        cv = jnp.concatenate([lv, pv], axis=1)
+        ci = jnp.concatenate([li, pi], axis=1)
+        order = jnp.lexsort((ci, cv), axis=-1)[:, :k]
+        lv = jnp.take_along_axis(cv, order, axis=1)
+        li = jnp.take_along_axis(ci, order, axis=1)
+    return lv, li
+
+
 def distance_topk_shardmap(a, qs, k: int, mesh: Mesh, axis: str = "data", *,
-                           policy=None, path: Optional[str] = None):
+                           policy=None, path: Optional[str] = None,
+                           merge: Optional[str] = None):
     """Fig. 6 OP1+OP2 over a sharded reference set, for a QUERY BATCH.
 
     ``a`` (N, d) is row-sharded; every shard runs the registry-selected
     fused distance→top-k kernel over its chunk for all Q queries, then the
-    c·k candidates are all-gathered and merged (OP3) — the batched
-    generalisation of ``knn_classify_shardmap``'s candidate merge.  Output
-    is bit-equal to the single-device ``dispatch.distance_topk``: per-row
-    distances are untouched by the row partition and the merge preserves
-    the global stable (smallest-index) tie order, because candidates are
-    laid out shard-major and shard blocks are contiguous row ranges.
-    Returns (values (Q, k), indices (Q, k)), replicated.
+    per-shard candidates merge (OP3) — the batched generalisation of
+    ``knn_classify_shardmap``'s candidate merge.  ``merge`` picks the
+    collective: ``"gather"`` all-gathers the c·kl candidates and runs one
+    flat top-k; ``"tree"`` runs the hierarchical butterfly merge (k rows
+    per query per round, log2(c) rounds); None selects tree on power-of-two
+    meshes.  Both are bit-equal to the single-device
+    ``dispatch.distance_topk``: per-row distances are untouched by the row
+    partition and both merges preserve the global stable (smallest-index)
+    tie order.  Returns (values (Q, k), indices (Q, k)), replicated.
+
+    The reference set SHOULD be pre-padded to a multiple of the shard count
+    with ``_FAR`` rows at fit/engine-construction time
+    (``KNNEstimator.fit_sharded`` and the serve engine's param placement
+    both do) — the in-call pad survives only as a fallback for direct
+    callers, off the serving hot path.
     """
     from repro.kernels import dispatch
 
+    quant = (path == "quant" if path is not None
+             else ((policy is not None and policy.quantized)
+                   or dispatch.env_override() == "quant"))
+    if quant:
+        raise NotImplementedError(
+            "the reference-sharded kNN arm has no quant tier: the int8 "
+            "lattice derives from the reference operand, which this "
+            "partition chunks per shard (and any _FAR pad row saturates a "
+            "per-shard lattice, zeroing every real feature) -- serve "
+            "quantized with the query strategy (DESIGN.md section 9)")
     c = mesh.shape[axis]
-    N = a.shape[0]
-    assert k <= N, (k, N)
-    ap, _ = _pad_rows(a, c, value=_FAR)
-    chunk_len = ap.shape[0] // c
+    if a.shape[0] % c:
+        a, _ = _pad_rows(a, c, value=_FAR)
+    Np = a.shape[0]
+    assert k <= Np, (k, Np)
+    chunk_len = Np // c
     # a shard can contribute at most its whole chunk, so clamping the
     # local candidate count is lossless: c*kl >= N >= k candidates survive
     kl = min(k, chunk_len)
+    if merge is None:
+        merge = "tree" if c > 1 and (c & (c - 1)) == 0 else "gather"
+    assert merge in ("gather", "tree"), merge
+    if merge == "tree" and c & (c - 1):
+        raise ValueError(
+            f"merge='tree' needs a power-of-two shard count for the "
+            f"butterfly exchange; mesh axis {axis!r} has {c} shards — "
+            f"use merge='gather'")
 
     def local(a_chunk, q_all):
         core = jax.lax.axis_index(axis)
         lv, li = dispatch.distance_topk(a_chunk, q_all, kl, path=path,
                                         policy=policy)        # (Q, kl) local
         li = li + core * chunk_len
+        if merge == "tree":
+            return _butterfly_topk_merge(lv, li, k, c, axis)
         all_v = jax.lax.all_gather(lv, axis)                  # (c, Q, kl)
         all_i = jax.lax.all_gather(li, axis)
         cand_v = jnp.moveaxis(all_v, 0, 1).reshape(lv.shape[0], c * kl)
@@ -200,7 +275,29 @@ def distance_topk_shardmap(a, qs, k: int, mesh: Mesh, axis: str = "data", *,
 
     fn = _shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
                     out_specs=(P(), P()), check_vma=False)
-    return fn(ap, qs)
+    return fn(a, qs)
+
+
+def distance_topk_query_shardmap(a, qs, k: int, mesh: Mesh,
+                                 axis: str = "data", *, policy=None,
+                                 path: Optional[str] = None):
+    """Fig. 6 OP1+OP2 with the QUERY rows sharded and the reference set
+    replicated on every shard (PULP-NN's weights-in-local-memory layout) —
+    zero merge collective, the output re-assembles by construction.  Exact
+    per row for every arm including int8 (the quant lattice derives from
+    the replicated reference, never the batch).  Accepts ragged Q."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    qp, Q = _pad_rows(qs, c)
+
+    def local(q_chunk, a_r):
+        return dispatch.distance_topk(a_r, q_chunk, k, path=path,
+                                      policy=policy)
+
+    fn = _row_sharded(local, mesh, axis, n_rep=1, n_out=2)
+    vals, idx = fn(qp, a)
+    return vals[:Q], idx[:Q]
 
 
 def _row_sharded(local, mesh: Mesh, axis: str, n_rep: int, n_out: int):
@@ -210,6 +307,28 @@ def _row_sharded(local, mesh: Mesh, axis: str, n_rep: int, n_out: int):
                       in_specs=(P(axis),) + (P(),) * n_rep,
                       out_specs=(P(axis),) * n_out if n_out > 1 else P(axis),
                       check_vma=False)
+
+
+def row_sharded_batch_fn(fn, mesh: Mesh, axis: str = "data"):
+    """Lift ANY per-row-independent ``(params, X) -> (classes, aux)`` batch
+    fn into a query-row-sharded mesh fn — the generic "query" strategy
+    executor behind ``Estimator.predict_batch_sharded_fn``.  Params flow in
+    as replicated closure constants, so the wrapped fn runs unchanged per
+    shard; this is what lets the int8 tier serve sharded (the quantized
+    predict fn's lattice derives from the params, never the batch rows).
+    Accepts ragged batch sizes (rows pad to a shard multiple and the pad
+    rows are sliced back off)."""
+    c = mesh.shape[axis]
+
+    def sharded_fn(params, X):
+        Xp, B = _pad_rows(X, c)
+        inner = _shard_map(lambda x: fn(params, x), mesh=mesh,
+                           in_specs=(P(axis),),
+                           out_specs=(P(axis), P(axis)), check_vma=False)
+        cls, aux = inner(Xp)
+        return cls[:B], aux[:B]
+
+    return sharded_fn
 
 
 def distance_argmin_shardmap(a, centroids, mesh: Mesh, axis: str = "data", *,
@@ -232,6 +351,47 @@ def distance_argmin_shardmap(a, centroids, mesh: Mesh, axis: str = "data", *,
     return dist[:N], ids[:N]
 
 
+def distance_argmin_centroid_shardmap(a, centroids, mesh: Mesh,
+                                      axis: str = "data", *, policy=None,
+                                      path: Optional[str] = None):
+    """Fig. 7 OP1+OP2 with the CENTROIDS sharded and every query row
+    replicated — the model-partition dual of ``distance_argmin_shardmap``.
+    The merge collective moves only the c per-shard minima per query (an
+    argmin over shards), with ties resolved first-shard-wins — the
+    smallest global centroid id, the single-device argmin rule — because
+    centroid blocks are contiguous ascending ranges.  Assignments are
+    exact away from exact distance ties, but the distance VALUES can
+    drift ~1 ulp: the fused kernel's d-reduction schedule depends on the
+    centroid-axis extent, which the chunking changes (the query strategy
+    keeps the full operand and stays bit-exact).  Under the int8 arm the
+    per-shard lattice derives from the LOCAL centroid chunk, so results
+    are lattice-approximate there; strategy auto-selection never picks a
+    model partition for quantized arms."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    cp, _ = _pad_rows(centroids, c, value=_FAR)
+    chunk_len = cp.shape[0] // c
+
+    def local(cent_chunk, a_all):
+        core = jax.lax.axis_index(axis)
+        d_loc, id_loc = dispatch.distance_argmin(a_all, cent_chunk,
+                                                 path=path, policy=policy)
+        id_loc = id_loc + core * chunk_len
+        all_d = jax.lax.all_gather(d_loc, axis)       # (c, B) minima only
+        all_i = jax.lax.all_gather(id_loc, axis)
+        w = jnp.argmin(all_d, axis=0)                 # first shard wins ties
+
+        def take(m):
+            return jnp.take_along_axis(m, w[None, :], axis=0)[0]
+
+        return take(all_d), take(all_i)
+
+    fn = _shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
+                    out_specs=(P(), P()), check_vma=False)
+    return fn(cp, a)
+
+
 def gnb_scores_shardmap(X, mu, var, log_prior, mesh: Mesh,
                         axis: str = "data", *, policy=None,
                         path: Optional[str] = None):
@@ -250,6 +410,39 @@ def gnb_scores_shardmap(X, mu, var, log_prior, mesh: Mesh,
 
     fn = _row_sharded(local, mesh, axis, n_rep=3, n_out=1)
     return fn(Xp, mu, var, log_prior)[:B]
+
+
+def gnb_scores_class_shardmap(X, mu, var, log_prior, mesh: Mesh,
+                              axis: str = "data", *, policy=None,
+                              path: Optional[str] = None):
+    """Fig. 5 OP1+OP2 with the CLASSES sharded and the query rows
+    replicated (the model-partition serving dual; the single-query port
+    shards features instead).  Each class's score column is independent of
+    the others, so the gathered (B, C) matrix matches the single-device op
+    up to kernel-schedule tolerance (~1 ulp where the arm's reduction
+    schedule depends on the class-axis extent; bit-exact argmax classes
+    away from exact score ties — the query strategy stays bit-exact
+    throughout); the int8 arm derives its lattice from the local class
+    chunk (lattice-approximate — auto strategy never picks it quantized).
+    Ragged class counts pad with unit-variance zero-mean dummies whose
+    columns are sliced off."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    mup, C = _pad_rows(mu, c)
+    varp, _ = _pad_rows(var, c, value=1.0)    # var=1: finite pad scores
+    lpp, _ = _pad_rows(log_prior, c)
+
+    def local(mu_k, var_k, lp_k, x_all):
+        s = dispatch.gnb_scores(x_all, mu_k, var_k, lp_k, path=path,
+                                policy=policy)             # (B, C/c)
+        all_s = jax.lax.all_gather(s, axis)                # (c, B, C/c)
+        return jnp.moveaxis(all_s, 0, 1).reshape(x_all.shape[0], -1)
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(axis), P()),
+                    out_specs=P(), check_vma=False)
+    return fn(mup, varp, lpp, X)[:, :C]
 
 
 def gmm_responsibilities_shardmap(mu, var, log_pi, X, mesh: Mesh,
@@ -284,6 +477,62 @@ def _gmm_log_joint(x, mu, var, log_pi):
     return _log_gauss(x, mu, var) + log_pi[None]
 
 
+def gmm_responsibilities_comp_shardmap(mu, var, log_pi, X, mesh: Mesh,
+                                       axis: str = "data", *, policy=None,
+                                       path: Optional[str] = None,
+                                       n_cores: int = 8):
+    """GMM E-step with the mixture COMPONENTS sharded: each shard computes
+    the joint log-density columns of its component chunk — via the same
+    arm the single-device dispatch would select at these shapes — the
+    (B, k) joint is gathered, and the per-row logsumexp normalisation runs
+    on the replicated matrix over exactly the real components.
+
+    NOT bit-equal to ``gmm_e_step``: the fp joint is the GEMM-identity
+    ``_log_gauss``, and chunking the component axis changes the matmul
+    shape — XLA's accumulation order over d drifts at float tolerance
+    (~1e-6 relative; argmax classes agree away from exact ties).  The
+    query strategy keeps the full (k, d) operand per shard and stays
+    bit-exact — which is why the cost model, not parity, chooses between
+    them.  The int8 arm's lattice additionally derives from the local
+    component chunk (lattice-approximate — auto never picks it quantized).
+    Returns (log_resp (B, k), None) — the query arm's contract."""
+    from repro.kernels import dispatch
+    from repro.kernels import ops as _ops
+
+    c = mesh.shape[axis]
+    K = mu.shape[0]
+    mup, _ = _pad_rows(mu, c)
+    varp, _ = _pad_rows(var, c, value=1.0)
+    lpp, _ = _pad_rows(log_pi, c, value=-jnp.inf)
+    arm = dispatch.resolve("gmm", "responsibilities", path=path,
+                           policy=policy, B=X.shape[0], d=X.shape[1],
+                           k=K).name
+
+    def joint_of(x, mu_k, var_k, lp_k):
+        if arm == "blocked":
+            return _ops.gnb_scores_batch(x, mu_k, var_k, lp_k)
+        if arm == "quant":
+            from repro.core import quantization as cq
+            from repro.kernels import quantized as qk
+            scale = qk.feature_scales(cq.gauss_absmax(
+                mu_k.astype(jnp.float32), var_k.astype(jnp.float32)))
+            quad, lin, const = cq.gauss_score_tables(mu_k, var_k, scale)
+            return qk.affine_scores(qk.quantize_rows(x, scale), quad, lin,
+                                    const + lp_k)
+        return _gmm_log_joint(x, mu_k, var_k, lp_k)
+
+    def local(mu_k, var_k, lp_k, x_all):
+        j = joint_of(x_all, mu_k, var_k, lp_k)             # (B, k/c)
+        all_j = jax.lax.all_gather(j, axis)                # (c, B, k/c)
+        return jnp.moveaxis(all_j, 0, 1).reshape(x_all.shape[0], -1)
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis), P(axis), P(axis), P()),
+                    out_specs=P(), check_vma=False)
+    joint = fn(mup, varp, lpp, X)[:, :K]
+    return joint - jax.nn.logsumexp(joint, axis=1, keepdims=True), None
+
+
 def forest_votes_shardmap(forest, X, mesh: Mesh, axis: str = "data", *,
                           policy=None, path: Optional[str] = None,
                           n_cores: int = 8):
@@ -311,16 +560,83 @@ def forest_votes_shardmap(forest, X, mesh: Mesh, axis: str = "data", *,
     return cls[:B], votes[:B]
 
 
+def forest_votes_tree_shardmap(forest, X, mesh: Mesh, axis: str = "data", *,
+                               policy=None, path: Optional[str] = None,
+                               n_cores: int = 8):
+    """Fig. 8 with the TREES sharded (the paper's literal Independent-Tasks
+    axis) for a query batch: each shard runs its tree chunk over every
+    query row and the integer vote histograms psum — exact (integer
+    addition commutes), matching the query arm bit-for-bit on the fp arms.
+    The int8 arm's threshold lattice derives from the local tree chunk
+    (lattice-approximate — auto strategy never picks it quantized).
+    Ragged tree counts pad with single-leaf sentinel trees voting one bin
+    past the real classes, dropped before the argmax."""
+    from repro.core.random_forest import Forest
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    nc = forest.n_class
+    T = forest.feature.shape[0]
+    pad = (-T) % c
+    feat, thr, left, right = (forest.feature, forest.threshold,
+                              forest.left, forest.right)
+    if pad:
+        sent = jnp.zeros((pad, feat.shape[1]), feat.dtype)
+        feat = jnp.concatenate([feat, sent.at[:, 0].set(-nc - 1)])
+        thr = jnp.concatenate([thr, jnp.zeros((pad,) + thr.shape[1:],
+                                              thr.dtype)])
+        left = jnp.concatenate([left, jnp.zeros((pad,) + left.shape[1:],
+                                                left.dtype)])
+        right = jnp.concatenate([right, jnp.zeros((pad,) + right.shape[1:],
+                                                  right.dtype)])
+
+    def local(feat_c, thr_c, left_c, right_c, x_all):
+        f = Forest(feature=feat_c, threshold=thr_c, left=left_c,
+                   right=right_c, n_class=nc + 1)  # sentinel bin visible
+        _, votes = dispatch.forest_votes(f, x_all, path=path, policy=policy,
+                                         n_cores=n_cores)
+        return jax.lax.psum(votes, axis)           # exact integer combine
+
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(P(axis),) * 4 + (P(),),
+                    out_specs=P(), check_vma=False)
+    votes = fn(feat, thr, left, right, X)[:, :nc]
+    return jnp.argmax(votes, axis=1).astype(jnp.int32), votes
+
+
 def knn_classify_batch_shardmap(model: KNNModel, X, k: int, mesh: Mesh,
                                 axis: str = "data", *, policy=None,
-                                path: Optional[str] = None):
-    """Batched Fig. 6 with a shard-resident reference set: per-shard fused
-    distance→top-k, candidate merge, then the shared vote.  Bit-equal to
-    ``knn_classify_batch`` (see ``distance_topk_shardmap``)."""
+                                path: Optional[str] = None,
+                                strategy: str = "reference",
+                                merge: Optional[str] = None):
+    """Batched Fig. 6 over a mesh, by strategy.  ``"reference"``:
+    shard-resident reference set, per-shard fused distance→top-k, candidate
+    merge (gather or butterfly — see ``distance_topk_shardmap``), then the
+    shared vote.  ``"query"``: query rows sharded against the replicated
+    reference — zero merge collective, votes computed in-shard.  Both are
+    bit-equal to ``knn_classify_batch``."""
     from repro.core.knn import _vote
 
+    if strategy == "query":
+        from repro.kernels import dispatch
+
+        c = mesh.shape[axis]
+        Xp, B = _pad_rows(X, c)
+
+        def local(q_chunk, a_r, labels_r):
+            _, nb = dispatch.distance_topk(a_r, q_chunk, k, path=path,
+                                           policy=policy)
+            cls = jax.vmap(
+                lambda row: _vote(labels_r, row, model.n_class))(nb)
+            return cls, nb
+
+        fn = _row_sharded(local, mesh, axis, n_rep=2, n_out=2)
+        cls, nb = fn(Xp, model.A, model.labels)
+        return cls[:B], nb[:B]
+    assert strategy == "reference", strategy
     _, nbr_idx = distance_topk_shardmap(model.A, X, k, mesh, axis,
-                                        policy=policy, path=path)
+                                        policy=policy, path=path,
+                                        merge=merge)
     classes = jax.vmap(lambda nb: _vote(model.labels, nb, model.n_class))(
         nbr_idx)
     return classes, nbr_idx

@@ -73,7 +73,11 @@ class Estimator(Protocol):
     def predict_batch_fn(self) -> Callable: ...
 
     def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable: ...
+                                 axis: Optional[str] = None,
+                                 strategy: Optional[str] = None
+                                 ) -> Callable: ...
+
+    def serve_cost_shape(self) -> Dict[str, int]: ...
 
     def predict_batch(self, X) -> Tuple[Any, Any]: ...
 
@@ -189,13 +193,47 @@ class _EstimatorBase:
             f"{type(self).__name__}: fit_sharded first or pass mesh="
         return mesh, axis
 
+    def serve_cost_shape(self) -> Dict[str, int]:
+        """The shape dict ``core.precision.serve_strategy_costs`` needs to
+        model this estimator's per-query serve work — model-side sizes the
+        params carry plus the static config (k, depth)."""
+        raise NotImplementedError
+
     def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        """Pure ``(params, X) -> (preds, aux)`` over a sharded data axis:
-        the batch rows are partitioned across shards (kNN instead shards
-        its reference set and merges candidates) and the merged result is
-        exactly the single-device ``predict_batch_fn()`` output.  Ragged
-        batch sizes are padded to the shard count and sliced back."""
+                                 axis: Optional[str] = None,
+                                 strategy: Optional[str] = None) -> Callable:
+        """Pure ``(params, X) -> (preds, aux)`` over a mesh, by partition
+        ``strategy`` (DESIGN.md §9): ``"query"`` shards the batch rows
+        against a replicated model (zero merge collective), ``"reference"``
+        shards the model-side axis and merges per-shard partials,
+        ``"single"`` returns the plain ``predict_batch_fn()``.  ``None``
+        keeps each algorithm's legacy arm (kNN: reference, others: query).
+        Every strategy's merged result is exactly the single-device output
+        for the fp arms; ragged batch sizes pad to the shard count and
+        slice back."""
+        mesh, axis = self._resolve_mesh(mesh, axis)
+        if strategy is None:
+            strategy = dispatch.DEFAULT_STRATEGY.get(self.algorithm, "query")
+        if strategy not in dispatch.STRATEGY_NAMES:
+            raise ValueError(f"strategy={strategy!r} is not one of "
+                             f"{dispatch.STRATEGY_NAMES}")
+        if strategy == "single":
+            return self.predict_batch_fn()
+        if self.quantized:
+            if strategy == "reference":
+                raise NotImplementedError(
+                    "the int8 tier has no model-partition serving arm: its "
+                    "lattices derive from the model-side operand, which a "
+                    "reference shard would chunk (DESIGN.md §8/§9) — serve "
+                    "quantized with strategy='query' or 'single'")
+            # generic batch-row partition over the quantized predict fn:
+            # the lattice derives from the replicated params, so per-shard
+            # rows are exactly the single-device rows
+            return _cluster.row_sharded_batch_fn(self.predict_batch_fn(),
+                                                 mesh, axis)
+        return self._sharded_fn(mesh, axis, strategy)
+
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         raise NotImplementedError
 
 
@@ -274,9 +312,7 @@ class KNNEstimator(_EstimatorBase):
 
         return fn
 
-    def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        mesh, axis = self._resolve_mesh(mesh, axis)
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         k, policy, path = self.k, self.policy, self.path
         n_class = self.params.n_class
 
@@ -285,9 +321,14 @@ class KNNEstimator(_EstimatorBase):
             model = _knn.KNNModel(A=params.A, labels=params.labels,
                                   n_class=n_class)
             return _cluster.knn_classify_batch_shardmap(
-                model, X, k, mesh, axis, policy=policy, path=path)
+                model, X, k, mesh, axis, policy=policy, path=path,
+                strategy=strategy)
 
         return fn
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        A = self.params.qa if self.quantized else self.params.A
+        return {"N": int(A.shape[0]), "d": int(A.shape[1]), "k": self.k}
 
     def empty_aux(self) -> jnp.ndarray:
         return jnp.zeros((0, self.k), jnp.int32)      # neighbour indices
@@ -356,11 +397,9 @@ class KMeansEstimator(_EstimatorBase):
 
         return fn
 
-    def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        mesh, axis = self._resolve_mesh(mesh, axis)
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         policy, path = self.policy, self.path
-        assign = dispatch.sharded("kmeans", "distance_argmin")
+        assign = dispatch.sharded("kmeans", "distance_argmin", strategy)
 
         def fn(params: _kmeans.KMeansState, X):
             X = policy.cast(X) if policy else X
@@ -369,6 +408,10 @@ class KMeansEstimator(_EstimatorBase):
             return ids, dist
 
         return fn
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        c = self.params.qc if self.quantized else self.params.centroids
+        return {"K": int(c.shape[0]), "d": int(c.shape[1])}
 
     def empty_aux(self) -> jnp.ndarray:
         return jnp.zeros((0,), jnp.float32)           # assignment distance
@@ -439,11 +482,9 @@ class GNBEstimator(_EstimatorBase):
 
         return fn
 
-    def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        mesh, axis = self._resolve_mesh(mesh, axis)
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         policy, path = self.policy, self.path
-        scores_of = dispatch.sharded("gnb", "scores")
+        scores_of = dispatch.sharded("gnb", "scores", strategy)
 
         def fn(params: _gnb.GNBModel, X):
             X = policy.cast(X) if policy else X
@@ -453,6 +494,10 @@ class GNBEstimator(_EstimatorBase):
             return jnp.argmax(scores, axis=1), scores
 
         return fn
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        m = self.params.quad if self.quantized else self.params.mu
+        return {"C": int(m.shape[0]), "d": int(m.shape[1])}
 
     def empty_aux(self) -> jnp.ndarray:
         # class count from static config, not params.mu — the quantized
@@ -525,11 +570,9 @@ class GMMEstimator(_EstimatorBase):
 
         return fn
 
-    def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        mesh, axis = self._resolve_mesh(mesh, axis)
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         policy, path, n_cores = self.policy, self.path, self.n_cores
-        resp_of = dispatch.sharded("gmm", "responsibilities")
+        resp_of = dispatch.sharded("gmm", "responsibilities", strategy)
 
         def fn(params: _gmm.GMMState, X):
             X = policy.cast(X) if policy else X
@@ -539,6 +582,10 @@ class GMMEstimator(_EstimatorBase):
             return jnp.argmax(lr, axis=1), lr
 
         return fn
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        m = self.params.quad if self.quantized else self.params.mu
+        return {"K": int(m.shape[0]), "d": int(m.shape[1])}
 
     def empty_aux(self) -> jnp.ndarray:
         return jnp.zeros((0, self.n_components), jnp.float32)
@@ -622,12 +669,10 @@ class RandomForestEstimator(_EstimatorBase):
 
         return fn
 
-    def predict_batch_sharded_fn(self, mesh=None,
-                                 axis: Optional[str] = None) -> Callable:
-        mesh, axis = self._resolve_mesh(mesh, axis)
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         policy, path, n_cores = self.policy, self.path, self.n_cores
         n_class = self.params.n_class
-        votes_of = dispatch.sharded("rf", "forest_votes")
+        votes_of = dispatch.sharded("rf", "forest_votes", strategy)
 
         def fn(params: _rf.Forest, X):
             X = policy.cast(X) if policy else X
@@ -639,6 +684,10 @@ class RandomForestEstimator(_EstimatorBase):
                             path=path, n_cores=n_cores)
 
         return fn
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        return {"T": int(self.params.feature.shape[0]),
+                "depth": self.max_depth, "C": int(self.params.n_class)}
 
     def empty_aux(self) -> jnp.ndarray:
         return jnp.zeros((0, self.params.n_class), jnp.int32)  # votes

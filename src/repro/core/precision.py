@@ -210,6 +210,122 @@ def predicted_cycles(census: Census, backend: BackendCosts,
     return float(census.vector(section) @ backend.vector())
 
 
+# ---------------------------------------------------------------------------
+# Sharded-serving strategy cost model (Eq. 15 / §5.3, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# Eq. 15 bounds parallel speedup by t_par/c + t_seq: the sequential term is
+# what each partition strategy changes.  "reference" (model partition,
+# the paper's master-merge OP3) divides the per-query work by c but pays a
+# per-launch merge collective; "query" (batch partition, the paper's
+# Independent-Tasks framing / PULP-NN's replicated-weights layout) runs
+# ceil(bucket/c) whole queries per shard with NO merge; "single" pays no
+# mesh dispatch at all.  The constants are per-launch overheads in the
+# same cycle units as ``BackendCosts`` — calibrated to the committed
+# BENCH_sharded measurements, not derived from hardware.
+
+SHARD_STRATEGIES = ("single", "query", "reference")
+SHARD_LAUNCH_CYCLES = 2000.0       # mesh dispatch: shard_map launch latency
+COLLECTIVE_LAUNCH_CYCLES = 1000.0  # fixed cost of the merge collective
+COLLECTIVE_ELEM_CYCLES = 1.0       # per element moved by the merge
+
+
+@dataclass(frozen=True)
+class StrategyCost:
+    """Modelled cycles for serving one bucket under one partition."""
+
+    strategy: str
+    compute: float    # per-shard parallel-section cycles (t_par / c)
+    overhead: float   # launch + merge-collective cycles (the t_seq term)
+
+    @property
+    def total(self) -> float:
+        return self.compute + self.overhead
+
+
+def serve_census(algorithm: str, shape: Dict[str, int] = None) -> Census:
+    """Per-QUERY op census of one serve inference (the fit-side loops and
+    their convergence checks do not run at serve time, so K-Means/GMM get
+    lightweight serve-only counts instead of their *_iter censuses)."""
+    s = dict(shape or {})
+    if algorithm == "knn":
+        return census_knn(n=s.get("N", 1000), d=s.get("d", 21),
+                          k=s.get("k", 4))
+    if algorithm == "kmeans":
+        K, d = s.get("K", 2), s.get("d", 21)
+        return Census("kmeans_serve",
+                      parallel={"add": 2 * K * d, "mul": K * d, "cmp": K,
+                                "elem": K * d},
+                      sequential={})
+    if algorithm == "gnb":
+        return census_gnb(d=s.get("d", 784), n_class=s.get("C", 10))
+    if algorithm == "gmm":
+        K, d = s.get("K", 2), s.get("d", 21)
+        e = K * d
+        return Census("gmm_serve",
+                      parallel={"add": 3 * e, "mul": e, "div": e,
+                                "exp": K, "elem": 2 * e},
+                      sequential={"cmp": K, "elem": K})
+    if algorithm == "rf":
+        return census_rf(n_trees=s.get("T", 48), depth=s.get("depth", 7),
+                         n_class=s.get("C", 10))
+    raise KeyError(f"no serve census for {algorithm!r}")
+
+
+def merge_elems(algorithm: str, shape: Dict[str, int] = None,
+                n_shards: int = 8) -> float:
+    """Per-query elements the reference-strategy merge collective moves:
+    kNN's butterfly exchanges (value, index) k-pairs for log2(c) rounds;
+    the other merges move per-shard partials once."""
+    s = dict(shape or {})
+    if algorithm == "knn":
+        rounds = max(1, (n_shards - 1).bit_length())
+        return 2.0 * s.get("k", 4) * rounds
+    if algorithm == "kmeans":
+        return 2.0 * n_shards                  # c (min, argmin) pairs
+    if algorithm == "gnb":
+        return float(s.get("C", 10))           # gathered (B, C) scores
+    if algorithm == "gmm":
+        return float(s.get("K", 2))            # gathered (B, K) joint
+    if algorithm == "rf":
+        return float(s.get("C", 10) + 1)       # psum'd vote histogram
+    raise KeyError(f"no merge model for {algorithm!r}")
+
+
+def serve_strategy_costs(algorithm: str, *, bucket: int, n_shards: int,
+                         shape: Dict[str, int] = None,
+                         backend: BackendCosts = None,
+                         quantized: bool = False
+                         ) -> Dict[str, StrategyCost]:
+    """Modelled per-bucket cycles for every applicable partition strategy.
+
+    ``quantized`` drops "reference": the int8 arms derive their lattices
+    from the model-side operand, so a model partition changes the lattice
+    per shard (core/cluster.py documents this per arm)."""
+    backend = backend or BACKENDS["fpu"]
+    w = predicted_cycles(serve_census(algorithm, shape), backend)
+    costs = {"single": StrategyCost("single", compute=bucket * w,
+                                    overhead=0.0)}
+    if n_shards > 1:
+        per_shard = -(-bucket // n_shards)     # ceil: whole query rows
+        costs["query"] = StrategyCost(
+            "query", compute=per_shard * w, overhead=SHARD_LAUNCH_CYCLES)
+        if not quantized:
+            moved = bucket * merge_elems(algorithm, shape, n_shards)
+            costs["reference"] = StrategyCost(
+                "reference", compute=bucket * w / n_shards,
+                overhead=SHARD_LAUNCH_CYCLES + COLLECTIVE_LAUNCH_CYCLES
+                + moved * COLLECTIVE_ELEM_CYCLES)
+    return costs
+
+
+def pick_strategy(costs: Dict[str, StrategyCost]) -> str:
+    """Cheapest modelled strategy; ties break toward the simpler partition
+    (single < query < reference)."""
+    return min(costs, key=lambda s: (costs[s].total,
+                                     SHARD_STRATEGIES.index(s)))
+
+
 def fit_backend(censuses, measured_cycles, seed: BackendCosts,
                 iters: int = 2000, lr: float = 0.05) -> BackendCosts:
     """Refit a backend cost vector to measured per-kernel cycles.

@@ -402,6 +402,21 @@ def _gmm_ref(mu, var, log_pi, X, *, n_cores=8, interpret=None):
     return gmm_e_step(X, mu, var, log_pi, n_cores)
 
 
+@register("gmm", "responsibilities", "blocked")
+def _gmm_blocked(mu, var, log_pi, X, *, n_cores=8, interpret=None):
+    """GMM joint log-density IS GNB's per-class score with log_pi as the
+    prior, so the blocked feature-chunked Pallas kernel serves both: one
+    (B, k) GEMM-shaped score pass, then the per-row logsumexp
+    normalisation.  Same (log_resp, mean log-lik) contract as the ref arm
+    but a different accumulation order — the d >= 64 selector threshold
+    keeps the default small-d EM fits on the ref schedule."""
+    import jax
+
+    joint = ops.gnb_scores_batch(X, mu, var, log_pi, interpret=interpret)
+    norm = jax.nn.logsumexp(joint, axis=1, keepdims=True)
+    return joint - norm, jnp.mean(norm[:, 0])
+
+
 @register("gmm", "responsibilities", "quant")
 def _gmm_quant(mu, var, log_pi, X, *, n_cores=8, interpret=None):
     """GMM E-step over the lattice: the same affine-table GEMM identity as
@@ -420,6 +435,16 @@ def _gmm_quant(mu, var, log_pi, X, *, n_cores=8, interpret=None):
     return joint - norm, jnp.mean(norm[:, 0])
 
 
+@selector("gmm", "responsibilities")
+def _gmm_select(*, B=0, d=0, k=0, policy=None, budget=VMEM_BUDGET):
+    # mirror the GNB threshold: the feature-chunked kernel only pays once
+    # there are several 128-lane chunks; small-d stays on the ref schedule
+    # (whose accumulation order is load-bearing for EM convergence parity)
+    if d >= 64:
+        return "blocked"
+    return "ref"
+
+
 def gmm_responsibilities(mu, var, log_pi, X, *,
                          policy: Optional[PrecisionPolicy] = None,
                          path: Optional[str] = None, n_cores: int = 8,
@@ -427,7 +452,8 @@ def gmm_responsibilities(mu, var, log_pi, X, *,
     """X (B, d) -> (log-responsibilities (B, k), mean log-likelihood)."""
     if policy is not None:
         mu, var, X = policy.cast(mu), policy.cast(var), policy.cast(X)
-    kp = resolve("gmm", "responsibilities", path=path, policy=policy)
+    kp = resolve("gmm", "responsibilities", path=path, policy=policy,
+                 B=X.shape[0], d=X.shape[1], k=mu.shape[0])
     return kp.fn(mu, var, log_pi, X, n_cores=n_cores, interpret=interpret)
 
 
@@ -484,52 +510,124 @@ def forest_votes(forest, X, *, policy: Optional[PrecisionPolicy] = None,
 # Mesh-aware arm — every hot-path op over a sharded data axis
 # ---------------------------------------------------------------------------
 #
-# The sharded arm is keyed like the single-device registry but takes a
-# ``mesh``/``axis`` pair: inside the shard_map each shard runs the SAME
-# registry-dispatched kernel (fused / blocked / ref still selected per
-# per-shard shape, and REPRO_BACKEND / ``path=`` still override), and the
-# per-shard outputs merge exactly as the paper's OP-last step — candidate
-# merge for kNN (Fig. 6 OP3), plain row concatenation for the
-# query-sharded ops.  Implementations live in core/cluster.py; the
-# deferred imports break the core -> dispatch -> cluster -> core cycle.
+# The sharded arm is keyed like the single-device registry plus a
+# PARTITION STRATEGY (DESIGN.md §9): "query" shards the batch rows against
+# a replicated model (zero merge collective — the paper's
+# Independent-Tasks framing); "reference" shards the model-side axis (kNN
+# rows / centroids / classes / components / trees) and merges per-shard
+# partials (the paper's OP3 master-merge).  Inside the shard_map each
+# shard runs the SAME registry-dispatched kernel (fused / blocked / ref
+# still selected per per-shard shape, and REPRO_BACKEND / ``path=`` still
+# override).  Implementations live in core/cluster.py; the deferred
+# imports break the core -> dispatch -> cluster -> core cycle.
 
-_SHARDED: Dict[Tuple[str, str], Callable] = {}
+STRATEGY_ENV_VAR = "REPRO_SHARD_STRATEGY"
+STRATEGY_NAMES = ("single", "query", "reference")
+# the arm `Estimator.predict_batch_sharded_fn(mesh)` resolves to when no
+# strategy is named — the pre-strategy-dispatch behaviour of each estimator
+DEFAULT_STRATEGY = {"knn": "reference"}
+
+_SHARDED: Dict[Tuple[str, str, str], Callable] = {}
 
 
-def register_sharded(algorithm: str, op: str):
+def register_sharded(algorithm: str, op: str, strategy: str = "query"):
+    assert strategy in STRATEGY_NAMES, strategy
+
     def deco(fn):
-        _SHARDED[(algorithm, op)] = fn
+        _SHARDED[(algorithm, op, strategy)] = fn
         return fn
 
     return deco
 
 
-def sharded(algorithm: str, op: str) -> Callable:
-    """The mesh-aware executor for ``(algorithm, op)``; raises KeyError for
-    ops with no sharded arm (mirrors ``resolve`` for unknown keys)."""
-    key = (algorithm, op)
+def sharded(algorithm: str, op: str,
+            strategy: Optional[str] = None) -> Callable:
+    """The mesh-aware executor for ``(algorithm, op)`` under ``strategy``
+    (None = the algorithm's legacy default arm); raises KeyError for ops
+    with no such sharded arm (mirrors ``resolve`` for unknown keys)."""
+    if strategy is None:
+        strategy = DEFAULT_STRATEGY.get(algorithm, "query")
+    key = (algorithm, op, strategy)
     if key not in _SHARDED:
         raise KeyError(f"no sharded arm for {key}; "
                        f"known: {sorted(_SHARDED)}")
     return _SHARDED[key]
 
 
-def sharded_registered() -> Tuple[Tuple[str, str], ...]:
-    """(algorithm, op) keys with a mesh-aware arm, for docs and tests."""
+def sharded_registered() -> Tuple[Tuple[str, str, str], ...]:
+    """(algorithm, op, strategy) keys with a mesh-aware arm, for docs and
+    tests."""
     return tuple(sorted(_SHARDED))
 
 
-@register_sharded("knn", "distance_topk")
+def strategy_env_override() -> Optional[str]:
+    """``REPRO_SHARD_STRATEGY``: pin the serving partition strategy for A/B
+    runs and tests, same contract as ``REPRO_BACKEND`` (a typo must fail,
+    not silently benchmark the default).  ``auto`` defers to the cost
+    model — the explicit spelling of the default."""
+    v = os.environ.get(STRATEGY_ENV_VAR, "").strip()
+    if not v or v == "auto":
+        return None
+    if v not in STRATEGY_NAMES:
+        raise ValueError(f"{STRATEGY_ENV_VAR}={v!r} is not one of "
+                         f"{('auto',) + STRATEGY_NAMES}")
+    return v
+
+
+def resolve_strategy(algorithm: str, *, bucket: int, n_shards: int,
+                     strategy: Optional[str] = None,
+                     policy: Optional[PrecisionPolicy] = None,
+                     shape: Optional[Dict[str, int]] = None,
+                     quantized: Optional[bool] = None) -> str:
+    """Pick the serving partition strategy for one (algorithm, bucket,
+    mesh) cell.
+
+    Precedence mirrors ``resolve``: explicit ``strategy=`` >
+    ``REPRO_SHARD_STRATEGY`` env > the analytic cost model
+    (``core.precision.serve_strategy_costs`` — Eq. 15's t_par/c + t_seq
+    per partition).  Quantized arms (int8 policy or ``REPRO_BACKEND=quant``)
+    exclude "reference" from the model: the int8 lattices derive from the
+    model-side operand, which a model partition would chunk."""
+    if strategy is not None and strategy != "auto":
+        if strategy not in STRATEGY_NAMES:
+            raise ValueError(f"strategy={strategy!r} is not one of "
+                             f"{('auto',) + STRATEGY_NAMES}")
+        return strategy
+    env = strategy_env_override()
+    if env is not None:
+        return env
+    precision = _precision_mod()
+    if quantized is None:
+        quantized = ((policy is not None and policy.quantized)
+                     or env_override() == "quant")
+    backend = precision.BACKENDS[(policy or DEFAULT_POLICY).cost_backend]
+    costs = precision.serve_strategy_costs(
+        algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
+        backend=backend, quantized=quantized)
+    return precision.pick_strategy(costs)
+
+
+@register_sharded("knn", "distance_topk", "reference")
 def distance_topk_sharded(a, c, k, *, mesh, axis="data", policy=None,
-                          path=None):
-    """Reference set row-sharded, per-shard fused kernel, candidate merge;
-    bit-equal to ``distance_topk``."""
+                          path=None, merge=None):
+    """Reference set row-sharded, per-shard fused kernel, candidate merge
+    (hierarchical butterfly on power-of-two meshes); bit-equal to
+    ``distance_topk``."""
     from repro.core import cluster
     return cluster.distance_topk_shardmap(a, c, k, mesh, axis,
-                                          policy=policy, path=path)
+                                          policy=policy, path=path,
+                                          merge=merge)
 
 
-@register_sharded("kmeans", "distance_argmin")
+@register_sharded("knn", "distance_topk", "query")
+def distance_topk_query_sharded(a, c, k, *, mesh, axis="data", policy=None,
+                                path=None):
+    from repro.core import cluster
+    return cluster.distance_topk_query_shardmap(a, c, k, mesh, axis,
+                                                policy=policy, path=path)
+
+
+@register_sharded("kmeans", "distance_argmin", "query")
 def distance_argmin_sharded(a, c, *, mesh, axis="data", policy=None,
                             path=None):
     from repro.core import cluster
@@ -537,7 +635,16 @@ def distance_argmin_sharded(a, c, *, mesh, axis="data", policy=None,
                                             policy=policy, path=path)
 
 
-@register_sharded("gnb", "scores")
+@register_sharded("kmeans", "distance_argmin", "reference")
+def distance_argmin_centroid_sharded(a, c, *, mesh, axis="data",
+                                     policy=None, path=None):
+    from repro.core import cluster
+    return cluster.distance_argmin_centroid_shardmap(a, c, mesh, axis,
+                                                     policy=policy,
+                                                     path=path)
+
+
+@register_sharded("gnb", "scores", "query")
 def gnb_scores_sharded(X, mu, var, log_prior, *, mesh, axis="data",
                        policy=None, path=None):
     from repro.core import cluster
@@ -545,7 +652,15 @@ def gnb_scores_sharded(X, mu, var, log_prior, *, mesh, axis="data",
                                        policy=policy, path=path)
 
 
-@register_sharded("gmm", "responsibilities")
+@register_sharded("gnb", "scores", "reference")
+def gnb_scores_class_sharded(X, mu, var, log_prior, *, mesh, axis="data",
+                             policy=None, path=None):
+    from repro.core import cluster
+    return cluster.gnb_scores_class_shardmap(X, mu, var, log_prior, mesh,
+                                             axis, policy=policy, path=path)
+
+
+@register_sharded("gmm", "responsibilities", "query")
 def gmm_responsibilities_sharded(mu, var, log_pi, X, *, mesh, axis="data",
                                  policy=None, path=None, n_cores=8):
     from repro.core import cluster
@@ -554,10 +669,29 @@ def gmm_responsibilities_sharded(mu, var, log_pi, X, *, mesh, axis="data",
                                                  path=path, n_cores=n_cores)
 
 
-@register_sharded("rf", "forest_votes")
+@register_sharded("gmm", "responsibilities", "reference")
+def gmm_responsibilities_comp_sharded(mu, var, log_pi, X, *, mesh,
+                                      axis="data", policy=None, path=None,
+                                      n_cores=8):
+    from repro.core import cluster
+    return cluster.gmm_responsibilities_comp_shardmap(
+        mu, var, log_pi, X, mesh, axis, policy=policy, path=path,
+        n_cores=n_cores)
+
+
+@register_sharded("rf", "forest_votes", "query")
 def forest_votes_sharded(forest, X, *, mesh, axis="data", policy=None,
                          path=None, n_cores=8):
     from repro.core import cluster
     return cluster.forest_votes_shardmap(forest, X, mesh, axis,
                                          policy=policy, path=path,
                                          n_cores=n_cores)
+
+
+@register_sharded("rf", "forest_votes", "reference")
+def forest_votes_tree_sharded(forest, X, *, mesh, axis="data", policy=None,
+                              path=None, n_cores=8):
+    from repro.core import cluster
+    return cluster.forest_votes_tree_shardmap(forest, X, mesh, axis,
+                                              policy=policy, path=path,
+                                              n_cores=n_cores)

@@ -93,7 +93,8 @@ def serve_nonneural(args):
     est = make_fitted(args.algo, X, y, n_groups=n_class,
                       policy=get_policy(args.policy), mesh=mesh)
     engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh,
-                                  policy=args.policy)
+                                  policy=args.policy,
+                                  strategy=args.strategy)
     if engine.quant_report:
         r = engine.quant_report
         ratio = r["bytes_fp32"] / max(r["bytes_int8"], 1)
@@ -119,6 +120,10 @@ def serve_nonneural(args):
           f"served {args.requests} queries in {dt:.3f}s "
           f"({args.requests/dt:.0f} q/s, {result.launches} launches, "
           f"buckets={engine.bucket_launches}) acc={acc:.3f}")
+    if engine.sharded:
+        routes = ", ".join(f"{b}->{s}" for b, s in
+                           sorted(engine.bucket_strategies.items()))
+        print(f"[serve] strategy={args.strategy or 'auto'} routes: {routes}")
     return result
 
 
@@ -172,6 +177,13 @@ def main(argv=None):
                     help="shard count for data-parallel Non-Neural "
                          "fit/serve (1 = single-device); needs that many "
                          "visible devices")
+    ap.add_argument("--strategy", default=None,
+                    choices=["auto", "single", "query", "reference"],
+                    help="sharded serving partition strategy (DESIGN.md "
+                         "§9): auto = per-bucket cost model (default), "
+                         "query = batch rows sharded / replicated model, "
+                         "reference = model axis sharded + merge "
+                         "collective, single = one device")
     ap.add_argument("--stream", action="store_true",
                     help="replay a Poisson-ish request stream through the "
                          "micro-batching RequestScheduler instead of one "

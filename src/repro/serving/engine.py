@@ -23,8 +23,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import cluster as _cluster
 from repro.core import knn as _knn
 from repro.core.estimator import Estimator, KNNEstimator
+from repro.kernels import dispatch
 from repro.models import transformer
 
 
@@ -56,27 +58,40 @@ class NonNeuralServeEngine:
     per-bucket executable.  ``bucket_launches`` counts launches per bucket
     size for capacity accounting.
 
-    Sharded serving (DESIGN.md §5): with ``mesh=`` (or ``sharded=True``
-    after a ``fit_sharded`` estimator) each bucket is partitioned over the
-    mesh's data axis and per-shard fused-kernel outputs are merged —
-    results are exactly the single-device path's.  Buckets are clamped to
-    at least the shard count so every shard sees work.
+    Sharded serving (DESIGN.md §5, §9): with ``mesh=`` (or ``sharded=True``
+    after a ``fit_sharded`` estimator) each bucket routes to one of three
+    partition strategies — ``"reference"`` (model axis sharded, per-shard
+    fused kernels + merge collective), ``"query"`` (batch rows sharded
+    against a replicated model, zero merge collective), or ``"single"``
+    (one device) — all bit-equal to the single-device path.  ``strategy=``
+    pins one for every bucket; the default ``"auto"`` asks
+    ``dispatch.resolve_strategy`` (core/precision.py's Eq. 15 cost model)
+    per (algorithm, bucket, mesh) cell; ``bucket_strategies`` records the
+    routing.  Buckets are clamped to at least the shard count and rounded
+    to a multiple of it so every shard owns whole query rows.
     """
 
     def __init__(self, estimator: Estimator, *, max_batch: int = 1024,
                  sharded: bool = False, mesh=None, mesh_axis: str = "data",
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None,
+                 strategy: Optional[str] = None):
         assert estimator.fitted, "fit the estimator before serving it"
         wants_int8 = (policy is not None
                       and str(policy).split("@")[0] == "int8") \
             or getattr(estimator, "quantized", False)
-        if wants_int8 and (mesh is not None or sharded):
-            # mirror fit_sharded's guard: the sharded predict fns trace
-            # fp32 param fields the quantized NamedTuples do not carry
+        if strategy is not None and strategy != "auto" \
+                and strategy not in dispatch.STRATEGY_NAMES:
+            raise ValueError(f"strategy={strategy!r} is not one of "
+                             f"{('auto',) + dispatch.STRATEGY_NAMES}")
+        if wants_int8 and (mesh is not None or sharded) \
+                and strategy == "reference":
+            # the int8 lattices derive from the model-side operand, which a
+            # model partition would chunk (DESIGN.md §8/§9) — query keeps the
+            # model whole on every shard and stays exact
             raise NotImplementedError(
-                "the int8 tier is single-device: quantized params have no "
-                "sharded serving arm yet (DESIGN.md §8) — serve without "
-                "mesh=/sharded= or use policy fp32/bf16")
+                "the int8 tier has no model-partition serving arm: use "
+                "strategy='query'/'single'/'auto' (auto never routes "
+                "quantized params to 'reference')")
         if policy is not None and str(policy).split("@")[0] == "int8":
             # the int8 serving tier: quantize in place (idempotent — a fit
             # under the int8 PrecisionPolicy already did it) and record the
@@ -105,13 +120,13 @@ class NonNeuralServeEngine:
             assert mesh is not None, \
                 "sharded=True needs a fit_sharded estimator or mesh="
         self.mesh, self.mesh_axis = mesh, mesh_axis
-        if mesh is not None:
-            self.n_shards = mesh.shape[mesh_axis]
-            self._fn = jax.jit(
-                estimator.predict_batch_sharded_fn(mesh, mesh_axis))
-        else:
-            self.n_shards = 1
-            self._fn = jax.jit(estimator.predict_batch_fn())
+        self.n_shards = mesh.shape[mesh_axis] if mesh is not None else 1
+        self.strategy = strategy           # None/"auto" => cost-model routes
+        self._quantized = bool(wants_int8)
+        self._cost_shape = estimator.serve_cost_shape()
+        self.bucket_strategies: Dict[int, str] = {}
+        self._fns: Dict[str, object] = {}      # strategy -> jitted fn
+        self._placed: Dict[str, object] = {}   # strategy -> placed params
 
     @property
     def sharded(self) -> bool:
@@ -121,7 +136,72 @@ class NonNeuralServeEngine:
         size = 1
         while size < b:
             size *= 2
-        return max(min(size, self.max_batch), self.n_shards)
+        size = max(min(size, self.max_batch), self.n_shards)
+        # whole query rows per shard: a query partition splits axis 0, so
+        # every bucket is a shard-count multiple (no-op on pow2 meshes,
+        # where every clamped pow2 bucket already divides)
+        return size + (-size) % self.n_shards
+
+    def _route(self, bucket: int) -> str:
+        """The partition strategy serving this bucket (cached per bucket)."""
+        s = self.bucket_strategies.get(bucket)
+        if s is None:
+            if self.mesh is None:
+                s = "single"
+            else:
+                s = dispatch.resolve_strategy(
+                    self.algorithm, bucket=bucket, n_shards=self.n_shards,
+                    strategy=self.strategy, policy=self.estimator.policy,
+                    shape=self._cost_shape,
+                    quantized=True if self._quantized else None)
+            self.bucket_strategies[bucket] = s
+        return s
+
+    def _fn_for(self, strategy: str):
+        fn = self._fns.get(strategy)
+        if fn is None:
+            if self.mesh is None or strategy == "single":
+                fn = jax.jit(self.estimator.predict_batch_fn())
+            else:
+                fn = jax.jit(self.estimator.predict_batch_sharded_fn(
+                    self.mesh, self.mesh_axis, strategy))
+            self._fns[strategy] = fn
+        return fn
+
+    def _params_for(self, strategy: str):
+        """Params placed for the strategy — replicated for query/single
+        (PULP-NN's weights-in-every-local-memory layout), row-sharded and
+        ``_FAR``-pre-padded for the kNN reference partition so the hot path
+        never re-pads (the padding satellite of DESIGN.md §9).  The
+        estimator's own params are never mutated."""
+        placed = self._placed.get(strategy)
+        if placed is None:
+            placed = params = self.estimator.params
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                if strategy == "reference" and self.algorithm == "knn" \
+                        and not self._quantized:
+                    c = self.n_shards
+                    A, labels = params.A, params.labels
+                    pad = (-A.shape[0]) % c
+                    if pad:
+                        A = jnp.concatenate(
+                            [A, jnp.full((pad, A.shape[1]), _cluster._FAR,
+                                         A.dtype)])
+                        labels = jnp.concatenate(
+                            [labels, jnp.zeros((pad,), labels.dtype)])
+                    A = jax.device_put(
+                        A, NamedSharding(self.mesh, P(self.mesh_axis)))
+                    labels = jax.device_put(
+                        labels, NamedSharding(self.mesh, P()))
+                    placed = params._replace(A=A, labels=labels)
+                else:
+                    rep = NamedSharding(self.mesh, P())
+                    placed = jax.tree.map(
+                        lambda x: jax.device_put(x, rep)
+                        if hasattr(x, "shape") else x, params)
+            self._placed[strategy] = placed
+        return placed
 
     def _empty(self) -> ClassifyResult:
         return ClassifyResult(classes=jnp.zeros((0,), jnp.int32),
@@ -135,7 +215,9 @@ class NonNeuralServeEngine:
         pad = size - chunk.shape[0]
         if pad:
             chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-        jax.block_until_ready(self._fn(self.estimator.params, chunk)[0])
+        s = self._route(size)
+        jax.block_until_ready(
+            self._fn_for(s)(self._params_for(s), chunk)[0])
         self.warmed.add(size)
 
     def warmup(self, X) -> int:
@@ -170,14 +252,14 @@ class NonNeuralServeEngine:
         if B == 0:
             return self._empty()
         classes, auxes, launches = [], [], 0
-        params = self.estimator.params
         for lo in range(0, B, self.max_batch):
             chunk = X[lo: lo + self.max_batch]
             bucket = self._bucket(chunk.shape[0])
             pad = bucket - chunk.shape[0]
             if pad:
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-            cls, aux = self._fn(params, chunk)
+            s = self._route(bucket)
+            cls, aux = self._fn_for(s)(self._params_for(s), chunk)
             classes.append(cls[: bucket - pad])
             auxes.append(aux[: bucket - pad])
             self.bucket_launches[bucket] = \

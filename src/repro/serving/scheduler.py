@@ -165,8 +165,11 @@ class RequestScheduler:
         # the stream started, so `bucket_launches keys ⊆ sched.warmed` is a
         # real no-compile-mid-stream invariant (engine.warmed itself grows
         # with every launch, which would make the check vacuous)
-        self.warmed = frozenset(b for b in engine.warmed
-                                if b <= self.max_batch)
+        # clamp cap to the engine's bucket lattice: buckets are rounded up
+        # to shard-count multiples (whole query rows per shard), so on a
+        # non-pow2 mesh the top bucket may legitimately exceed max_batch
+        cap = self.max_batch + (-self.max_batch) % engine.n_shards
+        self.warmed = frozenset(b for b in engine.warmed if b <= cap)
         assert self.warmed, (engine.warmed, self.max_batch)
         self.cache_size = int(cache_size)
         self._cache: "OrderedDict[bytes, Any]" = OrderedDict()

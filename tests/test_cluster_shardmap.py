@@ -62,6 +62,33 @@ PAYLOAD = textwrap.dedent("""
         assert int(got_cls) == int(want_cls2)
         np.testing.assert_array_equal(np.asarray(got_votes),
                                       np.asarray(want_votes))
+
+    # 6. incompatible shapes fail with a ValueError naming the shape and
+    # the mesh, not a bare assert (N=93, d=13, T=10 all indivisible by 8)
+    def expect_shape_error(fn, what):
+        try:
+            fn()
+        except ValueError as e:
+            msg = str(e)
+            assert what in msg and "'data'" in msg and "8-shard" in msg, msg
+        else:
+            raise AssertionError(f"no ValueError for {what}")
+
+    bad_knn = KNN.KNNModel(A=X[:93], labels=yj[:93], n_class=C)
+    expect_shape_error(
+        lambda: cluster.knn_classify_shardmap(bad_knn, X[0], 4, mesh,
+                                              "data"), "N=93")
+    expect_shape_error(
+        lambda: cluster.kmeans_iteration_shardmap(X[:93], cents, mesh,
+                                                  "data"), "N=93")
+    gm13 = NB.fit_gnb(X[:, :13], yj, C)
+    expect_shape_error(
+        lambda: cluster.gnb_decision_shardmap(gm13, X[3, :13], mesh,
+                                              "data"), "d=13")
+    f10 = RF.train_forest(np.asarray(X), y, C, n_trees=10, max_depth=4)
+    expect_shape_error(
+        lambda: cluster.forest_predict_shardmap(f10, X[0], mesh, "data"),
+        "T=10")
     print("SHARDMAP_OK")
 """)
 

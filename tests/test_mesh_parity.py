@@ -71,17 +71,27 @@ FIT_PARITY = textwrap.dedent("""
 """)
 
 SERVE_PARITY = textwrap.dedent("""
+    import os
     from repro.serving import NonNeuralServeEngine
 
+    QUANT = os.environ.get("REPRO_BACKEND") == "quant"
     RAGGED_BATCHES = (1, 5, 19)            # never a multiple of the mesh
     for c in MESH_SIZES:
         mesh = _mk((c,), ("data",))
         for algo in sorted(ESTIMATORS):
             ref = fitted(algo)             # SAME params on both paths
             plain = NonNeuralServeEngine(ref, max_batch=32)
-            shard = NonNeuralServeEngine(ref, max_batch=32, mesh=mesh)
+            # pin the pre-dispatch legacy arm (knn reference, rest query):
+            # this test's contract is exactness of those arms; the strategy
+            # matrix test covers the auto cost-model routing.  The forced
+            # quant tier refuses the kNN model partition (its lattice
+            # derives from the reference operand) -- pin query there
+            legacy = "reference" if algo == "knn" and not QUANT else "query"
+            shard = NonNeuralServeEngine(ref, max_batch=32, mesh=mesh,
+                                         strategy=legacy)
             assert shard.sharded and shard.n_shards == c
-            fn = jax.jit(ref.predict_batch_sharded_fn(mesh))
+            fn = jax.jit(ref.predict_batch_sharded_fn(mesh,
+                                                      strategy=legacy))
             for B in RAGGED_BATCHES:
                 Q = X[:B]
                 want = plain.classify(Q)
@@ -89,11 +99,21 @@ SERVE_PARITY = textwrap.dedent("""
                 np.testing.assert_array_equal(
                     np.asarray(got.classes), np.asarray(want.classes),
                     err_msg=f"{algo} mesh={c} B={B}")
-                # serve outputs are exact for every algorithm: per-row
-                # arithmetic is untouched by the batch/reference partition
-                np.testing.assert_array_equal(
-                    np.asarray(got.aux), np.asarray(want.aux),
-                    err_msg=f"{algo} aux mesh={c} B={B}")
+                # serve outputs are exact for every algorithm on the fp
+                # arms: per-row arithmetic is untouched by the
+                # batch/reference partition.  The forced quant arms'
+                # float accumulation rounds with the row-block extent
+                # (documented per arm in core/cluster.py), so float
+                # evidence sits at tolerance there
+                if QUANT and algo in ("kmeans", "gnb", "gmm"):
+                    np.testing.assert_allclose(
+                        np.asarray(got.aux), np.asarray(want.aux),
+                        rtol=1e-4, atol=1e-4,
+                        err_msg=f"{algo} aux mesh={c} B={B}")
+                else:
+                    np.testing.assert_array_equal(
+                        np.asarray(got.aux), np.asarray(want.aux),
+                        err_msg=f"{algo} aux mesh={c} B={B}")
                 dcls, daux = fn(ref.params, Q)
                 np.testing.assert_array_equal(
                     np.asarray(dcls), np.asarray(want.classes))
@@ -105,11 +125,150 @@ SERVE_PARITY = textwrap.dedent("""
         # not crash the per-shard kernel
         big = make_fitted("knn", X, y, n_groups=C, k=16)
         wc, wa = big.predict_batch(X[:5])
-        gc, ga = jax.jit(big.predict_batch_sharded_fn(mesh))(big.params,
-                                                             X[:5])
+        # the local-candidate clamp lives in the reference arm, which the
+        # forced quant tier refuses -- the query arm still covers k > chunk
+        big_fn = big.predict_batch_sharded_fn(
+            mesh, strategy="query" if QUANT else "reference")
+        gc, ga = jax.jit(big_fn)(big.params, X[:5])
         np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
         np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
     print("SERVE_PARITY_OK")
+""")
+
+
+STRATEGY_MATRIX = textwrap.dedent("""
+    import os
+    from repro.serving import NonNeuralServeEngine
+
+    QUANT = os.environ.get("REPRO_BACKEND") == "quant"
+    FLOAT_AUX = ("kmeans", "gnb", "gmm")   # float evidence: kernel-schedule
+                                           # tolerance under model partition
+    for c in (3, 4, 8):                    # includes a non-pow2 mesh
+        mesh = _mk((c,), ("data",))
+        for algo in sorted(ESTIMATORS):
+            est = fitted(algo, mesh=mesh)
+            single = NonNeuralServeEngine(est, max_batch=16, mesh=mesh,
+                                          strategy="single")
+            for B in (1, 5, 19):           # 19 > max_batch: microbatching
+                Q = X[:B]
+                want = single.classify(Q)
+                for strat in ("query", "reference", "auto"):
+                    if QUANT and strat == "reference":
+                        # forced dynamic-quant arms calibrate their lattice
+                        # from the model-side operand; a pinned model
+                        # partition chunks it, so per-shard lattices differ
+                        # by design (DESIGN.md section 9 -- the int8 policy tier
+                        # refuses this combination outright)
+                        continue
+                    eng = NonNeuralServeEngine(est, max_batch=16, mesh=mesh,
+                                               strategy=strat)
+                    got = eng.classify(Q)
+                    tag = f"{algo} mesh={c} B={B} {strat}"
+                    # the rounding clamp: every launched bucket owns whole
+                    # query rows per shard
+                    assert all(b % c == 0 for b in eng.bucket_launches), \
+                        (tag, eng.bucket_launches)
+                    np.testing.assert_array_equal(
+                        np.asarray(got.classes), np.asarray(want.classes),
+                        err_msg=tag)
+                    used = {eng.bucket_strategies[b]
+                            for b in eng.bucket_launches}
+                    # query partitions are bit-exact on the fp arms;
+                    # model partitions (and any quant-arm partition) sit at
+                    # kernel-schedule tolerance on float evidence
+                    loose = algo in FLOAT_AUX and (
+                        "reference" in used or (QUANT and used != {"single"}))
+                    if loose:
+                        np.testing.assert_allclose(
+                            np.asarray(got.aux), np.asarray(want.aux),
+                            rtol=1e-4, atol=1e-4, err_msg=tag)
+                    else:
+                        np.testing.assert_array_equal(
+                            np.asarray(got.aux), np.asarray(want.aux),
+                            err_msg=tag)
+    print("STRATEGY_MATRIX_OK")
+""")
+
+INT8_STRATEGY = textwrap.dedent("""
+    from repro.kernels.dispatch import get_policy
+    from repro.serving import NonNeuralServeEngine
+
+    mesh = _mk((4,), ("data",))
+    for algo in sorted(ESTIMATORS):
+        est = make_fitted(algo, X, y, n_groups=C, policy=get_policy("int8"))
+        want = NonNeuralServeEngine(est, max_batch=16,
+                                    policy="int8").classify(X[:19])
+        qry = NonNeuralServeEngine(est, max_batch=16, mesh=mesh,
+                                   policy="int8", strategy="query")
+        got = qry.classify(X[:19])
+        np.testing.assert_array_equal(np.asarray(got.classes),
+                                      np.asarray(want.classes), err_msg=algo)
+        auto = NonNeuralServeEngine(est, max_batch=16, mesh=mesh,
+                                    policy="int8")
+        g2 = auto.classify(X[:19])
+        # the cost model must never route quantized params to a model
+        # partition: its lattices derive from the model-side operand
+        assert "reference" not in set(auto.bucket_strategies.values()), \
+            (algo, auto.bucket_strategies)
+        np.testing.assert_array_equal(np.asarray(g2.classes),
+                                      np.asarray(want.classes), err_msg=algo)
+        try:
+            NonNeuralServeEngine(est, max_batch=16, mesh=mesh,
+                                 policy="int8", strategy="reference")
+            raise AssertionError(f"{algo}: int8+reference must refuse")
+        except NotImplementedError:
+            pass
+    print("INT8_STRATEGY_OK")
+""")
+
+MERGE_PARITY = textwrap.dedent("""
+    import os
+    from repro.core import cluster
+    from repro.kernels import dispatch
+
+    qs = jnp.asarray(X[:7])
+    a = jnp.asarray(X)
+    # the merge collectives are fp-arm machinery: under the forced quant
+    # tier the reference partition refuses outright (per-shard lattices),
+    # so assert the refusal and test the merges on an explicit fp arm
+    PATH = None
+    if os.environ.get("REPRO_BACKEND") == "quant":
+        PATH = "fused"
+        try:
+            cluster.distance_topk_shardmap(np.asarray(X), np.asarray(qs),
+                                           5, _mk((2,), ("data",)), "data")
+            raise AssertionError("quant reference partition must refuse")
+        except NotImplementedError:
+            pass
+    for c in (2, 4, 8):
+        mesh = _mk((c,), ("data",))
+        for k in (1, 5, 16):               # k=16 > 93//8: local clamp
+            wv, wi = dispatch.distance_topk(a, qs, k, path=PATH)
+            for merge in ("tree", "gather", None):
+                gv, gi = cluster.distance_topk_shardmap(
+                    np.asarray(X), np.asarray(qs), k, mesh, "data",
+                    merge=merge, path=PATH)
+                tag = f"mesh={c} k={k} merge={merge}"
+                np.testing.assert_array_equal(
+                    np.asarray(gv), np.asarray(wv), err_msg=tag)
+                np.testing.assert_array_equal(
+                    np.asarray(gi), np.asarray(wi), err_msg=tag)
+    # the butterfly needs XOR partners: forcing it on a non-pow2 mesh must
+    # fail loudly, and the default must fall back to the gather merge
+    mesh3 = _mk((3,), ("data",))
+    try:
+        cluster.distance_topk_shardmap(np.asarray(X), np.asarray(qs), 5,
+                                       mesh3, "data", merge="tree",
+                                       path=PATH)
+        raise AssertionError("tree merge on a 3-shard mesh must raise")
+    except ValueError:
+        pass
+    gv, gi = cluster.distance_topk_shardmap(np.asarray(X), np.asarray(qs),
+                                            5, mesh3, "data", path=PATH)
+    wv, wi = dispatch.distance_topk(a, qs, 5, path=PATH)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    print("MERGE_PARITY_OK")
 """)
 
 
@@ -130,6 +289,30 @@ def test_sharded_serve_matches_single_device():
     """The engine's sharded bucket path returns exactly the single-device
     results for ragged batch sizes at every mesh size."""
     _run(SERVE_PARITY, "SERVE_PARITY_OK")
+
+
+def test_strategy_matrix_serve_parity():
+    """Query-sharded vs reference-sharded vs single-device vs the auto
+    cost-model route: classes bit-equal for all five algorithms on pow2
+    AND non-pow2 meshes, ragged batches, and bucket % n_shards == 0 under
+    the rounding clamp; aux bit-equal except where the kernel schedule
+    depends on the partitioned model-axis extent (float evidence under a
+    model partition / quant arm, asserted at 1e-4)."""
+    _run(STRATEGY_MATRIX, "STRATEGY_MATRIX_OK")
+
+
+def test_int8_sharded_serving_strategies():
+    """The int8 tier serves sharded through the query partition (replicated
+    quantized model per shard, PULP-NN layout): classes match single-device
+    int8; auto never routes to 'reference'; explicit 'reference' refuses."""
+    _run(INT8_STRATEGY, "INT8_STRATEGY_OK")
+
+
+def test_hierarchical_topk_merge_parity():
+    """The butterfly tree merge == the gather merge == single-device
+    distance_topk (values AND global indices), including local-k clamping;
+    tree merge demands a pow2 mesh and the default falls back to gather."""
+    _run(MERGE_PARITY, "MERGE_PARITY_OK")
 
 
 def test_rf_tree_parallel_fit_ragged_shards():
@@ -165,9 +348,19 @@ def test_sharded_arm_registry_covers_every_hot_op():
     from repro.kernels import dispatch
 
     assert dispatch.sharded_registered() == (
-        ("gmm", "responsibilities"), ("gnb", "scores"),
-        ("kmeans", "distance_argmin"), ("knn", "distance_topk"),
-        ("rf", "forest_votes"))
-    assert set(dispatch.sharded_registered()) == set(dispatch.registered())
+        ("gmm", "responsibilities", "query"),
+        ("gmm", "responsibilities", "reference"),
+        ("gnb", "scores", "query"),
+        ("gnb", "scores", "reference"),
+        ("kmeans", "distance_argmin", "query"),
+        ("kmeans", "distance_argmin", "reference"),
+        ("knn", "distance_topk", "query"),
+        ("knn", "distance_topk", "reference"),
+        ("rf", "forest_votes", "query"),
+        ("rf", "forest_votes", "reference"))
+    assert {(a, o) for a, o, _ in dispatch.sharded_registered()} \
+        == set(dispatch.registered())
     with pytest.raises(KeyError):
         dispatch.sharded("svm", "qp")
+    with pytest.raises(KeyError):
+        dispatch.sharded("knn", "distance_topk", "single")

@@ -1,0 +1,111 @@
+"""Strategy dispatch is host-side arithmetic — no mesh, no devices.
+
+Covers the cost-model regimes (small bucket -> reference, large bucket ->
+query, one shard -> single), the REPRO_SHARD_STRATEGY override contract
+(typos fail loudly, explicit strategy= outranks the env), and the
+quantized exclusion of the "reference" partition (int8 lattices derive
+from the model-side operand, so a model partition would change the
+lattice per shard).
+"""
+import pytest
+
+from repro.core import precision
+from repro.kernels import dispatch
+
+KNN_SHAPE = {"N": 1024, "d": 32, "k": 8}
+
+
+def test_cost_regimes_small_bucket_reference_large_bucket_query():
+    # bucket=1: query's ceil(1/c) pays the full per-query census on one
+    # shard, reference amortises it 1/c -- the merge collective is cheap
+    # at one query/launch.
+    small = dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                      shape=KNN_SHAPE)
+    assert small == "reference"
+    # bucket >> c: both strategies amortise compute ~1/c but reference
+    # also moves bucket * merge_elems through the collective.
+    large = dispatch.resolve_strategy("knn", bucket=1024, n_shards=8,
+                                      shape=KNN_SHAPE)
+    assert large == "query"
+
+
+def test_one_shard_resolves_single():
+    assert dispatch.resolve_strategy("knn", bucket=64, n_shards=1) == "single"
+    costs = precision.serve_strategy_costs("knn", bucket=64, n_shards=1,
+                                           shape=KNN_SHAPE)
+    assert set(costs) == {"single"}
+
+
+def test_explicit_strategy_outranks_cost_model_and_env(monkeypatch):
+    monkeypatch.setenv(dispatch.STRATEGY_ENV_VAR, "reference")
+    got = dispatch.resolve_strategy("knn", bucket=1024, n_shards=8,
+                                    strategy="query", shape=KNN_SHAPE)
+    assert got == "query"
+    # "auto" defers to the env override, then the cost model
+    got = dispatch.resolve_strategy("knn", bucket=1024, n_shards=8,
+                                    strategy="auto", shape=KNN_SHAPE)
+    assert got == "reference"
+
+
+def test_env_override_and_typo(monkeypatch):
+    monkeypatch.setenv(dispatch.STRATEGY_ENV_VAR, "query")
+    assert dispatch.strategy_env_override() == "query"
+    assert dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                     shape=KNN_SHAPE) == "query"
+    monkeypatch.setenv(dispatch.STRATEGY_ENV_VAR, "qeury")
+    with pytest.raises(ValueError, match="REPRO_SHARD_STRATEGY"):
+        dispatch.strategy_env_override()
+    with pytest.raises(ValueError, match="qeury"):
+        dispatch.resolve_strategy("knn", bucket=1, n_shards=8)
+    monkeypatch.setenv(dispatch.STRATEGY_ENV_VAR, "auto")
+    assert dispatch.strategy_env_override() is None
+
+
+def test_explicit_strategy_typo_fails():
+    with pytest.raises(ValueError, match="qry"):
+        dispatch.resolve_strategy("knn", bucket=4, n_shards=8,
+                                  strategy="qry")
+
+
+def test_quantized_excludes_reference(monkeypatch):
+    monkeypatch.delenv(dispatch.STRATEGY_ENV_VAR, raising=False)
+    costs = precision.serve_strategy_costs("knn", bucket=1, n_shards=8,
+                                           shape=KNN_SHAPE, quantized=True)
+    assert "reference" not in costs
+    # bucket=1 picked "reference" unquantized (regime test above); with
+    # the int8 lattice constraint the model must fall back
+    got = dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                    shape=KNN_SHAPE, quantized=True)
+    assert got in ("single", "query")
+    # policy.quantized implies the same exclusion without quantized=
+    pol = dispatch.get_policy("int8")
+    got = dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                    shape=KNN_SHAPE, policy=pol)
+    assert got in ("single", "query")
+
+
+def test_costs_cover_all_algorithms():
+    shapes = {"knn": {"N": 512, "d": 16, "k": 4},
+              "kmeans": {"K": 16, "d": 16},
+              "gnb": {"C": 4, "d": 16},
+              "gmm": {"K": 4, "d": 16},
+              "rf": {"T": 16, "depth": 8, "C": 4}}
+    for algo, shape in shapes.items():
+        costs = precision.serve_strategy_costs(algo, bucket=64, n_shards=8,
+                                               shape=shape)
+        assert set(costs) == {"single", "query", "reference"}
+        pick = precision.pick_strategy(costs)
+        assert pick in costs
+        for s, c in costs.items():
+            assert c.strategy == s
+            assert c.total == c.compute + c.overhead > 0.0
+
+
+def test_pick_strategy_tie_breaks_toward_simpler_partition():
+    SC = precision.StrategyCost
+    costs = {"reference": SC("reference", 10.0, 0.0),
+             "query": SC("query", 5.0, 5.0),
+             "single": SC("single", 10.0, 0.0)}
+    assert precision.pick_strategy(costs) == "single"
+    del costs["single"]
+    assert precision.pick_strategy(costs) == "query"
