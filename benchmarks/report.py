@@ -25,6 +25,8 @@ BENCH_SERVING = Path(__file__).resolve().parents[1] / \
     "BENCH_serving.json"
 BENCH_QUANT = Path(__file__).resolve().parents[1] / \
     "BENCH_quant.json"
+BENCH_ANN = Path(__file__).resolve().parents[1] / \
+    "BENCH_ann.json"
 
 # Required keys per BENCH accumulator: every entry must carry the
 # envelope, every result record the per-kind keys.  The trajectory files
@@ -43,6 +45,8 @@ _RESULT_KEYS = {
                 "deadline_miss_rate"),
     "quant": ("algorithm", "arm", "bucket", "path", "us_per_query",
               "label_agreement"),
+    "ann": ("algorithm", "arm", "bucket", "N", "nprobe", "us_per_query",
+            "recall_at_k", "k"),
 }
 
 
@@ -199,6 +203,35 @@ def write_quant_entry(results, path: Path = BENCH_QUANT) -> dict:
     return _append_entry(results, path, "quant")
 
 
+def write_ann_entry(results, path: Path = BENCH_ANN) -> dict:
+    """Append one recall@k-vs-latency sweep (IVF-PQ ANN against the exact
+    fused kNN oracle, nprobe as the knob, per reference size N) to
+    BENCH_ann.json."""
+    return _append_entry(results, path, "ann")
+
+
+def ann_table(path: Path = BENCH_ANN) -> str:
+    if not path.exists():
+        return "(no BENCH_ann.json yet — run benchmarks/run.py)"
+    data = load_bench(path, "ann")
+    lines = ["| when | arm | N | bucket | nprobe | refine | us/query | "
+             "recall@k | vs exact |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        exact = {(r["N"], r["bucket"]): r["us_per_query"]
+                 for r in e["results"] if r["arm"] == "exact"}
+        for r in e["results"]:
+            base = exact.get((r["N"], r["bucket"]))
+            speed = (f"{base / r['us_per_query']:.1f}x"
+                     if base and r["arm"] != "exact" else "—")
+            lines.append(
+                f"| {e['timestamp']} | {r['arm']} | {r['N']} | "
+                f"{r['bucket']} | {r['nprobe']} | {r.get('refine', 0)} | "
+                f"{r['us_per_query']:.1f} | {r['recall_at_k']:.3f} | "
+                f"{speed} |")
+    return "\n".join(lines)
+
+
 def quant_table(path: Path = BENCH_QUANT) -> str:
     if not path.exists():
         return "(no BENCH_quant.json yet — run benchmarks/run.py)"
@@ -327,7 +360,17 @@ def main():
                     help="run the representation A/B (fp32-ref / "
                          "fp32-fused / bf16 / int8 per algorithm x "
                          "bucket) and append an entry to BENCH_quant.json")
+    ap.add_argument("--ann", action="store_true",
+                    help="run the IVF-PQ recall@k-vs-latency sweep "
+                         "(nprobe knob, exact fused kNN oracle) and "
+                         "append an entry to BENCH_ann.json")
     args = ap.parse_args()
+    if args.ann:
+        from benchmarks.ann_sweep import run as run_ann
+        write_ann_entry(run_ann([], quick=True))
+        print("\n### ANN recall-vs-latency\n")
+        print(ann_table())
+        return
     if args.quant:
         from benchmarks.quant_ab import run as run_quant
         write_quant_entry(run_quant([], quick=True))

@@ -22,9 +22,9 @@ def main() -> None:
     args = ap.parse_args()
     csv_rows: list = []
 
-    from benchmarks import cortex_m4, estimator_sweep, fp_backends
-    from benchmarks import kernel_blocks, parallel_speedup, quant_ab, report
-    from benchmarks import roofline, serving_load, sorting
+    from benchmarks import ann_sweep, cortex_m4, estimator_sweep
+    from benchmarks import fp_backends, kernel_blocks, parallel_speedup
+    from benchmarks import quant_ab, report, roofline, serving_load, sorting
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
@@ -41,6 +41,8 @@ def main() -> None:
     report.write_serving_entry(serving)         # rate x algo x bucket policy
     quant = quant_ab.run(csv_rows, quick=args.quick)
     report.write_quant_entry(quant)             # representation A/B (§5.2)
+    ann = ann_sweep.run(csv_rows, quick=args.quick)
+    report.write_ann_entry(ann)                 # recall@k vs latency (§10)
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

@@ -1,6 +1,7 @@
 """The paper's contribution: six Non-Neural ML kernels with the PULP-cluster
 parallelisation schemes, adapted to TPU meshes (see DESIGN.md §2)."""
 from repro.core import (  # noqa: F401
+    ann,
     cluster,
     distribution,
     estimator,

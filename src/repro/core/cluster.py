@@ -300,6 +300,31 @@ def distance_topk_query_shardmap(a, qs, k: int, mesh: Mesh,
     return vals[:Q], idx[:Q]
 
 
+def adc_topk_query_shardmap(qlut, codes, cand_ids, k: int, mesh: Mesh,
+                            axis: str = "data", *, policy=None,
+                            path: Optional[str] = None):
+    """IVF-PQ ADC scoring (DESIGN.md §10) with the QUERY rows sharded:
+    every operand — per-query LUTs, candidate codes, candidate ids — is
+    query-row-indexed, so each shard runs the whole registry-dispatched
+    op on its rows with zero merge collective.  Exact per row; accepts
+    ragged Q (pad ids with -1 = the kernel's invalid sentinel)."""
+    from repro.kernels import dispatch
+
+    c = mesh.shape[axis]
+    lp, Q = _pad_rows(qlut, c, value=0)
+    cp, _ = _pad_rows(codes, c, value=0)
+    ip, _ = _pad_rows(cand_ids, c, value=-1)
+
+    def local(lut_chunk, code_chunk, id_chunk):
+        return dispatch.adc_topk(lut_chunk, code_chunk, id_chunk, k,
+                                 path=path, policy=policy)
+
+    fn = _shard_map(local, mesh=mesh, in_specs=(P(axis),) * 3,
+                    out_specs=(P(axis),) * 2, check_vma=False)
+    vals, pos = fn(lp, cp, ip)
+    return vals[:Q], pos[:Q]
+
+
 def _row_sharded(local, mesh: Mesh, axis: str, n_rep: int, n_out: int):
     """shard_map helper: first arg row-sharded, ``n_rep`` replicated params,
     ``n_out`` row-sharded outputs."""

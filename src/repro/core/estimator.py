@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import ann as _ann
 from repro.core import cluster as _cluster
 from repro.core import gmm as _gmm
 from repro.core import gnb as _gnb
@@ -693,12 +694,108 @@ class RandomForestEstimator(_EstimatorBase):
         return jnp.zeros((0, self.params.n_class), jnp.int32)  # votes
 
 
+class ANNKNNEstimator(_EstimatorBase):
+    """IVF-PQ approximate kNN (core/ann.py, DESIGN.md §10); hot path =
+    ("ann", "adc_topk") plus the shared ("knn", "distance_topk") coarse
+    probe over the cell centroids.  ``nprobe`` is the recall-vs-latency
+    knob.  aux = global neighbour ids (B, k) int32, -1 where a query's
+    probed cells held fewer than k members."""
+
+    algorithm = "ann"
+
+    def __init__(self, k: int = 4, *, n_class: Optional[int] = None,
+                 n_cells: Optional[int] = None, nprobe: int = 4,
+                 pq_m: int = 4, n_codes: int = 256, refine: int = 0,
+                 train_iters: int = 25,
+                 policy: Optional[PrecisionPolicy] = None,
+                 path: Optional[str] = None):
+        if policy is not None and policy.quantized:
+            raise NotImplementedError(
+                "ANN has no int8 policy tier: the PQ codes ARE the int8 "
+                "representation and the ADC LUT is already integer "
+                "(DESIGN.md §10) — serve with policy fp32/bf16")
+        super().__init__(policy=policy, path=path)
+        self.k = int(k)
+        self.n_class = n_class
+        self.n_cells = n_cells
+        self.nprobe = int(nprobe)
+        self.pq_m = int(pq_m)
+        self.n_codes = int(n_codes)
+        # refine > 0: exact re-rank of the ADC top-``refine`` survivors
+        # (0 = pure ADC ranking, the oracle the parity tests pin)
+        self.refine = int(refine)
+        self.train_iters = int(train_iters)
+
+    def fit(self, X, y=None) -> "ANNKNNEstimator":
+        assert y is not None, "ANN kNN is supervised"
+        import numpy as np
+        y = jnp.asarray(y, jnp.int32)
+        n_class = self.n_class or int(jnp.max(y)) + 1
+        N, d = np.asarray(X).shape
+        # sqrt(N) cells is the IVF rule of thumb; clamp so tiny
+        # conformance problems still index (and every cell can be real)
+        n_cells = min(self.n_cells or max(1, min(64, round(N ** 0.5))), N)
+        m = max(1, min(self.pq_m, d))
+        n_codes = max(1, min(self.n_codes, N, 256))
+        self._params = _ann.fit_ivf_pq(
+            X, y, n_cells=n_cells, m=m, n_codes=n_codes, n_class=n_class,
+            max_iters=self.train_iters, cast=self._cast)
+        return self._finalize_fit(X)
+
+    def _fit_sharded(self, X, y, mesh, axis) -> None:
+        # the index is replicated: inverted lists address GLOBAL row ids,
+        # so there is no row partition of the fit to distribute — the
+        # sharded serving win is the query partition (_sharded_fn)
+        self.fit(X, y)
+
+    def predict_batch_fn(self) -> Callable:
+        k, nprobe, refine = self.k, self.nprobe, self.refine
+        policy, path = self.policy, self.path
+        # n_class is static shape metadata (vote array length) — close
+        # over it so jitted callers can pass params as traced buffers
+        n_class = self.params.n_class
+
+        def fn(params: _ann.ANNParams, X):
+            X = policy.cast(X) if policy else X
+            p = _ann.ANNParams(centroids=params.centroids,
+                               cell_ids=params.cell_ids,
+                               codebooks=params.codebooks,
+                               codes=params.codes, refs=params.refs,
+                               labels=params.labels, n_class=n_class)
+            return _ann.ann_classify_batch(p, X, k, nprobe, refine=refine,
+                                           policy=policy, path=path)
+
+        return fn
+
+    def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
+        if strategy == "reference":
+            raise NotImplementedError(
+                "ANN has no model-partition serving arm: the IVF inverted "
+                "lists address global row ids, which a reference shard "
+                "would renumber (DESIGN.md §10) — serve with "
+                "strategy='query' or 'single'")
+        return _cluster.row_sharded_batch_fn(self.predict_batch_fn(),
+                                             mesh, axis)
+
+    def serve_cost_shape(self) -> Dict[str, int]:
+        C, cap = self.params.cell_ids.shape
+        m, n_codes, _ = self.params.codebooks.shape
+        L = min(self.nprobe, int(C)) * int(cap)
+        return {"C": int(C), "d": int(self.params.centroids.shape[1]),
+                "m": int(m), "n_codes": int(n_codes), "L": L, "k": self.k,
+                "R": min(self.refine, L) if self.refine > 0 else 0}
+
+    def empty_aux(self) -> jnp.ndarray:
+        return jnp.zeros((0, self.k), jnp.int32)      # neighbour ids
+
+
 ESTIMATORS: Dict[str, type] = {
     "knn": KNNEstimator,
     "kmeans": KMeansEstimator,
     "gnb": GNBEstimator,
     "gmm": GMMEstimator,
     "rf": RandomForestEstimator,
+    "ann": ANNKNNEstimator,
 }
 
 
@@ -715,7 +812,8 @@ def make_estimator(algorithm: str, **kwargs) -> Estimator:
 # each algorithm's "how many groups" constructor kwarg — the one place the
 # naming difference exists, so drivers/benchmarks/tests never re-map it
 _GROUP_KWARG = {"kmeans": "n_clusters", "gmm": "n_components",
-                "knn": "n_class", "gnb": "n_class", "rf": "n_class"}
+                "knn": "n_class", "gnb": "n_class", "rf": "n_class",
+                "ann": "n_class"}
 
 
 def make_fitted(algorithm: str, X, y=None, *,

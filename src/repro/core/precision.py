@@ -269,6 +269,24 @@ def serve_census(algorithm: str, shape: Dict[str, int] = None) -> Census:
     if algorithm == "rf":
         return census_rf(n_trees=s.get("T", 48), depth=s.get("depth", 7),
                          n_class=s.get("C", 10))
+    if algorithm == "ann":
+        # IVF-PQ serve (DESIGN.md §10): coarse probe = a kNN distance
+        # pass over the C cell centroids; LUT build = m*n_codes subspace
+        # distances of width dsub; ADC scoring = m integer table lookups
+        # + adds per candidate (gather-bound -> ielem, the same
+        # FP-backend-invariant class as RF traversal) + the top-k scan
+        C, d = s.get("C", 64), s.get("d", 21)
+        m, n_codes = s.get("m", 4), s.get("n_codes", 256)
+        L, k = s.get("L", 512), s.get("k", 4)
+        R = s.get("R", 0)          # exact refine rows per query (0 = off)
+        dsub = max(1, -(-d // m))
+        lut = m * n_codes * dsub
+        return Census(
+            "ann_serve",
+            parallel={"add": 2 * C * d + 2 * lut + L * m + 2 * R * d,
+                      "mul": C * d + lut + R * d, "cmp": C * k + L + R,
+                      "elem": C * d + lut + R * d, "ielem": 2 * L * m},
+            sequential={"cmp": k, "elem": k})
     raise KeyError(f"no serve census for {algorithm!r}")
 
 
@@ -289,6 +307,12 @@ def merge_elems(algorithm: str, shape: Dict[str, int] = None,
         return float(s.get("K", 2))            # gathered (B, K) joint
     if algorithm == "rf":
         return float(s.get("C", 10) + 1)       # psum'd vote histogram
+    if algorithm == "ann":
+        # hypothetical cell-partition merge would move kNN-style (value,
+        # position) k-pairs; ANN registers no "reference" arm, so
+        # dispatch.resolve_strategy filters this candidate back out
+        rounds = max(1, (n_shards - 1).bit_length())
+        return 2.0 * s.get("k", 4) * rounds
     raise KeyError(f"no merge model for {algorithm!r}")
 
 

@@ -8,9 +8,14 @@ no downloads). Shapes/statistics mirror the real ones:
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
+
+# Default row-chunk for the streaming generator: 64k rows of d=21 fp64
+# noise is ~11 MB of transient — million-row reference sets never hold
+# an (N, d) fp64 intermediate.
+_CHUNK = 1 << 16
 
 
 def _blobs(rng, n: int, d: int, n_class: int, spread: float, scale: float):
@@ -20,12 +25,75 @@ def _blobs(rng, n: int, d: int, n_class: int, spread: float, scale: float):
     return X.astype(np.float32), y.astype(np.int32)
 
 
+def _separated_centers(rng, n_class: int, d: int, spread: float,
+                       scale: float, max_tries: int = 64):
+    """Resample blob centers until every pair is >= spread*scale apart.
+    At low d a single normal draw regularly lands two centers inside one
+    noise radius, which makes "well-separated" fits degenerate."""
+    min_sep = spread * scale
+    centers = None
+    for _ in range(max_tries):
+        centers = rng.normal(size=(n_class, d)) * spread
+        diff = centers[:, None, :] - centers[None, :, :]
+        dist = np.sqrt((diff * diff).sum(-1))
+        np.fill_diagonal(dist, np.inf)
+        if n_class < 2 or dist.min() >= min_sep:
+            return centers
+    return centers  # pathological spread/scale combo: keep the last draw
+
+
+def _blob_stream(rng, n: int, d: int, n_class: int, spread: float,
+                 scale: float, chunk: int):
+    centers = _separated_centers(rng, n_class, d, spread, scale)
+    y = rng.integers(0, n_class, size=n).astype(np.int32)
+    # Pin the first n_class rows to one row per blob: kmeans_fit seeds its
+    # centroids from the leading k rows (paper §4.4.2), so this guarantees
+    # every blob contributes an init centroid for any seed.
+    y[:min(n, n_class)] = np.arange(min(n, n_class), dtype=np.int32)
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        noise = rng.normal(size=(hi - lo, d)) * scale
+        yield (centers[y[lo:hi]] + noise).astype(np.float32), y[lo:hi]
+
+
 def class_blobs(n: int = 400, d: int = 21, n_class: int = 3, seed: int = 0,
-                spread: float = 3.0) -> Tuple[np.ndarray, np.ndarray]:
+                spread: float = 3.0, chunk: Optional[int] = None,
+                legacy_seed: Optional[int] = None,
+                ) -> Tuple[np.ndarray, np.ndarray]:
     """Well-separated Gaussian blobs — the generic classification problem
-    the estimator serving sweep and the Non-Neural serve CLI share."""
-    return _blobs(np.random.default_rng(seed), n, d, n_class,
-                  spread=spread, scale=1.0)
+    the estimator serving sweep and the Non-Neural serve CLI share.
+
+    Centers are resampled until pairwise separation >= spread*scale and the
+    leading n_class rows are pinned one-per-blob so K-Means' first-k-rows
+    init never collapses (PR 5 documented seed=0 fitting two centroids into
+    one blob).  ``legacy_seed=`` reproduces the pre-fix bytes exactly for
+    committed BENCH entries.  Noise is drawn in ``chunk``-row blocks; the
+    numpy Generator stream is element-sequential, so any chunk size yields
+    bit-identical output (see class_blobs_stream for the incremental form).
+    """
+    if legacy_seed is not None:
+        return _blobs(np.random.default_rng(legacy_seed), n, d, n_class,
+                      spread=spread, scale=1.0)
+    X = np.empty((n, d), np.float32)
+    y = np.empty((n,), np.int32)
+    lo = 0
+    for Xc, yc in class_blobs_stream(n, d=d, n_class=n_class, seed=seed,
+                                     spread=spread, chunk=chunk or _CHUNK):
+        X[lo:lo + len(yc)] = Xc
+        y[lo:lo + len(yc)] = yc
+        lo += len(yc)
+    return X, y
+
+
+def class_blobs_stream(n: int, d: int = 21, n_class: int = 3, seed: int = 0,
+                       spread: float = 3.0, chunk: int = _CHUNK,
+                       ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Chunked generator form of class_blobs: yields (X_chunk, y_chunk)
+    blocks of at most ``chunk`` rows, never materializing an (n, d) fp64
+    intermediate.  Concatenating the chunks equals the monolithic call
+    bit-for-bit for any chunk size."""
+    yield from _blob_stream(np.random.default_rng(seed), n, d, n_class,
+                            spread, 1.0, chunk)
 
 
 def mnist_like(n: int = 2000, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:

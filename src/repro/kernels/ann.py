@@ -1,0 +1,235 @@
+"""IVF-PQ asymmetric-distance (ADC) Pallas kernel — the approximate-kNN
+scoring hot path (DESIGN.md §10).
+
+Exact kNN's serve cost is linear in the reference set; the ANN estimator
+(core/ann.py) caps it by probing ``nprobe`` IVF cells and scoring only
+their members against per-subspace product-quantization codebooks.  The
+scoring primitive is ADC: each query builds ONE small integer lookup
+table (its distance to all ``n_codes`` codebook entries per subspace),
+then every candidate's distance is ``m`` table lookups and adds — no
+feature arithmetic at all.  This is the paper's L1-resident ``e``-array
+discipline applied to a table instead of a distance row: the (Q,
+m*n_codes) LUT stays VMEM-resident while int8 candidate codes stream
+through in blocks, exactly how PULP-NN keeps its int8 weight LUTs in
+per-cluster scratchpad.
+
+The LUT is integer by construction (core/ann.py::build_query_luts
+quantizes the fp32 subspace tables onto a shared per-query 0..255 step,
+a rank-preserving affine map), so candidate distances are bounded ints:
+``dist <= m*255``, with ``adc_dmax(m) = m*255 + 1`` the sentinel for
+invalid (ragged-cell padding) candidates.  Bounded integer distances buy
+the same two wins as kernels/quantized.py:
+
+  * a distance and its lane pack into ONE unique int32 key
+    (``dist * bl + lane``), so each selection pass is a masked min —
+    no tie-break machinery — while ties still resolve to the smallest
+    global candidate position, bit-equal to ``ref_adc_topk``'s
+    ``lax.top_k`` oracle (the acceptance bar for this kernel);
+  * the sentinel lives in VALUE space, not key space, so queries whose
+    probed cells hold fewer than k real members produce exactly the
+    oracle's DMAX-filled tail (smallest invalid positions first).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IMAX = jnp.iinfo(jnp.int32).max
+_COL_MULT = 8                  # candidate-block multiple (f32/int32 sublane)
+_QSTEPS = 255                  # LUT values live on the 0..255 integer step
+_VMEM_BUDGET = 16 * 2 ** 20
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def adc_dmax(m: int) -> int:
+    """Invalid-candidate sentinel: one past the largest reachable ADC
+    distance (``m`` subspaces x 255 steps)."""
+    return m * _QSTEPS + 1
+
+
+def packed_cols_limit(m: int) -> int:
+    """Largest candidate block ``bl`` whose packed key ``dist * bl +
+    lane`` fits int32 (dist <= adc_dmax(m))."""
+    return (2 ** 31 - 1) // (adc_dmax(m) + 1)
+
+
+def adc_working_set_bytes(bl: int, q: int, m: int, n_codes: int,
+                          k: int) -> int:
+    """VMEM working set of one ADC grid step: the resident (Q, m*n_codes)
+    int32 LUT, double-buffered int8 code and int32 id tiles, the (Q, bl)
+    key tile, and the (Q, k) x4 selection scratch + merge candidates +
+    outputs."""
+    return q * m * n_codes * 4 + 2 * (q * bl * m) + 2 * (q * bl * 4) \
+        + q * bl * 4 + 4 * q * k * 4 + 2 * q * 2 * k * 4 + 2 * q * k * 4
+
+
+def adc_block_cols(L: int, q: int, m: int, n_codes: int, k: int,
+                   budget: int = _VMEM_BUDGET) -> int:
+    """Largest multiple-of-8 candidate block under the VMEM budget and
+    the int32 key-packing bound."""
+    limit = min(packed_cols_limit(m), max(L, _COL_MULT))
+    best = _COL_MULT
+    bl = _COL_MULT
+    while bl <= limit:
+        if adc_working_set_bytes(bl, q, m, n_codes, k) <= budget:
+            best = bl
+        bl *= 2
+    return best
+
+
+def _pad_cols(x, mult: int, value=0):
+    pad = (-x.shape[1]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _pad_rows(x, mult: int, value=0):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[0] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _adc_topk_kernel(lut_ref, codes_ref, ids_ref, vals_ref, idx_ref,
+                     acc_v, acc_i, tile_v, tile_i, *, k: int, bl: int,
+                     m: int, n_codes: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, _IMAX)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    # ADC hot loop: m LUT gathers + adds per candidate.  Codes are stored
+    # int8 as (code - 128); the +128 restore and the per-subspace LUT row
+    # offset fold into one gather index.
+    codes = codes_ref[...].astype(jnp.int32) + 128      # (Q, bl*m) 0..255
+    q = codes.shape[0]
+    sub = jax.lax.broadcasted_iota(jnp.int32, (q, bl * m), 1) % m
+    gathered = jnp.take_along_axis(lut_ref[...], codes + sub * n_codes,
+                                   axis=1)              # (Q, bl*m)
+    dist = jnp.sum(gathered.reshape(q, bl, m), axis=2)  # (Q, bl)
+
+    # invalid candidates (ragged-cell padding, id < 0) take the DMAX
+    # sentinel in VALUE space so short candidate lists stay bit-equal to
+    # the dense oracle (its tail is the same DMAX entries)
+    dist = jnp.where(ids_ref[...] < 0, adc_dmax(m), dist)
+
+    # pack (dist, lane) into one int32 key — unique by construction, so
+    # each selection pass is a masked min with no tie-break machinery
+    lane = jax.lax.broadcasted_iota(jnp.int32, (q, bl), 1)
+    key = dist * bl + lane
+
+    def tile_pass(j, carry):
+        kk, = carry
+        mn = jnp.min(kk, axis=1)                        # (Q,)
+        tile_v[:, j] = mn // bl                         # ADC distance
+        tile_i[:, j] = i * bl + (mn % bl)               # global cand pos
+        return (jnp.where(kk == mn[:, None], _IMAX, kk),)
+
+    jax.lax.fori_loop(0, k, tile_pass, (key,))
+
+    # merge two sorted k-lists (running accumulator, tile top-k); columns
+    # ordered accumulator-first and ascending-position within each list,
+    # so "first position attaining the min" = smallest global candidate
+    # position — the same stable rule as lax.top_k (kernels/quantized.py)
+    width = 2 * k
+    cand_v = jnp.concatenate([acc_v[...], tile_v[...]], axis=1)
+    cand_i = jnp.concatenate([acc_i[...], tile_i[...]], axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, width), 1)
+
+    def merge_pass(j, carry):
+        cv, = carry
+        mn = jnp.min(cv, axis=1)
+        first = jnp.min(jnp.where(cv == mn[:, None], cols, width), axis=1)
+        sel = jnp.sum(jnp.where(cols == first[:, None], cand_i, 0), axis=1)
+        acc_v[:, j] = mn
+        acc_i[:, j] = sel
+        return (jnp.where(cols == first[:, None], _IMAX, cv),)
+
+    jax.lax.fori_loop(0, k, merge_pass, (cand_v,))
+
+    vals_ref[...] = acc_v[...]
+    idx_ref[...] = acc_i[...]
+
+
+def _adc_topk_call(lut, codes_flat, ids, k: int, *, bl: int, m: int,
+                   n_codes: int, interpret: bool):
+    Q, Lp = ids.shape
+    kernel = functools.partial(_adc_topk_kernel, k=k, bl=bl, m=m,
+                               n_codes=n_codes)
+    return pl.pallas_call(
+        kernel,
+        grid=(Lp // bl,),
+        in_specs=[
+            pl.BlockSpec((Q, m * n_codes), lambda i: (0, 0)),  # resident LUT
+            pl.BlockSpec((Q, bl * m), lambda i: (0, i)),       # streams, int8
+            pl.BlockSpec((Q, bl), lambda i: (0, i)),           # streams, ids
+        ],
+        out_specs=(pl.BlockSpec((Q, k), lambda i: (0, 0)),
+                   pl.BlockSpec((Q, k), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Q, k), jnp.int32),
+                   jax.ShapeDtypeStruct((Q, k), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((Q, k), jnp.int32),
+                        pltpu.VMEM((Q, k), jnp.int32),
+                        pltpu.VMEM((Q, k), jnp.int32),
+                        pltpu.VMEM((Q, k), jnp.int32)],
+        interpret=interpret,
+    )(lut, codes_flat, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bl", "interpret"))
+def adc_topk(qlut, codes, cand_ids, k: int, *, bl: int | None = None,
+             interpret: bool | None = None):
+    """Per-query integer LUTs (Q, m*n_codes) int32, candidate PQ codes
+    (Q, L, m) int8 (stored code-128), candidate ids (Q, L) int32 (< 0 =
+    invalid) -> (ADC distances (Q, k) int32, candidate POSITIONS (Q, k)
+    int32 into the L axis), ascending, smallest-position ties — bit-equal
+    to ``ref_adc_topk``."""
+    Q, L, m = codes.shape
+    n_codes = qlut.shape[1] // m
+    assert qlut.shape == (Q, m * n_codes), (qlut.shape, codes.shape)
+    assert cand_ids.shape == (Q, L), (cand_ids.shape, codes.shape)
+    assert codes.dtype == jnp.int8, codes.dtype
+    assert 1 <= k <= L, (k, L)
+    if bl is None:
+        bl = adc_block_cols(L, max(Q, 8), m, n_codes, k)
+    bl = min(bl, packed_cols_limit(m))
+    bl = max(_COL_MULT, (min(bl, max(L, _COL_MULT)) // _COL_MULT)
+             * _COL_MULT)
+    assert (adc_dmax(m) + 1) * bl <= 2 ** 31 - 1, (m, bl)  # key cannot wrap
+    interpret = _on_cpu() if interpret is None else interpret
+    lut = _pad_rows(jnp.asarray(qlut, jnp.int32), 8)
+    ids = _pad_rows(_pad_cols(cand_ids, bl, value=-1), 8, value=-1)
+    cf = _pad_rows(_pad_cols(codes, bl).reshape(codes.shape[0], -1), 8)
+    vals, pos = _adc_topk_call(lut, cf, ids, k, bl=bl, m=m,
+                               n_codes=n_codes, interpret=interpret)
+    return vals[:Q], pos[:Q]
+
+
+def ref_adc_topk(qlut, codes, cand_ids, k: int):
+    """Pure-jnp oracle: dense integer ADC over all L candidates, invalid
+    entries at the DMAX sentinel, smallest-position ties (``lax.top_k``
+    on the negated distances)."""
+    Q, L, m = codes.shape
+    n_codes = qlut.shape[1] // m
+    idx = codes.astype(jnp.int32) + 128 \
+        + jnp.arange(m, dtype=jnp.int32)[None, None, :] * n_codes
+    gathered = jnp.take_along_axis(jnp.asarray(qlut, jnp.int32),
+                                   idx.reshape(Q, L * m), axis=1)
+    dist = jnp.sum(gathered.reshape(Q, L, m), axis=2)
+    dist = jnp.where(cand_ids < 0, adc_dmax(m), dist)
+    nv, ni = jax.lax.top_k(-dist, k)
+    return -nv, ni

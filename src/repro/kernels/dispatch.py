@@ -62,9 +62,12 @@ VMEM_BUDGET = ops._VMEM_BUDGET
 # benchmark block-model (benchmarks/kernel_blocks.py) imports it from here
 fused_topk_working_set_bytes = ops.fused_topk_working_set_bytes
 
-# algorithm -> census key in core.precision.PAPER_CENSUSES
+# algorithm -> census key in core.precision.PAPER_CENSUSES ("ann" maps to
+# the paper's kNN census: the probe+ADC structure has no paper analogue,
+# and serve-side costing uses precision.serve_census("ann") instead)
 _CENSUS_KEY = {"knn": "knn", "kmeans": "kmeans_iter", "gnb": "gnb",
-               "gmm": "gmm_iter", "rf": "rf", "lr": "lr", "svm": "svm"}
+               "gmm": "gmm_iter", "rf": "rf", "lr": "lr", "svm": "svm",
+               "ann": "knn"}
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +461,49 @@ def gmm_responsibilities(mu, var, log_pi, X, *,
 
 
 # ---------------------------------------------------------------------------
+# ANN — IVF-PQ asymmetric-distance scoring (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@register("ann", "adc_topk", "fused")
+def _ann_fused(qlut, codes, cand_ids, k, *, bl=None, interpret=None):
+    from repro.kernels import ann as annk
+    return annk.adc_topk(qlut, codes, cand_ids, k, bl=bl,
+                         interpret=interpret)
+
+
+@register("ann", "adc_topk", "ref")
+def _ann_ref(qlut, codes, cand_ids, k, *, bl=None, interpret=None):
+    from repro.kernels import ann as annk
+    return annk.ref_adc_topk(qlut, codes, cand_ids, k)
+
+
+@selector("ann", "adc_topk")
+def _ann_select(*, Q, L, m, n_codes, k, policy=None, budget=VMEM_BUDGET):
+    # the streaming kernel keeps the (Q, m*n_codes) LUT resident; if even
+    # the minimum bl=8 candidate block overflows VMEM (huge Q*m*n_codes),
+    # fall back to the dense oracle
+    from repro.kernels import ann as annk
+    if annk.adc_working_set_bytes(8, max(Q, 8), m, n_codes, k) <= budget:
+        return "fused"
+    return "ref"
+
+
+def adc_topk(qlut, codes, cand_ids, k: int, *,
+             policy: Optional[PrecisionPolicy] = None,
+             path: Optional[str] = None, bl: Optional[int] = None,
+             interpret: Optional[bool] = None):
+    """Per-query integer LUTs (Q, m*n_codes), candidate PQ codes
+    (Q, L, m) int8 + ids (Q, L) -> (ADC distances (Q, k) int32,
+    candidate positions (Q, k)).  Integer end to end: no policy cast
+    (the int8 policy has no ANN tier — core/ann.py refuses it)."""
+    Q, L, m = codes.shape
+    kp = resolve("ann", "adc_topk", path=path, policy=policy,
+                 Q=Q, L=L, m=m, n_codes=qlut.shape[1] // max(m, 1), k=k)
+    return kp.fn(qlut, codes, cand_ids, k, bl=bl, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # RF — batched forest vote (Fig. 8 Independent-Tasks)
 # ---------------------------------------------------------------------------
 
@@ -604,6 +650,12 @@ def resolve_strategy(algorithm: str, *, bucket: int, n_shards: int,
     costs = precision.serve_strategy_costs(
         algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
         backend=backend, quantized=quantized)
+    # the model only costs strategies the algorithm can execute: drop
+    # candidates with no registered sharded arm (ANN has no "reference"
+    # partition — its inverted lists address global row ids)
+    for cand in [s for s in costs if s != "single"]:
+        if not any(a == algorithm and st == cand for a, _, st in _SHARDED):
+            del costs[cand]
     return precision.pick_strategy(costs)
 
 
@@ -625,6 +677,16 @@ def distance_topk_query_sharded(a, c, k, *, mesh, axis="data", policy=None,
     from repro.core import cluster
     return cluster.distance_topk_query_shardmap(a, c, k, mesh, axis,
                                                 policy=policy, path=path)
+
+
+@register_sharded("ann", "adc_topk", "query")
+def adc_topk_query_sharded(qlut, codes, cand_ids, k, *, mesh, axis="data",
+                           policy=None, path=None):
+    """Pure query partition: every ADC operand is query-row-indexed, so
+    shards run the whole op on their rows with NO merge collective."""
+    from repro.core import cluster
+    return cluster.adc_topk_query_shardmap(qlut, codes, cand_ids, k, mesh,
+                                           axis, policy=policy, path=path)
 
 
 @register_sharded("kmeans", "distance_argmin", "query")

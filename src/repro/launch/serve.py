@@ -90,8 +90,16 @@ def serve_nonneural(args):
         from repro.launch.mesh import _mk
         mesh = _mk((args.mesh,), ("data",))
 
+    extra = {}
+    if args.algo == "ann":
+        extra["nprobe"] = args.nprobe
+        extra["refine"] = args.refine
+        if args.cells is not None:
+            extra["n_cells"] = args.cells
+        if args.pq_m is not None:
+            extra["pq_m"] = args.pq_m
     est = make_fitted(args.algo, X, y, n_groups=n_class,
-                      policy=get_policy(args.policy), mesh=mesh)
+                      policy=get_policy(args.policy), mesh=mesh, **extra)
     engine = NonNeuralServeEngine(est, max_batch=args.batch, mesh=mesh,
                                   policy=args.policy,
                                   strategy=args.strategy)
@@ -114,7 +122,7 @@ def serve_nonneural(args):
     jax.block_until_ready(result.classes)
     dt = time.time() - t0
     acc = float(jnp.mean(result.classes == jnp.asarray(yq))) \
-        if args.algo in ("knn", "gnb", "rf") else float("nan")
+        if args.algo in ("knn", "ann", "gnb", "rf") else float("nan")
     print(f"[serve] algo={args.algo} policy={args.policy} "
           f"shards={engine.n_shards} "
           f"served {args.requests} queries in {dt:.3f}s "
@@ -161,9 +169,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
     ap.add_argument("--algo", default="lm",
-                    choices=["lm", "knn", "kmeans", "gnb", "gmm", "rf"],
+                    choices=["lm", "knn", "ann", "kmeans", "gnb", "gmm",
+                             "rf"],
                     help="lm = transformer serving; otherwise a Non-Neural "
-                         "estimator through NonNeuralServeEngine")
+                         "estimator through NonNeuralServeEngine (ann = "
+                         "IVF+PQ approximate kNN, DESIGN.md §10)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -200,6 +210,17 @@ def main(argv=None):
                     help="--stream per-request SLO in drain ticks")
     ap.add_argument("--seed", type=int, default=0,
                     help="--stream arrival-trace rng seed")
+    ap.add_argument("--nprobe", type=int, default=4,
+                    help="--algo ann: IVF cells probed per query (more = "
+                         "higher recall, more ADC work)")
+    ap.add_argument("--cells", type=int, default=None,
+                    help="--algo ann: IVF cell count (default ~sqrt(N), "
+                         "capped at 64)")
+    ap.add_argument("--pq-m", type=int, default=None,
+                    help="--algo ann: PQ subspace count")
+    ap.add_argument("--refine", type=int, default=0,
+                    help="--algo ann: exact re-rank of the ADC top-R "
+                         "survivors (0 = pure ADC ranking)")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--train-size", type=int, default=400)
     ap.add_argument("--dim", type=int, default=21)

@@ -1,0 +1,284 @@
+"""ANN (IVF + PQ) suite: the ADC LUT kernel must be bit-equal to its jnp
+oracle (ties included), the estimator must degrade gracefully at the nprobe
+extremes (1 and all-cells == exact PQ scoring), the int8 policy tier must
+refuse (the PQ codes ARE the int8 representation), and the class_blobs
+degeneracy fix + chunked generator must be pinned by regression tests.
+"""
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core import ann as A
+from repro.core import estimator as E
+from repro.kernels import ann as AK
+from repro.kernels import dispatch
+from repro.kernels.dispatch import get_policy
+
+
+def _problem(n=300, d=13, n_class=3, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_class, d)) * 3.0
+    y = rng.integers(0, n_class, size=n).astype(np.int32)
+    y[:n_class] = np.arange(n_class)
+    X = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return X, y
+
+
+def _adc_case(seed, Q=5, L=37, m=4, n_codes=16, lut_hi=256, id_hi=50):
+    rng = np.random.default_rng(seed)
+    qlut = jnp.asarray(rng.integers(0, lut_hi, size=(Q, m * n_codes)),
+                       jnp.int32)
+    codes = jnp.asarray(rng.integers(0, n_codes, size=(Q, L, m)) - 128,
+                        jnp.int8)
+    ids = jnp.asarray(rng.integers(-1, id_hi, size=(Q, L)), jnp.int32)
+    return qlut, codes, ids
+
+
+# ------------------------------------------------------ ADC kernel parity
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_adc_topk_bit_equal_to_ref(seed, k):
+    qlut, codes, ids = _adc_case(seed)
+    fv, fp = AK.adc_topk(qlut, codes, ids, k)
+    rv, rp = AK.ref_adc_topk(qlut, codes, ids, k)
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(rp))
+
+
+@pytest.mark.parametrize("bl", [8, 16])
+def test_adc_topk_ties_across_block_boundaries(bl):
+    """A constant LUT makes EVERY candidate tie; the packed-key selection
+    must still return the k smallest global positions, bit-equal to
+    lax.top_k — across tile boundaries, not just within one block."""
+    Q, L, m, n_codes, k = 3, 5 * bl + 3, 4, 8, 9   # k spans > 1 block
+    qlut = jnp.full((Q, m * n_codes), 7, jnp.int32)
+    codes = jnp.zeros((Q, L, m), jnp.int8)
+    ids = jnp.zeros((Q, L), jnp.int32)
+    fv, fp = AK.adc_topk(qlut, codes, ids, k, bl=bl)
+    rv, rp = AK.ref_adc_topk(qlut, codes, ids, k)
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(fp[0]), np.arange(k))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(rv))
+
+
+def test_adc_topk_heavy_ties_random():
+    """Few distinct LUT values -> dense tie structure at every rank."""
+    qlut, codes, ids = _adc_case(3, lut_hi=3)
+    fv, fp = AK.adc_topk(qlut, codes, ids, 8, bl=8)
+    rv, rp = AK.ref_adc_topk(qlut, codes, ids, 8)
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(rp))
+
+
+def test_adc_topk_ragged_inverted_lists():
+    """-1 candidate ids (IVF pad slots) must sink to DMAX and never beat a
+    real candidate; rows that are ALL padding must still return k slots."""
+    qlut, codes, ids = _adc_case(4, Q=4, L=20)
+    ids = ids.at[0, 5:].set(-1)          # short list
+    ids = ids.at[1, :].set(-1)           # empty list
+    fv, fp = AK.adc_topk(qlut, codes, ids, 6)
+    rv, rp = AK.ref_adc_topk(qlut, codes, ids, 6)
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(rp))
+    assert np.all(np.asarray(fv)[1] == AK.adc_dmax(4))
+
+
+def test_adc_topk_dispatch_arms_agree():
+    """Registry-selected arm == forced ref oracle through dispatch."""
+    qlut, codes, ids = _adc_case(5)
+    assert dispatch.registered()[("ann", "adc_topk")] == ("fused", "ref")
+    av, ap = dispatch.adc_topk(qlut, codes, ids, 4)
+    rv, rp = dispatch.adc_topk(qlut, codes, ids, 4, path="ref")
+    np.testing.assert_array_equal(np.asarray(av), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ap), np.asarray(rp))
+
+
+def test_adc_dmax_and_key_budget():
+    """The packed key dist*bl + lane must fit int32: DMAX bounds the value
+    space and packed_cols_limit bounds the block length."""
+    assert AK.adc_dmax(4) == 4 * 255 + 1
+    assert (AK.adc_dmax(4) + 1) * AK.packed_cols_limit(4) <= 2**31 - 1
+    assert AK.packed_cols_limit(4) >= 8
+
+
+# ------------------------------------------------------ estimator contract
+
+
+def test_ann_nprobe_extremes_and_exact_pq_recall():
+    """nprobe=n_cells must recover EXACTLY the dense PQ scoring (recall
+    1.0 vs scoring every code with the same LUT); nprobe=1 still returns
+    valid neighbors from the probed cell."""
+    X, y = _problem()
+    est = E.make_fitted("ann", X, y, n_groups=3, n_cells=8, nprobe=8)
+    p = est.params
+    Q = X[:16]
+    _, nbr = est.predict_batch(Q)
+    # dense PQ oracle: score ALL N codes with the per-query LUT
+    qlut = A.build_query_luts(jnp.asarray(Q), p.codebooks)
+    all_ids = jnp.arange(p.codes.shape[0], dtype=jnp.int32)[None, :]
+    all_ids = jnp.broadcast_to(all_ids, (Q.shape[0], p.codes.shape[0]))
+    all_codes = jnp.broadcast_to(p.codes[None], (Q.shape[0],) +
+                                 p.codes.shape)
+    dv, dp = AK.ref_adc_topk(qlut, all_codes, all_ids, est.k)
+    # dense LUT distances for tie-robust comparison
+    dense = np.asarray(AK.ref_adc_topk(qlut, all_codes, all_ids,
+                                       p.codes.shape[0])[0])
+    order = np.asarray(AK.ref_adc_topk(qlut, all_codes, all_ids,
+                                       p.codes.shape[0])[1])
+    full = np.empty_like(dense)
+    np.put_along_axis(full, order, dense, axis=1)   # dist per global id
+    for i in range(Q.shape[0]):
+        got = np.asarray(nbr)[i]
+        # recall 1.0 up to equal-distance swaps: the returned neighbors'
+        # distance multiset must equal the oracle's top-k distances
+        np.testing.assert_array_equal(np.sort(full[i][got]),
+                                      np.sort(np.asarray(dv)[i]), str(i))
+
+    one = E.make_fitted("ann", X, y, n_groups=3, n_cells=8, nprobe=1)
+    cls1, nbr1 = one.predict_batch(Q)
+    assert np.all((np.asarray(cls1) >= 0) & (np.asarray(cls1) < 3))
+    assert np.asarray(nbr1).shape == (16, one.k)
+
+
+def test_ann_recall_improves_with_nprobe():
+    """Recall@k vs the EXACT (non-PQ) kNN oracle must be monotone-ish in
+    nprobe and hit 1.0-ish when probing everything on easy blobs."""
+    X, y = _problem(n=600)
+    _, exact = dispatch.distance_topk(jnp.asarray(X), jnp.asarray(X[:32]),
+                                      4)
+    exact = np.asarray(exact)
+    recalls = []
+    for nprobe in (1, 4, 16):
+        est = E.make_fitted("ann", X, y, n_groups=3, n_cells=16,
+                            nprobe=nprobe, refine=32)
+        _, nbr = est.predict_batch(X[:32])
+        nbr = np.asarray(nbr)
+        hit = np.mean([len(set(nbr[i]) & set(exact[i])) / 4
+                       for i in range(32)])
+        recalls.append(hit)
+    assert recalls[-1] >= recalls[0]
+    assert recalls[-1] >= 0.9, recalls
+
+
+def test_ann_refine_recovers_exact_neighbors():
+    """With every cell probed and a refine pass, the ANN path must agree
+    with the exact fused kNN oracle on neighbour DISTANCES (equal up to
+    tie swaps) — the refine stage re-ranks ADC survivors exactly."""
+    X, y = _problem(n=500)
+    Q = X[:24]
+    wv, _ = dispatch.distance_topk(jnp.asarray(X), jnp.asarray(Q), 4)
+    est = E.make_fitted("ann", X, y, n_groups=3, n_cells=8, nprobe=8,
+                        refine=128)
+    _, nbr = est.predict_batch(Q)
+    rows = X[np.asarray(nbr)]
+    dist = ((rows - Q[:, None, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.sort(dist, axis=1),
+                               np.sort(np.asarray(wv), axis=1),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ann_int8_policy_refuses():
+    with pytest.raises(NotImplementedError):
+        E.make_estimator("ann", policy=get_policy("int8"))
+
+
+def test_ann_reference_strategy_refuses():
+    from repro.launch.mesh import _mk
+
+    X, y = _problem(n=64)
+    est = E.make_fitted("ann", X, y, n_groups=3)
+    mesh = _mk((1,), ("data",))
+    with pytest.raises(NotImplementedError):
+        est.predict_batch_sharded_fn(mesh, strategy="reference")
+    est.predict_batch_sharded_fn(mesh, strategy="query")   # allowed
+
+
+def test_ann_serve_cost_shape_keys():
+    X, y = _problem(n=128)
+    est = E.make_fitted("ann", X, y, n_groups=3, n_cells=8, nprobe=2)
+    s = est.serve_cost_shape()
+    assert set(s) == {"C", "d", "m", "n_codes", "L", "k", "R"}
+    assert s["C"] == 8 and s["d"] == 13 and s["R"] == 0
+    assert s["L"] == 2 * est.params.cell_ids.shape[1]
+    from repro.core import precision
+    c = precision.serve_census("ann", s)
+    assert precision.predicted_cycles(c, precision.BACKENDS["fpu"]) > 0
+
+
+def test_ann_stream_warmup_covers_buckets():
+    """--stream contract: every bucket the scheduler launches must have
+    been compiled during warmup (no mid-flight compilation stalls)."""
+    from repro.serving import (NonNeuralServeEngine, RequestScheduler,
+                               poisson_trace, replay_trace)
+
+    X, y = _problem(n=400)
+    est = E.make_fitted("ann", X, y, n_groups=3)
+    engine = NonNeuralServeEngine(est, max_batch=16)
+    engine.warmup_buckets(X.shape[1])
+    sched = RequestScheduler(engine, max_wait=2)
+    counts = poisson_trace(3.0, 24, seed=0)
+    ids = replay_trace(sched, X[:128], counts)
+    assert len(ids) == int(counts.sum())
+    assert set(engine.bucket_launches) <= sched.warmed
+
+
+# ------------------------------------------------------ datasets satellites
+
+
+def test_class_blobs_seed0_no_longer_degenerate():
+    """PR 5 documented seed=0/n=720 fitting two K-Means centroids into one
+    blob (init rows y[:3] = [1,1,2]).  The pinned init rows + separated
+    centers must now give one centroid per blob; the old bytes live on
+    behind legacy_seed= and stay degenerate."""
+    from repro.core.kmeans import kmeans_fit
+    from repro.data.datasets import class_blobs
+
+    def centroid_blob_map(X, y):
+        st, _ = kmeans_fit(jnp.asarray(X), 3)
+        means = np.stack([X[y == c].mean(0) for c in range(3)])
+        d2 = ((np.asarray(st.centroids)[:, None] - means[None]) ** 2)
+        return d2.sum(-1).argmin(1)
+
+    X, y = class_blobs(n=720, d=21, n_class=3, seed=0)
+    np.testing.assert_array_equal(np.asarray(y[:3]), [0, 1, 2])
+    assert len(set(centroid_blob_map(X, y).tolist())) == 3
+    # a handful of other seeds, same property
+    for seed in (1, 2, 3):
+        X, y = class_blobs(n=400, d=21, n_class=3, seed=seed)
+        assert len(set(centroid_blob_map(X, y).tolist())) == 3, seed
+    # the legacy path still reproduces the degenerate fit bit-for-bit
+    Xo, yo = class_blobs(n=720, d=21, n_class=3, legacy_seed=0)
+    assert len(set(centroid_blob_map(Xo, yo).tolist())) == 2
+
+
+def test_class_blobs_legacy_seed_reproduces_old_bytes():
+    from repro.data.datasets import _blobs, class_blobs
+
+    want_X, want_y = _blobs(np.random.default_rng(5), 256, 9, 3,
+                            spread=3.0, scale=1.0)
+    got_X, got_y = class_blobs(n=256, d=9, n_class=3, seed=0, legacy_seed=5)
+    assert got_X.tobytes() == want_X.tobytes()
+    assert got_y.tobytes() == want_y.tobytes()
+
+
+def test_class_blobs_chunked_equals_monolithic():
+    from repro.data.datasets import class_blobs, class_blobs_stream
+
+    ref_X, ref_y = class_blobs(n=999, d=7, n_class=4, seed=3, chunk=999)
+    for chunk in (1, 13, 256, 10**6):
+        X, y = class_blobs(n=999, d=7, n_class=4, seed=3, chunk=chunk)
+        assert X.tobytes() == ref_X.tobytes(), chunk
+        assert y.tobytes() == ref_y.tobytes(), chunk
+    parts = list(class_blobs_stream(999, d=7, n_class=4, seed=3, chunk=100))
+    assert max(len(p[1]) for p in parts) <= 100
+    X = np.concatenate([p[0] for p in parts])
+    y = np.concatenate([p[1] for p in parts])
+    assert X.tobytes() == ref_X.tobytes()
+    assert y.tobytes() == ref_y.tobytes()

@@ -70,6 +70,10 @@ def _blobs(n, d, n_class, seed):
 
 
 def _fitted(algo, X, y, policy_name, path):
+    if algo == "ann" and policy_name == "int8":
+        # ANN refuses the int8 policy tier by contract: the PQ codes ARE
+        # the int8 representation (test_ann.py asserts the refusal)
+        pytest.skip("ann has no int8 policy tier")
     return E.make_fitted(algo, X, y, n_groups=int(y.max()) + 1,
                          policy=get_policy(policy_name), path=path)
 
@@ -163,7 +167,7 @@ def test_every_algorithm_covered():
     """The conformance matrix must not silently drop an algorithm when a
     new estimator is registered."""
     assert ALGORITHMS == sorted(E.ESTIMATORS)
-    assert set(ALGORITHMS) == {"knn", "kmeans", "gnb", "gmm", "rf"}
+    assert set(ALGORITHMS) == {"knn", "ann", "kmeans", "gnb", "gmm", "rf"}
 
 
 # ------------------------------------------------- int8 tier bounds
@@ -178,16 +182,17 @@ def test_int8_label_agreement_bound(algo, monkeypatch):
     from repro.data.datasets import class_blobs
     from repro.kernels import dispatch
 
+    if algo == "ann":
+        pytest.skip("ann has no int8 policy tier (codes are already int8)")
     # this test COMPARES arms, so the suite-wide REPRO_BACKEND (the
     # quant CI matrix entry) must not redirect the fp32 baseline — with
     # it set, the bound would vacuously compare quant against quant
     monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
 
-    # seed=1 gives a non-degenerate K-Means fit (one centroid per blob,
-    # min inter-centroid distance ~190).  seed=0 converges with two
-    # centroids 3.8 apart inside one blob — points on that internal
-    # bisector flip under ANY representation change (bf16 included), so
-    # agreement there measures the fit degeneracy, not the quantization.
+    # class_blobs now resamples centers and pins the K-Means init rows
+    # (one per blob), so every seed gives a non-degenerate fit; seed=0's
+    # old two-centroids-in-one-blob pathology lives on behind
+    # legacy_seed= and is pinned by test_ann.py's regression test.
     X, y = class_blobs(n=720, d=21, n_class=3, seed=1)
     Xt, yt, Q = X[:512], y[:512], X[512:]
     fp32 = E.make_fitted(algo, Xt, yt, n_groups=3,
@@ -217,6 +222,8 @@ def test_quant_roundtrip_bounds(algo, monkeypatch):
     integer/static leaves."""
     from repro.kernels import dispatch
 
+    if algo == "ann":
+        pytest.skip("ann has no int8 policy tier (codes are already int8)")
     monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
     X, y = _blobs(96, 9, 3, 5)
     fp32 = E.make_fitted(algo, X, y, n_groups=3)

@@ -153,6 +153,12 @@ STRATEGY_MATRIX = textwrap.dedent("""
                 Q = X[:B]
                 want = single.classify(Q)
                 for strat in ("query", "reference", "auto"):
+                    if algo == "ann" and strat == "reference":
+                        # IVF inverted lists address global row ids -- a
+                        # model partition is refused by contract (the auto
+                        # router filters it out below; test_ann.py pins the
+                        # NotImplementedError)
+                        continue
                     if QUANT and strat == "reference":
                         # forced dynamic-quant arms calibrate their lattice
                         # from the model-side operand; a pinned model
@@ -195,6 +201,15 @@ INT8_STRATEGY = textwrap.dedent("""
 
     mesh = _mk((4,), ("data",))
     for algo in sorted(ESTIMATORS):
+        if algo == "ann":
+            # ANN refuses the int8 policy tier at construction: the PQ
+            # codes ARE the int8 representation (DESIGN.md section 10)
+            try:
+                make_fitted(algo, X, y, n_groups=C,
+                            policy=get_policy("int8"))
+                raise AssertionError("ann + int8 policy must refuse")
+            except NotImplementedError:
+                continue
         est = make_fitted(algo, X, y, n_groups=C, policy=get_policy("int8"))
         want = NonNeuralServeEngine(est, max_batch=16,
                                     policy="int8").classify(X[:19])
@@ -348,6 +363,7 @@ def test_sharded_arm_registry_covers_every_hot_op():
     from repro.kernels import dispatch
 
     assert dispatch.sharded_registered() == (
+        ("ann", "adc_topk", "query"),
         ("gmm", "responsibilities", "query"),
         ("gmm", "responsibilities", "reference"),
         ("gnb", "scores", "query"),
