@@ -27,6 +27,8 @@ BENCH_QUANT = Path(__file__).resolve().parents[1] / \
     "BENCH_quant.json"
 BENCH_ANN = Path(__file__).resolve().parents[1] / \
     "BENCH_ann.json"
+BENCH_TENANTS = Path(__file__).resolve().parents[1] / \
+    "BENCH_tenants.json"
 
 # Required keys per BENCH accumulator: every entry must carry the
 # envelope, every result record the per-kind keys.  The trajectory files
@@ -47,6 +49,8 @@ _RESULT_KEYS = {
               "label_agreement"),
     "ann": ("algorithm", "arm", "bucket", "N", "nprobe", "us_per_query",
             "recall_at_k", "k"),
+    "tenants": ("algorithm", "n_tenants", "resident_frac", "bucket",
+                "us_per_query_grouped", "us_per_query_loop"),
 }
 
 
@@ -210,6 +214,33 @@ def write_ann_entry(results, path: Path = BENCH_ANN) -> dict:
     return _append_entry(results, path, "ann")
 
 
+def write_tenants_entry(results, path: Path = BENCH_TENANTS) -> dict:
+    """Append one multi-tenant grouped-vs-loop sweep (G same-shape fits
+    served through ONE vmapped launch per (group x bucket) cell vs G
+    separate per-model launches, per residency fraction) to
+    BENCH_tenants.json."""
+    return _append_entry(results, path, "tenants")
+
+
+def tenants_table(path: Path = BENCH_TENANTS) -> str:
+    if not path.exists():
+        return "(no BENCH_tenants.json yet — run benchmarks/run.py)"
+    data = load_bench(path, "tenants")
+    lines = ["| when | algo | G | resident | bucket | grouped us/q | "
+             "loop us/q | speedup |",
+             "|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            speed = r["us_per_query_loop"] / max(
+                r["us_per_query_grouped"], 1e-9)
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | "
+                f"{r['n_tenants']} | {r['resident_frac']:.2f} | "
+                f"{r['bucket']} | {r['us_per_query_grouped']:.1f} | "
+                f"{r['us_per_query_loop']:.1f} | {speed:.2f}x |")
+    return "\n".join(lines)
+
+
 def ann_table(path: Path = BENCH_ANN) -> str:
     if not path.exists():
         return "(no BENCH_ann.json yet — run benchmarks/run.py)"
@@ -364,7 +395,17 @@ def main():
                     help="run the IVF-PQ recall@k-vs-latency sweep "
                          "(nprobe knob, exact fused kNN oracle) and "
                          "append an entry to BENCH_ann.json")
+    ap.add_argument("--tenants", action="store_true",
+                    help="run the multi-tenant grouped-vs-loop sweep "
+                         "(ModelStore + vmapped group launch per tenant "
+                         "count) and append an entry to BENCH_tenants.json")
     args = ap.parse_args()
+    if args.tenants:
+        from benchmarks.tenant_sweep import run as run_tenants
+        write_tenants_entry(run_tenants([], quick=True))
+        print("\n### Multi-tenant grouped serving\n")
+        print(tenants_table())
+        return
     if args.ann:
         from benchmarks.ann_sweep import run as run_ann
         write_ann_entry(run_ann([], quick=True))

@@ -25,6 +25,7 @@ def main() -> None:
     from benchmarks import ann_sweep, cortex_m4, estimator_sweep
     from benchmarks import fp_backends, kernel_blocks, parallel_speedup
     from benchmarks import quant_ab, report, roofline, serving_load, sorting
+    from benchmarks import tenant_sweep
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
@@ -43,6 +44,8 @@ def main() -> None:
     report.write_quant_entry(quant)             # representation A/B (§5.2)
     ann = ann_sweep.run(csv_rows, quick=args.quick)
     report.write_ann_entry(ann)                 # recall@k vs latency (§10)
+    tenants = tenant_sweep.run(csv_rows, quick=args.quick)
+    report.write_tenants_entry(tenants)         # grouped-vs-loop (§11)
     roofline.run(csv_rows)                      # deliverable (g)
 
     print("\nname,us_per_call,derived")

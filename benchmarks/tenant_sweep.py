@@ -1,0 +1,182 @@
+"""Multi-tenant grouped-vs-loop sweep: G same-shape per-tenant fits
+served from a ModelStore through ONE vmapped launch per (group x bucket)
+cell versus G separate per-model jitted launches.
+
+The grouped arm amortises launch overhead and XLA dispatch across the
+whole tenant group the way PULP-NN amortises its DMA setup across a
+cluster-wide tile (DESIGN.md §11): per-tenant batches on an IoT serving
+box are tiny (a handful of sensor windows), so per-model launch cost
+dominates and stacking G models' params along a leading axis turns G
+launches into one.  The loop arm is the honest baseline — the same
+jitted ``predict_batch_fn`` the single-model engine serves with, called
+once per tenant.
+
+Each record also carries the residency fraction the sweep ran at: below
+1.0 the ModelStore holds the LRU tail int8 at rest and dequantizes on
+admit, so the sweep exercises the evict/admit path, not just the happy
+fully-resident case.
+
+The acceptance row: at G >= 64 the grouped arm must beat the loop arm
+in us/query for kNN and GNB.  Results accumulate in BENCH_tenants.json
+via benchmarks/report.py; CI schema-checks every record.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ALGORITHMS = ("knn", "gnb")
+TENANTS = (8, 64)
+TENANTS_QUICK = (4, 16)
+RESIDENT_FRAC = 0.5       # the larger G also runs budget-capped
+BUCKET = 8                # per-tenant rows per grouped launch
+SEED = 1
+
+
+def _make_store(algo, G, n, d, n_class):
+    from repro.core.estimator import make_fitted
+    from repro.data.datasets import class_blobs
+    from repro.serving import ModelStore
+
+    store = ModelStore()
+    for t in range(G):
+        X, y = class_blobs(n=n, d=d, n_class=n_class, seed=SEED + t)
+        store.register(t, make_fitted(algo, X, y, n_groups=n_class))
+    return store
+
+
+def _bench(run_once, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_once()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(store, G, Q, iters):
+    """(grouped us/q, loop us/q) for one (store, G, Q) cell — grouped is
+    engine.classify_group on the stacked group, loop is the same jitted
+    per-model fn called G times."""
+    import jax
+    import jax.numpy as jnp
+
+    d = Q.shape[2]
+    ids = list(range(G))
+    engine = store.make_engine(max_batch=BUCKET, max_group=G)
+    stacked, _gens = store.group(ids)
+    engine.warmup_groups(stacked, d, g_sizes=[engine._group_bucket(G)],
+                         b_sizes=[BUCKET])
+
+    Qg = jnp.asarray(Q)               # both arms get pre-staged queries
+
+    def grouped_once():
+        res = engine.classify_group(stacked, Qg)
+        jax.block_until_ready(res.classes)
+        return res
+
+    jfn = jax.jit(store.template.predict_batch_fn())
+    Qj = [Qg[t] for t in ids]
+
+    def loop_once():
+        outs = [jfn(store.params_of(t)[1], Qj[t])[0] for t in ids]
+        jax.block_until_ready(outs)
+        return outs
+
+    res = grouped_once()              # warm
+    outs = loop_once()
+    # conformance next to the timing, lane vs the SAME lane unstacked —
+    # under a byte budget the timed loop's params_of() churns tenants
+    # through the lossy int8 round-trip mid-loop, so the loop's params
+    # can legitimately differ from the group snapshot's
+    from repro.core.estimator import unstack_params
+    for t in ids:
+        lane, _ = jfn(unstack_params(stacked, t), Qj[t])
+        assert jnp.array_equal(res.classes[t], lane), t
+    nq = G * BUCKET
+    us_grouped = _bench(grouped_once, iters) * 1e6 / nq
+    us_loop = _bench(loop_once, iters) * 1e6 / nq
+    return us_grouped, us_loop
+
+
+def _stream_tail(store, G, Q, rate, ticks):
+    """Short cross-tenant stream at the largest G: per-tenant SLO rows,
+    serving_table-style — the multi-tenant analogue of serving_load."""
+    from repro.serving import RequestScheduler, poisson_trace, replay_trace
+
+    d = Q.shape[2]
+    engine = store.make_engine(max_batch=BUCKET, max_group=G)
+    stacked, _gens = store.group(list(range(G)))
+    engine.warmup_groups(stacked, d)
+    sched = RequestScheduler(engine, max_wait=2, cache_size=0, store=store)
+    counts = poisson_trace(rate, ticks, seed=SEED)
+    replay_trace(sched, np.asarray(Q).reshape(-1, d), counts,
+                 model_ids=list(range(G)))
+    print(f"{'tenant':>6} {'served':>6} {'p50':>5} {'p95':>5} "
+          f"{'occupancy':>9}")
+    shown = sorted(sched.tenant_stats)[:8]
+    for mid in shown:
+        ts = sched.tenant_stats[mid].summary()
+        print(f"{mid:>6} {ts['served']:>6} {ts['p50']:>5.0f} "
+              f"{ts['p95']:>5.0f} {ts['occupancy']:>9.2f}")
+    if len(sched.tenant_stats) > len(shown):
+        print(f"  ... ({len(sched.tenant_stats) - len(shown)} more tenants)")
+
+
+def run(csv_rows: list, quick: bool = False):
+    from repro.data.datasets import class_blobs
+
+    n, d, n_class = (96, 8, 3) if quick else (256, 16, 3)
+    tenants = TENANTS_QUICK if quick else TENANTS
+    iters = 3 if quick else 7
+
+    results = []
+    print("\n== Multi-tenant grouped-vs-loop (ModelStore) ==")
+    print(f"{'algo':5s} {'G':>4s} {'resident':>8s} {'bucket':>6s} "
+          f"{'grouped us/q':>12s} {'loop us/q':>10s} {'speedup':>8s}")
+    for algo in ALGORITHMS:
+        for G in tenants:
+            store = _make_store(algo, G, n, d, n_class)
+            fracs = (1.0,) if G == min(tenants) else (1.0, RESIDENT_FRAC)
+            Q = np.stack([class_blobs(n=BUCKET, d=d, n_class=n_class,
+                                      seed=1000 + t)[0] for t in range(G)])
+            full = store.stats()["resident_bytes"]
+            for frac in fracs:
+                if frac < 1.0:
+                    store.set_budget(int(full * frac))
+                us_g, us_l = _measure(store, G, Q, iters)
+                rec = {"algorithm": algo, "n_tenants": G,
+                       "resident_frac": frac, "bucket": BUCKET,
+                       "us_per_query_grouped": us_g,
+                       "us_per_query_loop": us_l,
+                       "speedup": us_l / max(us_g, 1e-9)}
+                results.append(rec)
+                print(f"{algo:5s} {G:4d} {frac:8.2f} {BUCKET:6d} "
+                      f"{us_g:12.1f} {us_l:10.1f} {rec['speedup']:7.2f}x")
+                csv_rows.append(
+                    (f"tenants/{algo}/G{G}/r{frac:.2f}", us_g,
+                     f"loop={us_l:.1f}us;speedup={rec['speedup']:.2f}x"))
+    # cross-tenant stream at the largest G (per-tenant SLO rows)
+    big = max(tenants)
+    store = _make_store("gnb", big, n, d, n_class)
+    Q = np.stack([class_blobs(n=BUCKET, d=d, n_class=n_class,
+                              seed=1000 + t)[0] for t in range(big)])
+    print(f"\n-- cross-tenant stream, gnb G={big} --")
+    _stream_tail(store, big, Q, rate=float(big), ticks=8 if quick else 16)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks import report
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    report.write_tenants_entry(run([], quick=args.quick))
+    print("\n" + report.tenants_table())

@@ -53,6 +53,74 @@ from repro.kernels import quantized as _qk
 from repro.kernels.dispatch import PrecisionPolicy
 
 
+# ---------------------------------------------------------------------------
+# Model-group stacking (multi-tenant serving, serving/model_store.py)
+# ---------------------------------------------------------------------------
+#
+# Estimator params are NamedTuple pytrees whose array leaves are
+# shape-stable across same-config fits (RF after core/random_forest.py's
+# pad_nodes normalization), so G tenants' params stack leaf-wise into one
+# leading axis and serve as ONE vmapped launch (dispatch.grouped).  The
+# helpers below are the one place the array-vs-static-metadata distinction
+# lives: a leaf with ``.shape`` stacks/maps, anything else (e.g. n_class)
+# must be identical across the group and passes through.
+
+
+def _is_array_leaf(leaf) -> bool:
+    return hasattr(leaf, "shape")
+
+
+def group_axes(params) -> Any:
+    """The vmap ``in_axes`` pytree for a (stacked or template) params
+    pytree: 0 on array leaves, None on static metadata.  Compute this from
+    CONCRETE params before tracing — under jit every leaf looks like an
+    array and static metadata would be wrongly mapped."""
+    return jax.tree.map(lambda l: 0 if _is_array_leaf(l) else None, params)
+
+
+def stack_params(params_list) -> NamedTuple:
+    """Stack G same-shape param pytrees into one (G, ...) leading axis.
+
+    Static (non-array) leaves must be equal across the group — they are
+    closed-over config like ``n_class``, and one vmapped executable serves
+    every lane.  Shape/dtype mismatches raise with the offending leaf
+    path and group index (the error a ModelStore registration surfaces)."""
+    assert params_list, "stack_params needs at least one model"
+    ref = params_list[0]
+    ref_paths, treedef = jax.tree_util.tree_flatten_with_path(ref)
+    for g, p in enumerate(params_list[1:], start=1):
+        paths, td = jax.tree_util.tree_flatten_with_path(p)
+        if td != treedef:
+            raise ValueError(
+                f"model {g} has param pytree {td}, expected {treedef}")
+        for (kp, leaf0), (_, leaf) in zip(ref_paths, paths):
+            name = jax.tree_util.keystr(kp)
+            if _is_array_leaf(leaf0) != _is_array_leaf(leaf):
+                raise ValueError(f"model {g} leaf {name}: array/static "
+                                 f"mismatch vs model 0")
+            if _is_array_leaf(leaf0):
+                if leaf0.shape != leaf.shape or leaf0.dtype != leaf.dtype:
+                    raise ValueError(
+                        f"model {g} leaf {name}: {leaf.shape}/{leaf.dtype} "
+                        f"vs model 0's {leaf0.shape}/{leaf0.dtype} — "
+                        f"same-shape fits only (RF forests must be "
+                        f"pad_nodes-normalized to one node capacity)")
+            elif leaf0 != leaf:
+                raise ValueError(
+                    f"model {g} static leaf {name}: {leaf!r} != model 0's "
+                    f"{leaf0!r} — static config must match across a group")
+    return jax.tree.map(
+        lambda *ls: jnp.stack(ls) if _is_array_leaf(ls[0]) else ls[0],
+        *params_list)
+
+
+def unstack_params(stacked, i: int) -> NamedTuple:
+    """Slice tenant ``i``'s params back out of a stacked group (the
+    inverse of ``stack_params`` per lane; conformance tests use it to
+    check the grouped launch against the per-model loop)."""
+    return jax.tree.map(lambda l: l[i] if _is_array_leaf(l) else l, stacked)
+
+
 class Estimator(Protocol):
     """Structural protocol every Non-Neural estimator satisfies (this is
     exactly the surface NonNeuralServeEngine consumes)."""
@@ -156,6 +224,20 @@ class _EstimatorBase:
             self._params = self._quantize(self._params, self._cal_absmax)
         return self
 
+    def quantized_copy(self) -> "Estimator":
+        """A shallow copy whose params are the int8 lattice form, leaving
+        THIS estimator untouched — what a serving engine under the int8
+        policy uses so quantization stays engine-local (the caller may be
+        sharing the estimator with a fp32 engine or a ModelStore handle;
+        ``quantize()`` would mutate it under them).  Returns ``self`` when
+        the params are already quantized (nothing to copy)."""
+        if self.quantized:
+            return self
+        import copy
+        est = copy.copy(self)
+        est._params = self._quantize(self._params, self._cal_absmax)
+        return est
+
     def _quantize(self, params, absmax) -> NamedTuple:
         raise NotImplementedError
 
@@ -236,6 +318,29 @@ class _EstimatorBase:
 
     def _sharded_fn(self, mesh, axis, strategy: str) -> Callable:
         raise NotImplementedError
+
+    def predict_batch_group_fn(self) -> Callable:
+        """Pure ``(stacked_params, Xg (G, B, d)) -> (preds (G, B),
+        aux (G, B, ...))`` — the multi-tenant grouped launch:
+        ``predict_batch_fn`` vmapped over the model-group axis
+        (``dispatch.grouped``), each lane bit-equal to the per-model
+        call.  When the path is registry-selected (``path=None``, not
+        quantized) the grouped arm rebinds to the ``"ref"`` jnp oracle:
+        the fused Pallas kernels are bit-equal to it BY CONTRACT (the
+        tier-1 conformance suites), but they vmap badly — the
+        interpreter re-enters per model lane, so a 64-lane group runs no
+        faster than the loop it replaces, while the oracle's jnp ops
+        batch into one fused XLA program (10x+ at G=64,
+        benchmarks/tenant_sweep.py).  An explicitly pinned path is
+        respected.  Raises KeyError for algorithms with no grouped arm
+        (ANN overrides with the reason)."""
+        build = dispatch.grouped(self.algorithm)
+        est = self
+        if self.path is None and not self.quantized:
+            import copy as _copy
+            est = _copy.copy(self)
+            est.path = "ref"
+        return build(est.predict_batch_fn(), group_axes(self.params))
 
 
 class KNNEstimator(_EstimatorBase):
@@ -776,6 +881,14 @@ class ANNKNNEstimator(_EstimatorBase):
                 "strategy='query' or 'single'")
         return _cluster.row_sharded_batch_fn(self.predict_batch_fn(),
                                              mesh, axis)
+
+    def predict_batch_group_fn(self) -> Callable:
+        raise NotImplementedError(
+            "ANN has no grouped (multi-tenant) serving arm: the IVF "
+            "inverted-list capacities and PQ code shapes are data-"
+            "dependent per fit, so independently-fitted indexes do not "
+            "stack into one leading axis (DESIGN.md §11) — register ANN "
+            "tenants in their own single-model engines")
 
     def serve_cost_shape(self) -> Dict[str, int]:
         C, cap = self.params.cell_ids.shape

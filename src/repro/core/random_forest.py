@@ -51,6 +51,29 @@ def tree_predict(feature, threshold, left, right, x):
     return -feature[leaf] - 1
 
 
+def pad_nodes(forest: Forest, capacity: int) -> Forest:
+    """Pad the node axis (M) to ``capacity`` with never-visited leaf nodes
+    (feature sentinel -1 = class 0 leaf, but node 0 is always a real root
+    and no real node links past M, so traversal never reaches the pad) —
+    how independently-trained forests with different node counts land on
+    one common shape so a model group can stack (serving/model_store.py).
+    Bit-equal: the traversal's while_loop starts at node 0 and follows
+    only real child links."""
+    M = forest.feature.shape[1]
+    pad = capacity - M
+    assert pad >= 0, (capacity, M)
+    if pad == 0:
+        return forest
+
+    def pf(a, value):
+        return jnp.pad(a, ((0, 0), (0, pad)), constant_values=value)
+
+    return forest._replace(feature=pf(forest.feature, -1),
+                           threshold=pf(forest.threshold, 0.0),
+                           left=pf(forest.left, 0),
+                           right=pf(forest.right, 0))
+
+
 def forest_predict(forest: Forest, x, n_cores: int = 8):
     """Fig. 8: DTs statically chunked over cores; per-core tree execution;
     vote update (the critical section -> one-hot reduction); ArgMax.

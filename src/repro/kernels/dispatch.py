@@ -757,3 +757,65 @@ def forest_votes_tree_sharded(forest, X, *, mesh, axis="data", policy=None,
     return cluster.forest_votes_tree_shardmap(forest, X, mesh, axis,
                                               policy=policy, path=path,
                                               n_cores=n_cores)
+
+
+# ---------------------------------------------------------------------------
+# Grouped arm — one vmapped launch over a (G, ...) stacked model group
+# ---------------------------------------------------------------------------
+#
+# Multi-tenant serving (serving/model_store.py, DESIGN.md §11): estimator
+# params are NamedTuple pytrees, so G same-shape fitted models stack into
+# one leading axis and a whole model group serves as ONE kernel launch —
+# ``jax.vmap`` of the estimator's pure ``(params, X) -> (preds, aux)``
+# batch fn over (stacked params, (G, B, d) queries).  The arm is
+# registered per algorithm (mirroring the sharded registry) so an
+# algorithm whose params CANNOT stack — ANN's inverted lists are ragged
+# per fit — refuses loudly instead of vmapping garbage.  Each vmapped
+# lane runs the registry-dispatched kernel unchanged, so the grouped
+# launch is bit-equal per tenant to the per-model loop (the conformance
+# suite pins this for all five algorithms).
+
+_GROUPED: Dict[str, Callable] = {}
+
+
+def register_grouped(algorithm: str):
+    def deco(fn):
+        _GROUPED[algorithm] = fn
+        return fn
+
+    return deco
+
+
+def grouped(algorithm: str) -> Callable:
+    """The grouped-launch builder for ``algorithm``: called as
+    ``grouped(alg)(batch_fn, params_axes)`` it returns a pure
+    ``(stacked_params, Xg) -> (preds (G, B), aux (G, B, ...))`` executor.
+    ``params_axes`` is the vmap in_axes pytree — 0 on array leaves, None
+    on static metadata leaves (e.g. ``n_class``) — and MUST be computed
+    from concrete params (under a trace every leaf looks like an array).
+    Raises KeyError for algorithms with no grouped arm (mirrors
+    ``sharded`` for unknown keys)."""
+    if algorithm not in _GROUPED:
+        raise KeyError(f"no grouped serving arm for {algorithm!r}; "
+                       f"known: {sorted(_GROUPED)}")
+    return _GROUPED[algorithm]
+
+
+def grouped_registered() -> Tuple[str, ...]:
+    """Algorithms with a grouped (multi-tenant vmapped) arm, for docs and
+    tests."""
+    return tuple(sorted(_GROUPED))
+
+
+def _vmap_group(batch_fn: Callable, params_axes) -> Callable:
+    import jax
+    return jax.vmap(batch_fn, in_axes=(params_axes, 0))
+
+
+# all five dense-param estimators stack; each registration is the explicit
+# statement "this algorithm's param pytree is shape-stable across fits"
+register_grouped("knn")(_vmap_group)
+register_grouped("kmeans")(_vmap_group)
+register_grouped("gnb")(_vmap_group)
+register_grouped("gmm")(_vmap_group)
+register_grouped("rf")(_vmap_group)    # after pad_nodes normalization

@@ -135,6 +135,126 @@ def serve_nonneural(args):
     return result
 
 
+def serve_tenants(args):
+    """--tenants G: fit G per-tenant estimators of the same shape, park
+    them in a ModelStore (optionally capped to --resident-frac of the
+    total fp32 bytes, the rest held int8 at rest), and serve them through
+    ONE grouped vmapped launch per (group x bucket) cell instead of G
+    separate launches (DESIGN.md §11)."""
+    import numpy as np
+
+    from repro.core.estimator import make_fitted
+    from repro.data.datasets import class_blobs
+    from repro.serving import ModelStore
+
+    if args.algo == "ann":
+        raise SystemExit("--tenants: ann has no grouped serving arm "
+                         "(ragged IVF/PQ shapes, DESIGN.md §11)")
+    if args.mesh > 1:
+        raise SystemExit("--tenants is a single-device path; drop --mesh")
+
+    G, d, n_class = args.tenants, args.dim, args.classes
+    store = ModelStore()
+    fits = []
+    for t in range(G):
+        X, y = class_blobs(n=args.train_size, d=d, n_class=n_class, seed=t)
+        store.register(t, make_fitted(args.algo, X, y, n_groups=n_class))
+        fits.append((X, y))
+    full = store.stats()["resident_bytes"]
+    if args.resident_frac < 1.0:
+        store.set_budget(int(full * args.resident_frac))
+    st = store.stats()
+    budget = f"{st['budget_bytes']}B" if st["budget_bytes"] is not None \
+        else "unbounded"
+    print(f"[tenants] algo={args.algo} G={G} resident {st['n_resident']}/"
+          f"{st['n_models']} ({st['resident_frac']:.2f} of models, budget="
+          f"{budget} of {full}B fp32, "
+          f"{st['at_rest_bytes']}B int8 at rest)")
+
+    engine = store.make_engine(max_batch=args.batch, max_group=G)
+    Q = np.stack([class_blobs(n=args.batch, d=d, n_class=n_class,
+                              seed=1000 + t)[0] for t in range(G)])
+    if args.stream:
+        return serve_tenant_stream(args, store, engine, Q)
+
+    ids = list(range(G))
+    stacked, _gens = store.group(ids)
+    engine.warmup_groups(stacked, d, g_sizes=[engine._group_bucket(G)],
+                         b_sizes=[engine._bucket(args.batch)])
+    t0 = time.time()
+    res = engine.classify_group(stacked, Q)
+    jax.block_until_ready(res.classes)
+    dt_group = time.time() - t0
+
+    jfn = jax.jit(store.template.predict_batch_fn())
+    Qj = [jnp.asarray(Q[t]) for t in ids]
+    outs = [jfn(store.params_of(t)[1], Qj[t]) for t in ids]
+    jax.block_until_ready(outs)
+    t0 = time.time()
+    outs = [jfn(store.params_of(t)[1], Qj[t]) for t in ids]
+    jax.block_until_ready(outs)
+    dt_loop = time.time() - t0
+    # conformance vs the SAME stacked lanes: under a budget the loop's
+    # params_of() churns tenants through the lossy int8 round-trip
+    from repro.core.estimator import unstack_params
+    for t in ids:
+        lane, _ = jfn(unstack_params(stacked, t), Qj[t])
+        assert jnp.array_equal(res.classes[t], lane), t
+    nq = G * args.batch
+    print(f"[tenants] grouped {nq} queries ({G}x{args.batch}) in "
+          f"{dt_group*1e3:.2f}ms ({dt_group/nq*1e6:.1f} us/q) vs per-model "
+          f"loop {dt_loop*1e3:.2f}ms ({dt_loop/nq*1e6:.1f} us/q); "
+          f"launches={dict(engine.group_launches)}; grouped classes "
+          f"bit-equal to loop")
+    return res
+
+
+def serve_tenant_stream(args, store, engine, Q):
+    """--tenants --stream: cross-tenant Poisson arrivals coalesced by the
+    store-mode RequestScheduler into (model-group x bucket) grouped
+    launches; per-tenant SLO rows printed serving_table-style."""
+    import numpy as np
+
+    from repro.serving import RequestScheduler, poisson_trace, replay_trace
+
+    G, d = Q.shape[0], Q.shape[2]
+    ids = list(range(G))
+    stacked, _gens = store.group(ids)
+    engine.warmup_groups(stacked, d)
+    sched = RequestScheduler(engine, max_wait=args.max_wait,
+                             cache_size=args.cache_size, store=store)
+    counts = poisson_trace(args.rate, args.ticks, seed=args.seed)
+    flat = np.asarray(Q).reshape(-1, d)
+    t0 = time.time()
+    rids = replay_trace(sched, flat, counts, deadline=args.deadline,
+                        model_ids=ids)
+    dt = time.time() - t0
+    s = sched.stats.summary()
+    print(f"[tenants/stream] algo={args.algo} G={G} rate={args.rate} "
+          f"ticks={args.ticks} max_wait={args.max_wait} "
+          f"cache={args.cache_size}")
+    print(f"[tenants/stream] served {len(rids)} requests in {dt:.3f}s wall "
+          f"({s['launches']} grouped launches, cells="
+          f"{dict(engine.group_launches)})")
+    print(f"[tenants/stream] latency ticks p50={s['p50']:.0f} "
+          f"p95={s['p95']:.0f} p99={s['p99']:.0f}  "
+          f"throughput={s['throughput']:.2f} req/tick  "
+          f"occupancy={s['occupancy']:.2f}  hit_rate={s['hit_rate']:.2f}  "
+          f"deadline_miss={s['deadline_miss_rate']:.2f}")
+    hdr = (f"{'tenant':>6} {'served':>6} {'p50':>5} {'p95':>5} "
+           f"{'occupancy':>9} {'hit_rate':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for mid in sorted(sched.tenant_stats):
+        ts = sched.tenant_stats[mid].summary()
+        print(f"{mid:>6} {ts['served']:>6} {ts['p50']:>5.0f} "
+              f"{ts['p95']:>5.0f} {ts['occupancy']:>9.2f} "
+              f"{ts['hit_rate']:>8.2f}")
+    assert set(engine.group_launches) <= engine.warmed_groups, \
+        "stream compiled a new (group, bucket) cell mid-flight"
+    return sched.stats
+
+
 def serve_stream(args, engine, Q):
     """--stream: replay a Poisson-ish arrival trace (seeded rng) through
     the micro-batching RequestScheduler and report the SLO accounting
@@ -221,6 +341,14 @@ def main(argv=None):
     ap.add_argument("--refine", type=int, default=0,
                     help="--algo ann: exact re-rank of the ADC top-R "
                          "survivors (0 = pure ADC ranking)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="serve G same-shape per-tenant fits from a "
+                         "ModelStore through grouped vmapped launches "
+                         "(Non-Neural algos except ann; DESIGN.md §11)")
+    ap.add_argument("--resident-frac", type=float, default=1.0,
+                    help="--tenants: fraction of total fp32 param bytes "
+                         "kept resident; the LRU tail is held int8 at "
+                         "rest and dequantized on admit")
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--train-size", type=int, default=400)
     ap.add_argument("--dim", type=int, default=21)
@@ -228,6 +356,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.algo == "lm":
         return serve_lm(args)
+    if args.tenants > 1:
+        return serve_tenants(args)
     return serve_nonneural(args)
 
 

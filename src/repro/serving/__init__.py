@@ -1,10 +1,12 @@
 from repro.serving.engine import (  # noqa: F401
     ClassifyResult,
     GenerationResult,
+    GroupClassifyResult,
     KNNServeEngine,
     NonNeuralServeEngine,
     ServeEngine,
 )
+from repro.serving.model_store import ModelStore  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     RequestResult,
     RequestScheduler,

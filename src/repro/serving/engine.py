@@ -16,8 +16,9 @@ are microbatched.  ``KNNServeEngine`` survives as the kNN-typed facade.
 from __future__ import annotations
 
 import functools
+import itertools
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +50,24 @@ class ClassifyResult:
         return self.aux
 
 
+@dataclass
+class GroupClassifyResult:
+    """One grouped (multi-tenant) launch: per-tenant rows of predictions
+    and evidence, sliced back to the caller's (G, B) from the padded
+    (group-bucket, bucket) launch shape."""
+    classes: jnp.ndarray       # (G, B) int32 prediction per tenant x query
+    aux: jnp.ndarray           # (G, B, ...) per-tenant algorithm evidence
+    launches: int              # vmapped kernel launches used
+    algorithm: str = "knn"
+
+
+# distinguishes two engines for result-cache keying even when they wrap
+# the same estimator (serving/scheduler.py folds this fingerprint into
+# the cache key so identical query bytes against different engines or
+# policies can never cross-hit)
+_ENGINE_SEQ = itertools.count()
+
+
 class NonNeuralServeEngine:
     """Power-of-two bucket batching over any registered estimator.
 
@@ -74,7 +93,7 @@ class NonNeuralServeEngine:
     def __init__(self, estimator: Estimator, *, max_batch: int = 1024,
                  sharded: bool = False, mesh=None, mesh_axis: str = "data",
                  policy: Optional[str] = None,
-                 strategy: Optional[str] = None):
+                 strategy: Optional[str] = None, max_group: int = 64):
         assert estimator.fitted, "fit the estimator before serving it"
         wants_int8 = (policy is not None
                       and str(policy).split("@")[0] == "int8") \
@@ -93,12 +112,20 @@ class NonNeuralServeEngine:
                 "strategy='query'/'single'/'auto' (auto never routes "
                 "quantized params to 'reference')")
         if policy is not None and str(policy).split("@")[0] == "int8":
-            # the int8 serving tier: quantize in place (idempotent — a fit
-            # under the int8 PrecisionPolicy already did it) and record the
-            # footprint A/B through serving/quant.py's byte accounting
+            # the int8 serving tier: quantize into an ENGINE-LOCAL copy —
+            # ``estimator.quantize()`` here would rewrite the CALLER'S
+            # params in place, and a second engine (or a ModelStore
+            # handle) sharing the estimator would then silently serve
+            # int8 under a fp32 policy.  A fit under the int8
+            # PrecisionPolicy arrives already quantized and passes
+            # through.  The footprint A/B goes through serving/quant.py's
+            # byte accounting either way.
             from repro.serving import quant as _q
-            estimator.quantize()
-            fp32 = estimator.dequantize_params()
+            if estimator.quantized:
+                fp32 = estimator.dequantize_params()
+            else:
+                fp32 = estimator.params
+                estimator = estimator.quantized_copy()
             self.quant_report = {
                 "bytes_int8": _q.param_bytes(estimator.params),
                 "bytes_fp32": _q.param_bytes(fp32),
@@ -127,6 +154,15 @@ class NonNeuralServeEngine:
         self.bucket_strategies: Dict[int, str] = {}
         self._fns: Dict[str, object] = {}      # strategy -> jitted fn
         self._placed: Dict[str, object] = {}   # strategy -> placed params
+        # grouped (multi-tenant) launch state — DESIGN.md §11
+        self.max_group = int(max_group)
+        self.warmed_groups: Set[Tuple[int, int]] = set()   # (g, b) compiled
+        self.group_launches: Dict[Tuple[int, int], int] = {}
+        self._gfn = None
+        # folded into scheduler result-cache keys: two engines over the
+        # SAME estimator (e.g. fp32 and int8 policies) must never cross-hit
+        self.cache_fingerprint = (self.algorithm, str(policy),
+                                  next(_ENGINE_SEQ))
 
     @property
     def sharded(self) -> bool:
@@ -270,6 +306,129 @@ class NonNeuralServeEngine:
                               aux=jnp.concatenate(auxes),
                               launches=launches,
                               algorithm=self.algorithm)
+
+    # ------------------------------------------------ grouped (multi-tenant)
+
+    def _group_bucket(self, g: int) -> int:
+        """Power-of-two model-group bucket covering ``g`` tenants, so at
+        most log2(max_group) x log2(max_batch) grouped executables exist."""
+        size = 1
+        while size < g:
+            size *= 2
+        return size
+
+    def group_fn(self):
+        """The jitted grouped launch: the estimator's ``predict_batch_fn``
+        vmapped over the model-group axis (``dispatch.grouped``), jitted
+        ONCE — stacked params flow in as jit arguments (shared device
+        buffers), and each (group-bucket, bucket) shape gets its own
+        executable under the same callable."""
+        if self._gfn is None:
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "grouped (multi-tenant) serving is single-device: the "
+                    "vmapped model-group axis and a mesh partition are "
+                    "separate batching dimensions — drop mesh=")
+            self._gfn = jax.jit(self.estimator.predict_batch_group_fn())
+        return self._gfn
+
+    @staticmethod
+    def _group_resize(stacked, g: int):
+        """Slice or pad (repeating the last model row) a stacked params
+        pytree to exactly ``g`` lanes — padding lanes compute throwaway
+        predictions that are sliced off."""
+        def one(leaf):
+            if not hasattr(leaf, "shape"):
+                return leaf
+            have = leaf.shape[0]
+            if have == g:
+                return leaf
+            if have > g:
+                return leaf[:g]
+            return jnp.concatenate(
+                [leaf, jnp.repeat(leaf[-1:], g - have, axis=0)])
+
+        return jax.tree.map(one, stacked)
+
+    def classify_group(self, stacked_params, Xg) -> GroupClassifyResult:
+        """One multi-tenant launch: stacked params (G, ...) + queries
+        (G, B, d) -> per-tenant (G, B) predictions, bit-equal per lane to
+        ``classify`` with that tenant's params.  G pads to the
+        power-of-two group bucket (repeating the last model), B pads to
+        the query bucket; B beyond ``max_batch`` microbatches along the
+        query axis."""
+        Xg = jnp.asarray(Xg)
+        assert Xg.ndim == 3, f"Xg must be (G, B, d), got {Xg.shape}"
+        G, B = Xg.shape[0], Xg.shape[1]
+        gb = self._group_bucket(G)
+        if G > self._group_bucket(self.max_group):
+            raise ValueError(
+                f"{G} models exceed max_group={self.max_group} — split the "
+                f"group (the scheduler's drain does this automatically)")
+        if gb > G:
+            Xg = jnp.concatenate(
+                [Xg, jnp.zeros((gb - G,) + Xg.shape[1:], Xg.dtype)])
+        stacked = self._group_resize(stacked_params, gb)
+        fn = self.group_fn()
+        classes, auxes, launches = [], [], 0
+        for lo in range(0, B, self.max_batch):
+            chunk = Xg[:, lo: lo + self.max_batch] if B > self.max_batch \
+                else Xg
+            bucket = self._bucket(chunk.shape[1])
+            pad = bucket - chunk.shape[1]
+            if pad:
+                chunk = jnp.pad(chunk, ((0, 0), (0, pad), (0, 0)))
+            cls, aux = fn(stacked, chunk)
+            if pad:     # no-op slices still dispatch eagerly — skip them
+                cls, aux = cls[:, : bucket - pad], aux[:, : bucket - pad]
+            classes.append(cls)
+            auxes.append(aux)
+            self.group_launches[(gb, bucket)] = \
+                self.group_launches.get((gb, bucket), 0) + 1
+            self.warmed_groups.add((gb, bucket))
+            launches += 1
+        cls = classes[0] if launches == 1 \
+            else jnp.concatenate(classes, axis=1)
+        aux = auxes[0] if launches == 1 else jnp.concatenate(auxes, axis=1)
+        if gb > G:
+            cls, aux = cls[:G], aux[:G]
+        return GroupClassifyResult(classes=cls, aux=aux,
+                                   launches=launches,
+                                   algorithm=self.algorithm)
+
+    def warmup_groups(self, stacked_params, d: int, *, g_sizes=None,
+                      b_sizes=None, dtype=jnp.float32) -> int:
+        """Compile every (group-bucket, bucket) cell a tenant stream can
+        route to — the grouped analogue of ``warmup_buckets`` (the
+        scheduler coalesces only into ``warmed_groups``, so no jit
+        compile lands mid-stream).  ``g_sizes``/``b_sizes`` restrict the
+        lattice (benchmarks warm exactly the cells they time).  Warmup
+        never lands in ``group_launches``.  Returns cells compiled."""
+        fn = self.group_fn()
+        if g_sizes is None:
+            gs, g = set(), 1
+            top = self._group_bucket(self.max_group)
+            while g <= top:
+                gs.add(g)
+                g *= 2
+        else:
+            gs = {self._group_bucket(g) for g in g_sizes}
+        if b_sizes is None:
+            bs, b = set(), 1
+            while b < 2 * self.max_batch:
+                bs.add(self._bucket(b))
+                b *= 2
+        else:
+            bs = {self._bucket(b) for b in b_sizes}
+        n = 0
+        for g in sorted(gs):
+            stacked = self._group_resize(stacked_params, g)
+            for b in sorted(bs):
+                jax.block_until_ready(
+                    fn(stacked, jnp.zeros((g, b, d), dtype))[0])
+                self.warmed_groups.add((g, b))
+                n += 1
+        return n
 
 
 class KNNServeEngine(NonNeuralServeEngine):

@@ -1,0 +1,366 @@
+"""Multi-tenant model zoo: thousands of small per-user estimators behind
+one serving stack (DESIGN.md §11).
+
+The paper's setting is per-device personalization — every extreme-edge
+node fits its OWN tiny Non-Neural model — so the production analogue of
+"millions of users" is a fleet of millions of small fitted models, not
+one big one.  ``ModelStore`` is that fleet's registry:
+
+  * **Same-shape registration.**  Estimator params are NamedTuple pytrees
+    whose array leaves are shape-stable across same-config fits, so G
+    tenants stack into one (G, ...) leading axis (``core.estimator.
+    stack_params``) and serve as ONE vmapped kernel launch
+    (``NonNeuralServeEngine.classify_group``).  RF forests are normalized
+    to a common node capacity on registration (``random_forest.
+    pad_nodes`` — padding nodes are never visited, so the launch stays
+    bit-equal per tenant).
+
+  * **LRU residency.**  ``resident_bytes`` bounds the fleet's hot
+    footprint — PULP-NN keeps weights resident in every core's local
+    memory (Garofalo et al., 2019), and this is that layout's serving
+    analogue: resident tenants hold full-precision params, evicted
+    tenants fall back to the int8 at-rest form (``serving/quant.py``'s
+    generic symmetric per-channel QuantTensor pytree, the same accounting
+    the engine's footprint report uses) and are dequantized on admission.
+    The at-rest payload is CACHED on the slot, so evict -> admit ->
+    evict round-trips are deterministic (the int8 lattice is a fixed
+    point: requantizing a dequantized tensor reproduces it bit-for-bit).
+
+  * **Hot-swap on refit.**  ``update()`` builds the replacement slot
+    completely — the second buffer — then publishes it with one atomic
+    dict assignment and a generation bump.  Slots are immutable
+    NamedTuples and group snapshots hold references, so an in-flight
+    drain finishes on the OLD params; the next ``group()`` call sees the
+    new generation (which also invalidates the scheduler's result-cache
+    keys and the stacked-group cache, both generation-keyed).
+"""
+from __future__ import annotations
+
+import copy
+from collections import OrderedDict
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator as _est
+from repro.core import random_forest as _rf
+from repro.serving import quant as _q
+
+
+class _Slot(NamedTuple):
+    """One tenant's published state.  Immutable: ``update``/evict/admit
+    build a full replacement and swap it in with one dict assignment, so
+    any reader holding a slot (an in-flight drain's group snapshot) keeps
+    a consistent params pytree."""
+
+    generation: int
+    params: Optional[NamedTuple]    # full-precision resident form (None =
+                                    # evicted to the int8 at-rest form)
+    qparams: Optional[Any]          # cached at-rest pytree (QuantTensor
+                                    # leaves); survives admission so
+                                    # re-eviction is free AND deterministic
+    resident_bytes: int
+    at_rest_bytes: int
+
+    @property
+    def resident(self) -> bool:
+        return self.params is not None
+
+
+class ModelStore:
+    """Registry of same-shape fitted estimators with LRU residency.
+
+    ``resident_bytes`` bounds the summed full-precision param bytes held
+    resident (None = unbounded).  The bound is SOFT around an active
+    model group: ``group(ids)`` pins its members during admission so a
+    stacked launch never reads a half-evicted tenant — a group larger
+    than the budget temporarily overshoots and the overshoot is evicted
+    on the next access.  ``min_size`` is the at-rest quantization
+    threshold forwarded to ``serving.quant.quantize_params`` (default 1:
+    tenant models are tiny — that is the point — so every float matrix
+    quantizes).
+    """
+
+    def __init__(self, *, resident_bytes: Optional[int] = None,
+                 min_size: int = 1, group_cache_entries: int = 2):
+        self.budget = resident_bytes
+        self.min_size = int(min_size)
+        self._slots: Dict[Any, _Slot] = {}
+        self._lru: "OrderedDict[Any, None]" = OrderedDict()  # resident ids
+        self._resident_total = 0
+        self._template = None            # shallow copy of first registration
+        self._node_capacity = 0          # RF node-axis normalization target
+        self._group_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._group_cache_entries = int(group_cache_entries)
+
+    # ------------------------------------------------------------- intro
+
+    @property
+    def algorithm(self) -> str:
+        assert self._template is not None, "register a model first"
+        return self._template.algorithm
+
+    @property
+    def template(self):
+        """The estimator whose closures (``predict_batch_fn`` statics,
+        policy, aux shapes) serve the whole fleet — a shallow copy of the
+        first registration, params included (engines need concrete params
+        for vmap axis inference and warmup)."""
+        assert self._template is not None, "register a model first"
+        return self._template
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, model_id) -> bool:
+        return model_id in self._slots
+
+    @property
+    def model_ids(self) -> List[Any]:
+        return list(self._slots)
+
+    @property
+    def resident_ids(self) -> List[Any]:
+        return list(self._lru)
+
+    def generation(self, model_id) -> int:
+        return self._slots[model_id].generation
+
+    def stats(self) -> Dict[str, Any]:
+        at_rest = sum(s.at_rest_bytes for s in self._slots.values()
+                      if not s.resident)
+        n_res = len(self._lru)
+        return {
+            "n_models": len(self._slots),
+            "n_resident": n_res,
+            "resident_frac": n_res / len(self._slots) if self._slots else 0.0,
+            "resident_bytes": self._resident_total,
+            "at_rest_bytes": at_rest,
+            "budget_bytes": self.budget,
+        }
+
+    # ---------------------------------------------------------- register
+
+    def _normalize(self, estimator) -> NamedTuple:
+        """Validate a registration against the fleet signature and return
+        its params in the store's canonical shape (RF: node axis padded to
+        the fleet capacity)."""
+        assert estimator.fitted, "fit the estimator before registering it"
+        params = estimator.params
+        if self._template is None:
+            if estimator.algorithm == "ann":
+                # fail at registration, not at the first grouped launch
+                estimator.predict_batch_group_fn()
+            return params
+        t = self._template
+        if estimator.algorithm != t.algorithm:
+            raise ValueError(
+                f"model algorithm {estimator.algorithm!r} != the store's "
+                f"{t.algorithm!r} — one ModelStore serves one algorithm "
+                f"(one vmapped executable serves every lane)")
+        if t.algorithm == "rf":
+            M = params.feature.shape[1]
+            if M > self._node_capacity:
+                self._grow_node_capacity(M)
+            elif M < self._node_capacity:
+                params = _rf.pad_nodes(params, self._node_capacity)
+        # stack_params against the template raises the precise leaf-path
+        # error for any shape/dtype/static mismatch
+        _est.stack_params([self._template_params(), params])
+        return params
+
+    def _template_params(self) -> NamedTuple:
+        params = self._template.params
+        if self._template.algorithm == "rf" and self._node_capacity \
+                and params.feature.shape[1] < self._node_capacity:
+            params = _rf.pad_nodes(params, self._node_capacity)
+        return params
+
+    def _grow_node_capacity(self, capacity: int) -> None:
+        """A new tenant's forest outgrew the fleet's node axis: re-pad
+        every published slot (resident params directly; at-rest payloads
+        via a dequantize -> pad -> requantize round-trip, lossless in the
+        original channels because the int8 lattice is a requantization
+        fixed point and the new channels are exact zeros)."""
+        self._node_capacity = capacity
+        for mid, slot in list(self._slots.items()):
+            params = slot.params
+            qparams = slot.qparams
+            if params is not None:
+                params = _rf.pad_nodes(params, capacity)
+            if qparams is not None:
+                fp = _q.dequantize_params(qparams, dtype=jnp.float32)
+                qparams = _q.quantize_params(_rf.pad_nodes(fp, capacity),
+                                             min_size=self.min_size)
+            nbytes = _q.param_bytes(params) if params is not None else 0
+            self._resident_total += nbytes - slot.resident_bytes
+            self._slots[mid] = slot._replace(
+                params=params, qparams=qparams, resident_bytes=nbytes,
+                at_rest_bytes=_q.quant_bytes(
+                    params if params is not None
+                    else _q.dequantize_params(qparams, dtype=jnp.float32),
+                    min_size=self.min_size))
+        self._group_cache.clear()
+
+    def register(self, model_id, estimator) -> None:
+        """Publish a fitted estimator as tenant ``model_id`` (resident;
+        the LRU may immediately evict it or others to honour the byte
+        budget).  Duplicate ids must go through ``update()`` — silent
+        re-registration would skip the generation bump that invalidates
+        caches."""
+        if model_id in self._slots:
+            raise ValueError(f"model {model_id!r} already registered — "
+                             f"use update() to hot-swap a refit")
+        params = self._normalize(estimator)
+        if self._template is None:
+            self._template = copy.copy(estimator)
+            if estimator.algorithm == "rf":
+                self._node_capacity = params.feature.shape[1]
+        self._publish(model_id, params, generation=0)
+
+    def update(self, model_id, estimator) -> int:
+        """Hot-swap tenant ``model_id`` with a refit estimator: the new
+        slot is fully built (the second buffer) before ONE atomic dict
+        assignment publishes it, and the generation bump invalidates the
+        stale at-rest payload, the stacked-group cache, and any
+        generation-keyed result-cache entries.  In-flight drains holding
+        the old slot's params finish on them untouched.  Returns the new
+        generation."""
+        if model_id not in self._slots:
+            raise KeyError(f"model {model_id!r} is not registered")
+        params = self._normalize(estimator)
+        gen = self._slots[model_id].generation + 1
+        self._publish(model_id, params, generation=gen)
+        return gen
+
+    def _publish(self, model_id, params, *, generation: int) -> None:
+        slot = _Slot(generation=generation, params=params, qparams=None,
+                     resident_bytes=_q.param_bytes(params),
+                     at_rest_bytes=_q.quant_bytes(params,
+                                                  min_size=self.min_size))
+        old = self._slots.get(model_id)
+        if old is not None and old.resident:
+            self._resident_total -= old.resident_bytes
+            self._lru.pop(model_id, None)
+        self._slots[model_id] = slot          # the atomic publish
+        self._lru[model_id] = None
+        self._resident_total += slot.resident_bytes
+        self._group_cache.clear()
+        self._evict_to_budget(pinned=frozenset((model_id,)))
+
+    def set_budget(self, resident_bytes: Optional[int]) -> None:
+        """Re-bound the resident footprint (None = unbounded), evicting
+        LRU-oldest tenants to fit."""
+        self.budget = resident_bytes
+        self._evict_to_budget(pinned=frozenset())
+
+    # ---------------------------------------------------------- residency
+
+    def _evict_to_budget(self, pinned: frozenset) -> None:
+        if self.budget is None:
+            return
+        for mid in list(self._lru):
+            if self._resident_total <= self.budget:
+                return
+            if mid not in pinned:
+                self.evict(mid)
+
+    def evict(self, model_id) -> None:
+        """Demote a tenant to the int8 at-rest form, reusing the cached
+        payload when one exists (so repeated round-trips are free and
+        bit-identical)."""
+        slot = self._slots[model_id]
+        if not slot.resident:
+            return
+        qparams = slot.qparams
+        if qparams is None:
+            qparams = _q.quantize_params(slot.params,
+                                         min_size=self.min_size)
+        self._resident_total -= slot.resident_bytes
+        self._lru.pop(model_id, None)
+        self._slots[model_id] = slot._replace(params=None, qparams=qparams,
+                                              resident_bytes=0)
+
+    def admit(self, model_id) -> None:
+        """Promote a tenant back to residency: dequantize the at-rest
+        payload (keeping it cached for the next eviction) and restore the
+        fleet's resident dtypes from the template signature."""
+        slot = self._slots[model_id]
+        if slot.resident:
+            self._lru.move_to_end(model_id)
+            return
+        params = _q.dequantize_params(slot.qparams, dtype=jnp.float32)
+        tp = self._template_params()
+        params = jax.tree.map(
+            lambda p, t: p.astype(t.dtype)
+            if hasattr(p, "dtype") and hasattr(t, "dtype")
+            and p.dtype != t.dtype else p,
+            params, tp)
+        nbytes = _q.param_bytes(params)
+        self._slots[model_id] = slot._replace(params=params,
+                                              resident_bytes=nbytes)
+        self._lru[model_id] = None
+        self._resident_total += nbytes
+        self._evict_to_budget(pinned=frozenset((model_id,)))
+
+    # ------------------------------------------------------------- access
+
+    def params_of(self, model_id) -> Tuple[int, NamedTuple]:
+        """(generation, resident params) for one tenant, admitting it
+        first if evicted and touching the LRU."""
+        if model_id not in self._slots:
+            raise KeyError(f"model {model_id!r} is not registered")
+        self.admit(model_id)
+        slot = self._slots[model_id]
+        self._lru.move_to_end(model_id)
+        return slot.generation, slot.params
+
+    def group(self, model_ids: Sequence[Any]
+              ) -> Tuple[NamedTuple, Tuple[int, ...]]:
+        """(stacked params (G, ...), per-tenant generations) for one
+        grouped launch.  Every member is admitted and PINNED for the
+        duration (budget-driven eviction skips group members, so the
+        stack never reads a half-evicted tenant).  The stacked pytree is
+        cached keyed on (ids, generations) — a hot-swap bumps a
+        generation and naturally misses."""
+        ids = tuple(model_ids)
+        assert ids, "group() needs at least one model id"
+        for mid in ids:
+            if mid not in self._slots:
+                raise KeyError(f"model {mid!r} is not registered")
+        pinned = frozenset(ids)
+        # admit with the budget suspended: per-member admission must not
+        # evict a group member admitted a moment earlier — the whole
+        # group is pinned and the budget is enforced once below
+        budget, self.budget = self.budget, None
+        try:
+            for mid in ids:
+                if not self._slots[mid].resident:
+                    self.admit(mid)
+        finally:
+            self.budget = budget
+        gens = tuple(self._slots[mid].generation for mid in ids)
+        for mid in ids:
+            self._lru.move_to_end(mid)
+        self._evict_to_budget(pinned=pinned)
+        key = (ids, gens)
+        stacked = self._group_cache.get(key)
+        if stacked is None:
+            stacked = _est.stack_params(
+                [self._slots[mid].params for mid in ids])
+            self._group_cache[key] = stacked
+            while len(self._group_cache) > self._group_cache_entries:
+                self._group_cache.popitem(last=False)
+        else:
+            self._group_cache.move_to_end(key)
+        return stacked, gens
+
+    # ------------------------------------------------------------- engine
+
+    def make_engine(self, **engine_kw):
+        """A ``NonNeuralServeEngine`` over the fleet template — the engine
+        that compiles the grouped launch path (``warmup_groups`` /
+        ``classify_group``) this store's groups feed."""
+        from repro.serving.engine import NonNeuralServeEngine
+        return NonNeuralServeEngine(self.template, **engine_kw)

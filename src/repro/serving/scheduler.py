@@ -55,7 +55,8 @@ class _Pending:
     x: np.ndarray              # (d,) query row
     submit_tick: int
     deadline: Optional[int]    # relative ticks, None = no SLO
-    cache_key: Optional[bytes]
+    cache_key: Optional[Any]   # (engine/tenant fingerprint, dtype, bytes)
+    model_id: Any = None       # tenant routing key (store-mode schedulers)
 
 
 class ServingStats:
@@ -63,10 +64,17 @@ class ServingStats:
 
     Percentiles use the nearest-rank definition (sorted latencies,
     ``ceil(q * n)``-th value) so a hand-computed trace matches exactly.
+
+    ``latencies`` holds SERVED requests only: cache hits complete with
+    ``queue_time=0`` by construction, and mixing those zeros into the
+    percentile pool deflates p50/p95/p99 under repeated-query traffic —
+    the SLO a served request experiences is independent of how many
+    lookups the cache absorbed.  Hit traffic is reported separately
+    through ``hit_rate`` (hits still count into ``completed``).
     """
 
     def __init__(self):
-        self.latencies: List[int] = []     # ticks, per completed request
+        self.latencies: List[int] = []     # ticks, per SERVED request
         self.completed = 0
         self.cache_hits = 0
         self.deadline_misses = 0
@@ -89,12 +97,18 @@ class ServingStats:
 
     def observe(self, r: RequestResult) -> None:
         self.completed += 1
-        self.latencies.append(r.queue_time)
         self.cache_hits += r.cache_hit
         self.deadline_misses += r.deadline_missed
+        if not r.cache_hit:
+            self.latencies.append(r.queue_time)
+
+    @property
+    def served(self) -> int:
+        """Requests that went through a launch (completed minus hits)."""
+        return self.completed - self.cache_hits
 
     def percentile(self, q: float) -> float:
-        """Nearest-rank percentile of request latency, in ticks."""
+        """Nearest-rank percentile of SERVED-request latency, in ticks."""
         if not self.latencies:
             return float("nan")
         vals = sorted(self.latencies)
@@ -123,6 +137,7 @@ class ServingStats:
     def summary(self) -> Dict[str, float]:
         return {
             "completed": self.completed,
+            "served": self.served,
             "ticks": self.ticks,
             "launches": self.launches,
             "p50": self.percentile(0.50),
@@ -143,20 +158,39 @@ class RequestScheduler:
         once the oldest pending request has waited that many ticks (or the
         queue already fills ``max_batch``), otherwise it keeps coalescing.
       * ``max_batch`` — cap on requests per launch (default: the engine's).
-      * ``cache_size`` — optional LRU result cache keyed on the query's
-        bytes, for repeated-query traffic (0 = off).
+      * ``cache_size`` — optional LRU result cache keyed on (engine or
+        (tenant, generation) fingerprint, query dtype, query bytes), for
+        repeated-query traffic (0 = off).  Raw query bytes alone are NOT
+        the key: identical queries against different models/policies must
+        never cross-hit, and a tenant hot-swap (generation bump) must
+        invalidate its stale entries.
+      * ``store`` — a ``serving.model_store.ModelStore`` turns this into a
+        multi-tenant scheduler: ``submit(x, model_id=...)`` routes on
+        (model_id, bucket) and one drain coalesces requests ACROSS
+        tenants into a single (model-group x bucket) vmapped launch
+        (``engine.classify_group``), with per-tenant ``ServingStats`` in
+        ``tenant_stats``.
 
     The engine must be warmed first (``engine.warmup_buckets(d)`` /
-    ``engine.warmup(X)``): drains coalesce ONLY into ``engine.warmed``
-    buckets, so a steady-state stream never triggers a jit compile.
+    ``engine.warmup(X)``; store mode: ``engine.warmup_groups``): drains
+    coalesce ONLY into warmed buckets / (group, bucket) cells, so a
+    steady-state stream never triggers a jit compile.
     """
 
     def __init__(self, engine: NonNeuralServeEngine, *, max_wait: int = 4,
                  max_batch: Optional[int] = None, cache_size: int = 0,
-                 timer: Optional[StepTimer] = None, host: int = 0):
-        assert engine.warmed, \
-            "warm the engine first (engine.warmup_buckets(d)) — the " \
-            "scheduler only coalesces into already-compiled buckets"
+                 timer: Optional[StepTimer] = None, host: int = 0,
+                 store=None):
+        self.store = store
+        if store is None:
+            assert engine.warmed, \
+                "warm the engine first (engine.warmup_buckets(d)) — the " \
+                "scheduler only coalesces into already-compiled buckets"
+        else:
+            assert engine.warmed_groups, \
+                "warm the grouped cells first (engine.warmup_groups) — " \
+                "tenant drains only coalesce into already-compiled " \
+                "(group, bucket) cells"
         self.engine = engine
         self.max_wait = int(max_wait)
         self.max_batch = min(int(max_batch or engine.max_batch),
@@ -170,14 +204,21 @@ class RequestScheduler:
         # non-pow2 mesh the top bucket may legitimately exceed max_batch
         cap = self.max_batch + (-self.max_batch) % engine.n_shards
         self.warmed = frozenset(b for b in engine.warmed if b <= cap)
-        assert self.warmed, (engine.warmed, self.max_batch)
+        self.warmed_groups = frozenset(
+            (g, b) for g, b in engine.warmed_groups if b <= cap)
+        if store is None:
+            assert self.warmed, (engine.warmed, self.max_batch)
+        else:
+            assert self.warmed_groups, (engine.warmed_groups,
+                                        self.max_batch)
         self.cache_size = int(cache_size)
-        self._cache: "OrderedDict[bytes, Any]" = OrderedDict()
+        self._cache: "OrderedDict[Any, Any]" = OrderedDict()
         self.timer = timer or StepTimer()
         self.host = host
         self.tick = 0
         self.queue: Deque[_Pending] = deque()
         self.stats = ServingStats()
+        self.tenant_stats: Dict[Any, ServingStats] = {}
         self.results: Dict[int, RequestResult] = {}
         self.events: List[tuple] = []      # straggler escalations per drain
         self._next_id = 0
@@ -188,10 +229,33 @@ class RequestScheduler:
     def pending(self) -> int:
         return len(self.queue)
 
-    def _submit_one(self, row: np.ndarray, deadline: Optional[int]) -> int:
+    def _cache_key(self, row: np.ndarray, model_id) -> Optional[tuple]:
+        """Result-cache key: raw query bytes are NOT enough — identical
+        bytes against a different model, dtype, or policy are a different
+        computation (the pre-fix key cross-hit them).  Single-model
+        schedulers fold in the engine fingerprint (algorithm, policy,
+        engine identity); tenant schedulers fold in (model_id,
+        generation), so a hot-swap's generation bump invalidates every
+        stale entry for free."""
+        if not self.cache_size:
+            return None
+        if model_id is None:
+            fp = self.engine.cache_fingerprint
+        else:
+            fp = ("tenant", model_id, self.store.generation(model_id))
+        return (fp, row.dtype.str, row.tobytes())
+
+    def _tenant_stats(self, model_id) -> ServingStats:
+        st = self.tenant_stats.get(model_id)
+        if st is None:
+            st = self.tenant_stats[model_id] = ServingStats()
+        return st
+
+    def _submit_one(self, row: np.ndarray, deadline: Optional[int],
+                    model_id=None) -> int:
         rid = self._next_id
         self._next_id += 1
-        key = row.tobytes() if self.cache_size else None
+        key = self._cache_key(row, model_id)
         if key is not None and key in self._cache:
             self._cache.move_to_end(key)
             pred, aux = self._cache[key]
@@ -200,21 +264,35 @@ class RequestScheduler:
                                 deadline_missed=False, cache_hit=True)
             self.results[rid] = res
             self.stats.observe(res)
+            if model_id is not None:
+                self._tenant_stats(model_id).observe(res)
             return rid
         self.queue.append(_Pending(request_id=rid, x=row,
                                    submit_tick=self.tick,
-                                   deadline=deadline, cache_key=key))
+                                   deadline=deadline, cache_key=key,
+                                   model_id=model_id))
         return rid
 
-    def submit(self, x, deadline: Optional[int] = None):
+    def submit(self, x, deadline: Optional[int] = None, model_id=None):
         """Enqueue one query (``(d,)`` -> request id) or a small batch
         (``(B, d)`` -> list of ids).  ``deadline`` is an SLO in drain
         ticks relative to now; a request completing later than that is
-        counted as a deadline miss (it is still served)."""
+        counted as a deadline miss (it is still served).  ``model_id``
+        routes to one of a store-mode scheduler's tenants."""
+        if self.store is not None:
+            if model_id is None:
+                raise ValueError("tenant scheduler: submit(x, model_id=...) "
+                                 "— every request routes to one tenant")
+            if model_id not in self.store:
+                raise KeyError(f"model {model_id!r} is not registered in "
+                               f"the store")
+        elif model_id is not None:
+            raise ValueError("model_id routing needs a store= scheduler "
+                             "(RequestScheduler(engine, store=...))")
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
-            return self._submit_one(x, deadline)
-        return [self._submit_one(row, deadline) for row in x]
+            return self._submit_one(x, deadline, model_id)
+        return [self._submit_one(row, deadline, model_id) for row in x]
 
     # ------------------------------------------------------------- drain
 
@@ -230,7 +308,11 @@ class RequestScheduler:
 
     def drain(self, force: bool = False) -> List[RequestResult]:
         """One scheduler tick: coalesce + launch if the window expired (or
-        ``force``), else keep coalescing.  Returns completed requests."""
+        ``force``), else keep coalescing.  Returns completed requests.
+        Store-mode schedulers coalesce ACROSS tenants into one
+        (model-group x bucket) vmapped launch instead."""
+        if self.store is not None:
+            return self._drain_grouped(force)
         self.tick += 1
         self.stats.observe_tick()
         if not self.queue:
@@ -281,6 +363,104 @@ class RequestScheduler:
             out.append(r)
         return out
 
+    def _drain_grouped(self, force: bool) -> List[RequestResult]:
+        """Multi-tenant drain: walk the queue FIFO, bucketing requests by
+        tenant (at most the largest warmed group of tenants, at most the
+        largest warmed bucket of rows per tenant — the overflow defers to
+        the next drain, backpressure), snapshot the model group from the
+        store (generation-consistent: an update() racing this drain either
+        lands entirely before the snapshot or entirely after), and run ONE
+        vmapped (model-group x bucket) launch."""
+        self.tick += 1
+        self.stats.observe_tick()
+        for st in self.tenant_stats.values():
+            st.observe_tick()
+        if not self.queue:
+            return []
+        ready = (force
+                 or len(self.queue) >= self.max_batch
+                 or self.tick - self.queue[0].submit_tick >= self.max_wait)
+        if not ready:
+            return []
+        gmax = max(g for g, _ in self.warmed_groups)
+        bmax = max(b for _, b in self.warmed_groups)
+        budget = min(len(self.queue), self.max_batch)
+        taken_by: "OrderedDict[Any, List[_Pending]]" = OrderedDict()
+        deferred: List[_Pending] = []
+        count = 0
+        while self.queue and count < budget:
+            p = self.queue.popleft()
+            rows = taken_by.get(p.model_id)
+            if rows is None:
+                if len(taken_by) >= gmax:
+                    deferred.append(p)
+                    continue
+                rows = taken_by[p.model_id] = []
+            if len(rows) >= bmax:
+                deferred.append(p)
+                continue
+            rows.append(p)
+            count += 1
+        # deferred requests are older than everything still queued: back
+        # to the front, original order preserved
+        self.queue.extendleft(reversed(deferred))
+        ids = list(taken_by)
+        g = len(ids)
+        gb = min(gg for gg, _ in self.warmed_groups if gg >= g)
+        maxc = max(len(rows) for rows in taken_by.values())
+        covering = sorted(b for gg, b in self.warmed_groups
+                          if gg == gb and b >= maxc)
+        bucket = covering[0] if covering else \
+            max(b for gg, b in self.warmed_groups if gg == gb)
+        # pad the group by repeating tenant 0 — same compiled cell, and
+        # the padded lanes' all-zero rows are sliced off below
+        padded_ids = ids + [ids[0]] * (gb - g)
+        stacked, _gens = self.store.group(padded_ids)
+        d = taken_by[ids[0]][0].x.shape[0]
+        Xg = np.zeros((gb, bucket, d), np.float32)
+        for gi, mid in enumerate(ids):
+            for bi, p in enumerate(taken_by[mid]):
+                Xg[gi, bi] = p.x
+        t0 = time.perf_counter()
+        res = self.engine.classify_group(stacked, Xg)
+        jax.block_until_ready(res.classes)
+        batch_time = time.perf_counter() - t0
+
+        verdict = self.timer.record(self.host, batch_time)
+        if verdict.action != "ok":
+            self.events.append((verdict.action, self.tick, verdict.ratio))
+        # global occupancy is valid rows over the whole launch footprint
+        # (group lanes x bucket rows) — the multi-tenant analogue of the
+        # paper's §5.3 core-utilization accounting
+        self.stats.observe_launch(gb * bucket, count, batch_time)
+
+        classes = np.asarray(res.classes)
+        aux = np.asarray(res.aux)
+        out = []
+        for gi, mid in enumerate(ids):
+            rows = taken_by[mid]
+            tstats = self._tenant_stats(mid)
+            tstats.observe_launch(bucket, len(rows), batch_time)
+            for bi, p in enumerate(rows):
+                queue_time = self.tick - p.submit_tick
+                missed = p.deadline is not None and queue_time > p.deadline
+                r = RequestResult(request_id=p.request_id,
+                                  prediction=classes[gi, bi],
+                                  aux=aux[gi, bi], queue_time=queue_time,
+                                  batch_time=batch_time, bucket=bucket,
+                                  deadline_missed=missed)
+                self.results[p.request_id] = r
+                self.stats.observe(r)
+                tstats.observe(r)
+                if p.cache_key is not None:
+                    self._cache[p.cache_key] = (classes[gi, bi].copy(),
+                                                aux[gi, bi].copy())
+                    self._cache.move_to_end(p.cache_key)
+                    while len(self._cache) > self.cache_size:
+                        self._cache.popitem(last=False)
+                out.append(r)
+        return out
+
     def flush(self) -> List[RequestResult]:
         """Drain until the queue is empty (end-of-trace)."""
         out: List[RequestResult] = []
@@ -299,17 +479,20 @@ def poisson_trace(rate: float, ticks: int, seed: int = 0) -> np.ndarray:
 
 
 def replay_trace(scheduler: RequestScheduler, queries: np.ndarray,
-                 counts, *, deadline: Optional[int] = None) -> List[int]:
+                 counts, *, deadline: Optional[int] = None,
+                 model_ids=None) -> List[int]:
     """Open-loop replay: at each tick submit ``counts[t]`` queries (cycling
     the rows of ``queries``) then drain once; flush the tail at the end.
-    Returns the request ids in submission order."""
+    ``model_ids`` (store-mode schedulers) cycles tenants round-robin over
+    the arrivals.  Returns the request ids in submission order."""
     queries = np.asarray(queries, np.float32)
     ids: List[int] = []
     i = 0
     for c in counts:
         for _ in range(int(c)):
+            mid = model_ids[i % len(model_ids)] if model_ids else None
             ids.append(scheduler.submit(queries[i % len(queries)],
-                                        deadline=deadline))
+                                        deadline=deadline, model_id=mid))
             i += 1
         scheduler.drain()
     scheduler.flush()

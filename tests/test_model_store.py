@@ -1,0 +1,436 @@
+"""Multi-tenant model zoo (serving/model_store.py + the grouped engine
+path): the grouped vmapped launch must stay bit-equal per tenant to the
+per-model loop (fp32 AND after an int8 at-rest round-trip), LRU
+evict/admit round-trips must be deterministic, a hot-swap must never
+publish a torn pytree mid-stream, and the three shared-state serving
+bugs this subsystem flushed out must stay fixed:
+
+  * engine policy="int8" used to MUTATE the caller's estimator in place
+    (``test_engine_policy_does_not_mutate_shared_estimator``),
+  * the scheduler result cache used to key on raw query bytes only and
+    cross-hit tenants (``test_cache_no_cross_tenant_hit``),
+  * ServingStats used to mix cache-hit queue_time=0 into the latency
+    percentile pool (``test_stats_exclude_cache_hits_from_percentiles``).
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.serving import (
+    ModelStore,
+    NonNeuralServeEngine,
+    RequestScheduler,
+    poisson_trace,
+    replay_trace,
+)
+
+ALGOS = ("knn", "kmeans", "gnb", "gmm", "rf")
+D, NC = 9, 3
+
+
+def _fit(algo, seed, n=64, d=D):
+    X, y = synth_blobs(n=n, d=d, n_class=NC, seed=seed)
+    return E.make_fitted(algo, X, y, n_groups=NC)
+
+
+def _store(algo, G, n=64, d=D):
+    store = ModelStore()
+    for t in range(G):
+        store.register(t, _fit(algo, seed=t, n=n, d=d))
+    return store
+
+
+def _queries(G, B, d=D):
+    return np.stack([synth_blobs(n=B, d=d, n_class=NC, seed=100 + t)[0]
+                     for t in range(G)])
+
+
+# --------------------------------------------------- grouped conformance
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("at_rest", [False, True],
+                         ids=["fp32", "int8-roundtrip"])
+def test_grouped_launch_bit_equal_to_loop(algo, at_rest):
+    """One vmapped (G, B) launch == G per-model jitted launches, lane for
+    lane and bit for bit — for resident fp32 params and for params that
+    went through the int8 at-rest evict/admit round-trip."""
+    G, B = 3, 5                       # non-pow2 G and B: both pads active
+    store = _store(algo, G)
+    if at_rest:
+        for t in range(G):
+            store.evict(t)
+        assert store.stats()["n_resident"] == 0
+    engine = store.make_engine(max_batch=8, max_group=4)
+    Xg = _queries(G, B)
+    stacked, gens = store.group(list(range(G)))
+    res = engine.classify_group(stacked, Xg)
+    assert res.classes.shape == (G, B)
+    jfn = jax.jit(store.template.predict_batch_fn())
+    for t in range(G):
+        cls, aux = jfn(store.params_of(t)[1], jnp.asarray(Xg[t]))
+        assert jnp.array_equal(res.classes[t], cls), (algo, t)
+        assert jnp.array_equal(res.aux[t], aux), (algo, t)
+
+
+def test_grouped_microbatches_along_query_axis():
+    """B beyond max_batch splits into per-chunk grouped launches; the
+    stitched result still matches the loop."""
+    G, B = 4, 11                      # chunks of 4: 4 + 4 + 3(pad to 4)
+    store = _store("gnb", G)
+    engine = store.make_engine(max_batch=4, max_group=G)
+    Xg = _queries(G, B)
+    stacked, _ = store.group(list(range(G)))
+    res = engine.classify_group(stacked, Xg)
+    assert res.launches == 3
+    jfn = jax.jit(store.template.predict_batch_fn())
+    for t in range(G):
+        cls, _aux = jfn(store.params_of(t)[1], jnp.asarray(Xg[t]))
+        assert jnp.array_equal(res.classes[t], cls)
+
+
+def test_rf_node_capacity_grows_with_new_tenants():
+    """Forests fit on different data disagree on node counts; the store
+    normalizes every slot to the fleet capacity (pad_nodes) and the
+    padded lanes stay bit-equal to their own un-padded predictions."""
+    store = ModelStore()
+    small, big = _fit("rf", seed=0, n=32), _fit("rf", seed=1, n=256)
+    assert small.params.feature.shape[1] != big.params.feature.shape[1]
+    store.register(0, small)
+    store.register(1, big)            # grows capacity, re-pads slot 0
+    cap = max(small.params.feature.shape[1], big.params.feature.shape[1])
+    stacked, _ = store.group([0, 1])
+    assert stacked.feature.shape[1:] == (2, cap)[1:] or \
+        stacked.feature.shape == (2, small.params.feature.shape[0], cap)
+    engine = store.make_engine(max_batch=8, max_group=2)
+    Xg = _queries(2, 6)
+    res = engine.classify_group(stacked, Xg)
+    for t, est in enumerate((small, big)):
+        cls, _ = jax.jit(est.predict_batch_fn())(est.params,
+                                                 jnp.asarray(Xg[t]))
+        assert jnp.array_equal(res.classes[t], cls), t
+
+
+# ----------------------------------------------------------- validation
+
+
+def test_store_validation_errors():
+    store = _store("gnb", 2)
+    with pytest.raises(ValueError, match="already registered"):
+        store.register(0, _fit("gnb", seed=9))
+    with pytest.raises(ValueError, match="one ModelStore serves one"):
+        store.register(9, _fit("knn", seed=9))
+    with pytest.raises(KeyError):
+        store.params_of("nope")
+    with pytest.raises(KeyError):
+        store.update("nope", _fit("gnb", seed=9))
+    with pytest.raises(KeyError):
+        store.group([0, "nope"])
+
+
+def test_ann_refuses_grouped_serving():
+    """ANN params are ragged per fit (IVF list capacities, PQ shapes), so
+    the store must refuse at registration, not at the first launch."""
+    X, y = synth_blobs(n=128, d=D, n_class=NC, seed=0)
+    ann = E.make_fitted("ann", X, y, n_groups=NC)
+    with pytest.raises(NotImplementedError, match="grouped"):
+        ModelStore().register(0, ann)
+
+
+def test_mismatched_leaf_shapes_raise_with_leaf_path():
+    store = _store("knn", 1, n=64)
+    bad = _fit("knn", seed=5, n=96)   # different reference-set size
+    with pytest.raises(ValueError, match=r"\.A|A\b"):
+        store.register(1, bad)
+
+
+# ------------------------------------------------------------ residency
+
+
+def test_lru_evicts_oldest_and_admit_restores_bit_identical():
+    store = _store("gnb", 3)
+    full = store.stats()["resident_bytes"]
+    p_before = {t: jax.tree.map(np.asarray, store.params_of(t)[1])
+                for t in range(3)}
+    # touch order 0, 1, 2 -> 0 is LRU-oldest; budget for 2 of 3
+    store.set_budget(full * 2 // 3 + 4)
+    assert store.resident_ids == [1, 2]
+    st = store.stats()
+    assert st["n_resident"] == 2 and st["at_rest_bytes"] > 0
+    # access admits + evicts deterministically (1 is now oldest)
+    _, p0 = store.params_of(0)
+    assert store.resident_ids == [2, 0]
+    # the round-trip is the identity on the int8 lattice: evicting again
+    # reuses the cached at-rest payload, and a second admission
+    # reproduces the same fp32 params bit for bit
+    store.evict(0)
+    _, p0b = store.params_of(0)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p0b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # dtypes/shapes survive the round-trip exactly
+    for (ka, a), (kb, b) in zip(p_before[0]._asdict().items(),
+                                p0b._asdict().items()):
+        assert np.asarray(b).dtype == a.dtype and \
+            np.asarray(b).shape == a.shape, ka
+
+
+def test_group_pins_members_against_budget_eviction():
+    """group() must never return a half-evicted stack: members are pinned
+    during admission even when the group alone overflows the budget."""
+    store = _store("gnb", 4)
+    per = store.stats()["resident_bytes"] // 4
+    store.set_budget(per * 2 + 4)     # room for ~2 tenants
+    stacked, gens = store.group([0, 1, 2, 3])
+    assert stacked.mu.shape[0] == 4 and gens == (0, 0, 0, 0)
+    jfn = jax.jit(store.template.predict_batch_fn())
+    Xg = _queries(4, 4)
+    engine = store.make_engine(max_batch=4, max_group=4)
+    res = engine.classify_group(stacked, Xg)
+    for t in range(4):
+        cls, _ = jfn(store.params_of(t)[1], jnp.asarray(Xg[t]))
+        assert jnp.array_equal(res.classes[t], cls), t
+
+
+# ------------------------------------------------------------- hot-swap
+
+
+def test_hot_swap_bumps_generation_and_invalidates_group():
+    store = _store("gnb", 2)
+    s0, g0 = store.group([0, 1])
+    refit = _fit("gnb", seed=77)
+    assert store.update(1, refit) == 1
+    assert store.generation(1) == 1 and store.generation(0) == 0
+    s1, g1 = store.group([0, 1])
+    assert g0 == (0, 0) and g1 == (0, 1)
+    # lane 1 now serves the refit params; lane 0 untouched
+    assert np.array_equal(np.asarray(s1.mu[1]),
+                          np.asarray(refit.params.mu))
+    assert np.array_equal(np.asarray(s1.mu[0]), np.asarray(s0.mu[0]))
+
+
+def test_hot_swap_under_stream_no_torn_launch():
+    """Refits land mid-stream: every completed request's prediction must
+    match SOME published generation of its tenant (submit-time or later)
+    — a torn pytree (half old-gen, half new-gen leaves) would predict
+    with params no generation ever published.  Launches must also stay
+    inside the warmed (group, bucket) cells."""
+    G = 4
+    store = _store("gnb", G)
+    engine = store.make_engine(max_batch=4, max_group=G)
+    engine.warmup_groups(store.group(list(range(G)))[0], D)
+    sched = RequestScheduler(engine, max_wait=2, cache_size=0, store=store)
+    X = synth_blobs(n=64, d=D, n_class=NC, seed=9)[0]
+    jfn = jax.jit(store.template.predict_batch_fn())
+    # snapshot every generation's params as it is published
+    gen_params = {mid: {0: store.params_of(mid)[1]} for mid in range(G)}
+    rid_info = {}                     # rid -> (mid, submit-gen, row)
+    rng = np.random.default_rng(3)
+    for step in range(12):
+        for _ in range(int(rng.integers(1, 5))):
+            mid = int(rng.integers(0, G))
+            row = X[int(rng.integers(0, 64))]
+            rid = sched.submit(row, model_id=mid)
+            rid_info[rid] = (mid, store.generation(mid), row)
+        if step in (4, 8):            # hot-swap tenant 1 mid-stream
+            gen = store.update(1, _fit("gnb", seed=50 + step))
+            gen_params[1][gen] = store.params_of(1)[1]
+        sched.drain()
+    while sched.pending:
+        sched.drain(force=True)
+    assert set(engine.group_launches) <= engine.warmed_groups
+    assert store.generation(1) == 2
+    assert len(sched.results) == len(rid_info)
+    for rid, res in sched.results.items():
+        mid, gen0, row = rid_info[rid]
+        preds = {int(jfn(p, jnp.asarray(row[None]))[0][0])
+                 for g, p in gen_params[mid].items() if g >= gen0}
+        assert int(res.prediction) in preds, (rid, mid, gen0)
+
+
+def test_hot_swap_serves_new_params_after_swap():
+    """Deterministic half of the stream property: requests submitted and
+    drained entirely AFTER the swap serve the refit params."""
+    G = 2
+    store = _store("gnb", G)
+    engine = store.make_engine(max_batch=4, max_group=G)
+    engine.warmup_groups(store.group([0, 1])[0], D)
+    sched = RequestScheduler(engine, max_wait=1, cache_size=0, store=store)
+    q = synth_blobs(n=1, d=D, n_class=NC, seed=9)[0][0]
+    refit = _fit("gnb", seed=123)
+    store.update(0, refit)
+    rid = sched.submit(q, model_id=0)
+    sched.drain(); sched.drain(force=True)
+    cls, _ = jax.jit(refit.predict_batch_fn())(refit.params,
+                                               jnp.asarray(q[None]))
+    assert int(sched.results[rid].prediction) == int(cls[0])
+    assert set(engine.group_launches) <= engine.warmed_groups
+
+
+# ----------------------------------------------- S1: aliasing regression
+
+
+def test_engine_policy_does_not_mutate_shared_estimator():
+    """Regression (pre-fix failure): ``NonNeuralServeEngine(est,
+    policy="int8")`` called ``estimator.quantize()`` IN PLACE, so a
+    second engine sharing the estimator silently served int8 params —
+    this test failed before the engine switched to an engine-local
+    ``quantized_copy()`` (est.quantized flipped True and the fp32
+    engine's params came back QuantTensor-typed)."""
+    est = _fit("gnb", seed=0)
+    p_before = jax.tree.map(np.asarray, est.params)
+    eng8 = NonNeuralServeEngine(est, policy="int8", max_batch=8)
+    # the caller's estimator is untouched...
+    assert not est.quantized
+    for a, b in zip(jax.tree.leaves(p_before), jax.tree.leaves(est.params)):
+        assert np.array_equal(a, np.asarray(b))
+    # ...the int8 engine owns a quantized copy...
+    assert eng8.estimator.quantized and eng8.estimator is not est
+    assert eng8.quant_report["bytes_int8"] > 0
+    # ...and a second, fp32 engine on the SAME estimator serves fp32
+    engf = NonNeuralServeEngine(est, max_batch=8)
+    assert not engf.estimator.quantized
+    X = synth_blobs(n=8, d=D, n_class=NC, seed=5)[0]
+    ref_cls, _ = jax.jit(est.predict_batch_fn())(est.params,
+                                                 jnp.asarray(X))
+    engf.warmup(X)
+    assert jnp.array_equal(engf.classify(X).classes, ref_cls)
+
+
+def test_int8_engine_idempotent_on_prequantized_estimator():
+    est = _fit("gnb", seed=0).quantized_copy()
+    eng = NonNeuralServeEngine(est, policy="int8", max_batch=8)
+    assert eng.estimator is est       # already at rest: no second copy
+    assert eng.quant_report["bytes_fp32"] > 0
+
+
+# ----------------------------------- S2: cache-poisoning regression
+
+
+def test_cache_no_cross_tenant_hit():
+    """Regression (pre-fix failure): the result cache keyed on raw
+    ``row.tobytes()`` only, so the same query bytes submitted against a
+    DIFFERENT tenant returned the first tenant's cached prediction.  The
+    key now folds in (model_id, generation) + dtype; this test cross-hit
+    (res1.cache_hit was True, serving tenant 0's label for tenant 1)
+    before the fix."""
+    store = ModelStore()
+    X, y = synth_blobs(n=64, d=D, n_class=NC, seed=0)
+    store.register(0, E.make_fitted("gnb", X, y, n_groups=NC))
+    yp = (y + 1) % NC                 # permuted labels: disagreeing fits
+    store.register(1, E.make_fitted("gnb", X, yp, n_groups=NC))
+    engine = store.make_engine(max_batch=4, max_group=2)
+    engine.warmup_groups(store.group([0, 1])[0], D)
+    sched = RequestScheduler(engine, max_wait=1, cache_size=16, store=store)
+    q = X[0]
+
+    def run(mid):
+        rid = sched.submit(q, model_id=mid)
+        sched.drain(); sched.drain(force=True)
+        return sched.results[rid]
+
+    r0 = run(0)
+    r0b = run(0)
+    r1 = run(1)
+    assert not r0.cache_hit and r0b.cache_hit       # same tenant: hits
+    assert not r1.cache_hit                          # other tenant: MISS
+    # and the predictions really are tenant 1's, not tenant 0's replayed
+    p1 = store.params_of(1)[1]
+    cls1, _ = jax.jit(store.template.predict_batch_fn())(
+        p1, jnp.asarray(q[None]))
+    assert int(r1.prediction) == int(cls1[0])
+    assert int(r1.prediction) != int(r0.prediction)  # permuted labels
+
+
+def test_cache_no_cross_engine_hit_single_model():
+    """Single-model flavour of the same bug: two schedulers over engines
+    with different policies must not share entries even for identical
+    query bytes (the engine fingerprint is part of the key)."""
+    est = _fit("gnb", seed=0)
+    e1 = NonNeuralServeEngine(est, max_batch=8)
+    e2 = NonNeuralServeEngine(est, policy="int8", max_batch=8)
+    assert e1.cache_fingerprint != e2.cache_fingerprint
+
+
+# --------------------------------------- S3: SLO-skew regression
+
+
+def test_stats_exclude_cache_hits_from_percentiles():
+    """Regression (pre-fix failure): cache hits complete with
+    queue_time=0 and were appended to the latency pool, so a
+    repeated-query trace deflated p50 toward 0 while real served
+    requests waited the full coalescing window.  Hand-computed trace:
+    two served requests wait exactly 2 ticks each, three cache hits
+    land between them — pre-fix p50 was 0.0, post-fix p50 == 2.0 with
+    the hits reported via hit_rate/served instead."""
+    store = _store("gnb", 1)
+    engine = store.make_engine(max_batch=4, max_group=1)
+    engine.warmup_groups(store.group([0])[0], D)
+    sched = RequestScheduler(engine, max_wait=2, cache_size=8, store=store)
+    q = synth_blobs(n=1, d=D, n_class=NC, seed=4)[0][0]
+    sched.submit(q, model_id=0)       # served: waits the 2-tick window
+    sched.drain()                     # tick 1: coalescing
+    sched.drain()                     # tick 2: launch (queue_time=2)
+    for _ in range(3):                # replays: all cache hits, 0 ticks
+        rid = sched.submit(q, model_id=0)
+        assert sched.results[rid].cache_hit
+    q2 = q + 1.0
+    sched.submit(q2, model_id=0)      # second served request
+    sched.drain()
+    sched.drain()
+    s = sched.stats.summary()
+    assert s["completed"] == 5 and s["served"] == 2
+    assert s["hit_rate"] == pytest.approx(3 / 5)
+    assert sched.stats.latencies == [2, 2]
+    assert s["p50"] == 2.0 and s["p95"] == 2.0    # pre-fix: p50 == 0.0
+    t = sched.tenant_stats[0].summary()
+    assert t["served"] == 2 and t["p50"] == 2.0
+
+
+def test_stats_all_hits_percentile_is_nan_not_zero():
+    """An all-cache-hits window has NO served-latency samples; its p50
+    must read as nan (no data), not the pre-fix 0.0 (fake perfection)."""
+    from repro.serving import ServingStats
+    from repro.serving.scheduler import RequestResult
+    st = ServingStats()
+    st.observe(RequestResult(request_id=0, prediction=0, aux=None,
+                             queue_time=0, batch_time=0.0, bucket=0,
+                             deadline_missed=False, cache_hit=True))
+    assert st.completed == 1 and st.served == 0
+    assert np.isnan(st.percentile(0.5))
+
+
+# ------------------------------------------------- stream conformance
+
+
+def test_tenant_stream_matches_oneshot_grouped():
+    """Every prediction a tenant stream returns equals the one-shot
+    grouped launch for that tenant's params — drains are routing, not
+    recomputation."""
+    G = 4
+    store = _store("kmeans", G)
+    engine = store.make_engine(max_batch=4, max_group=G)
+    engine.warmup_groups(store.group(list(range(G)))[0], D)
+    sched = RequestScheduler(engine, max_wait=2, cache_size=0, store=store)
+    X = synth_blobs(n=32, d=D, n_class=NC, seed=8)[0]
+    counts = poisson_trace(3.0, 10, seed=2)
+    rids = replay_trace(sched, X, counts, model_ids=list(range(G)))
+    assert len(rids) == int(counts.sum())
+    jfn = jax.jit(store.template.predict_batch_fn())
+    # reconstruct the round-robin routing replay_trace used
+    for i, rid in enumerate(rids):
+        mid = i % G
+        row = X[i % len(X)]
+        cls, _ = jfn(store.params_of(mid)[1], jnp.asarray(row[None]))
+        assert int(sched.results[rid].prediction) == int(cls[0]), (i, mid)
+    assert set(engine.group_launches) <= engine.warmed_groups
+    for mid, st in sched.tenant_stats.items():
+        assert st.completed > 0
