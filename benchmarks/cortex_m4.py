@@ -3,11 +3,15 @@
 Sequential ratio = M4 predicted cycles / PULP-FPU predicted cycles;
 parallel ratio adds the 8-core split. Compared against the paper's
 per-kernel Fig. 11 bars.
+
+The M4 is no longer a private comparison: its cost vector is one rung of
+the unified backend-rung table (``fp_backends.analytic_rung_rows``), so
+this module prints its latency+energy row from the SAME builder the
+Fig. 9/Table 2 rungs use, then layers the Fig. 11 speedup ratios on top.
 """
 from __future__ import annotations
 
-import numpy as np
-
+from benchmarks.fp_backends import analytic_rung_rows
 from benchmarks.paper_tables import FIG11_M4, HEADLINE
 from repro.core.amdahl import analyze_parallel
 from repro.core.precision import BACKENDS, PAPER_CENSUSES, predicted_cycles
@@ -25,8 +29,10 @@ def run(csv_rows: list, fitted=None):
     fpu = BACKENDS["fpu"]
     m4 = BACKENDS["cortex-m4"]
     print("\n== Cortex-M4 comparison (paper Fig. 11) ==")
-    print(f"{'kernel':12s} {'seq pred':>9s} {'seq paper':>10s} "
-          f"{'par pred':>9s} {'par paper':>10s}")
+    m4_rows = {r["kernel"]: r for r in analytic_rung_rows(None)
+               if r["rung"] == "cortex-m4"}
+    print(f"{'kernel':12s} {'m4_us':>9s} {'m4_uJ':>8s} {'seq pred':>9s} "
+          f"{'seq paper':>10s} {'par pred':>9s} {'par paper':>10s}")
     for kname in KERNELS:
         pk = PAPER_KEY.get(kname, kname)
         it = ITERS.get(kname, 1.0)
@@ -36,7 +42,9 @@ def run(csv_rows: list, fitted=None):
         par = analyze_parallel(PAPER_CENSUSES[kname], fpu, 8, kernel=kname,
                                iters=it)
         par_ratio = m4_cycles / par.predicted_cycles_n
-        print(f"{kname:12s} {seq_ratio:9.2f} {FIG11_M4['sequential'][pk]:10.2f} "
+        rung = m4_rows[pk]
+        print(f"{kname:12s} {rung['us']:9.1f} {rung['energy_uj']:8.2f} "
+              f"{seq_ratio:9.2f} {FIG11_M4['sequential'][pk]:10.2f} "
               f"{par_ratio:9.2f} {FIG11_M4['parallel'][pk]:10.2f}")
         csv_rows.append((f"cortex_m4/{kname}/sequential", seq_ratio,
                          f"paper={FIG11_M4['sequential'][pk]}"))
@@ -45,6 +53,8 @@ def run(csv_rows: list, fitted=None):
     lo, hi = HEADLINE["m4_sequential_range"]
     print(f"-- paper sequential range {lo}-{hi}x, parallel "
           f"{HEADLINE['m4_parallel_range'][0]}-{HEADLINE['m4_parallel_range'][1]}x")
+    print("-- m4_us/m4_uJ columns come from the unified backend-rung "
+          "table (fp_backends.analytic_rung_rows)")
 
 
 if __name__ == "__main__":

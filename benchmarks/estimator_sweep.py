@@ -35,21 +35,13 @@ def _fit(algo: str, X, y, policy):
     return make_fitted(algo, X, y, n_groups=int(y.max()) + 1, policy=policy)
 
 
-def _hot_path(algo: str, est, bucket: int, d: int) -> str:
+def _hot_path(algo: str, est, bucket: int) -> str:
     """Which registry arm serves this (algorithm, shape)."""
     from repro.kernels import dispatch
-    if algo == "knn":
-        shape_kw = dict(N=est.params.A.shape[0], d=d, Q=bucket, k=est.k)
-    elif algo == "kmeans":
-        shape_kw = dict(N=bucket, d=d, K=est.params.centroids.shape[0])
-    elif algo == "gnb":
-        shape_kw = dict(B=bucket, d=d, C=est.params.mu.shape[0])
-    else:                                      # gmm / rf: ref-only ops
-        shape_kw = {}
-    op = {"knn": "distance_topk", "kmeans": "distance_argmin",
-          "gnb": "scores", "gmm": "responsibilities",
-          "rf": "forest_votes"}[algo]
-    return dispatch.resolve(algo, op, **shape_kw).name
+    return dispatch.resolve(
+        algo, dispatch.HOT_OPS[algo],
+        **dispatch.hot_shape_kw(algo, est.serve_cost_shape(),
+                                bucket)).name
 
 
 def _bench_bucket(engine, X, bucket: int, iters: int) -> float:
@@ -94,15 +86,30 @@ def run(csv_rows: list, quick: bool = False):
             cycles = {b: policy.with_cost_backend(b).estimated_cycles(algo)
                       for b in COST_BACKENDS}
             for bucket in buckets:
+                # profile-then-optimize (paper §5.2): micro-time every
+                # registered arm for this bucket, then serve through the
+                # measured winner — the sweep records both verdicts
+                engine.warmup(np.zeros((bucket, d), np.float32),
+                              autotune=True)
+                arm = engine.tuned.get(engine._bucket(bucket))
                 us_q = _bench_bucket(engine, X, bucket, iters)
-                path = _hot_path(algo, est, bucket, d)
+                path = (arm.path or arm.static_path) if arm is not None \
+                    else _hot_path(algo, est, bucket)
                 rec = {"algorithm": algo, "policy": pname, "bucket": bucket,
                        "path": path, "us_per_query": us_q,
                        "shards": engine.n_shards,
-                       "analytic_cycles": cycles}
+                       "shape": est.serve_cost_shape(),
+                       "analytic_cycles": cycles,
+                       "tuned": None if arm is None else {
+                           "strategy": arm.strategy, "path": arm.path,
+                           "bn": arm.bn, "us": arm.us,
+                           "static_path": arm.static_path,
+                           "static_us": arm.static_us,
+                           "differs": arm.differs}}
                 results.append(rec)
-                print(f"{algo:7s} {pname:7s} {bucket:6d} {path:8s} "
-                      f"{us_q:9.1f} {cycles['libgcc']:14.3e} "
+                tag = "*" if arm is not None and arm.differs else " "
+                print(f"{algo:7s} {pname:7s} {bucket:6d} {path:8s}{tag}"
+                      f"{us_q:8.1f} {cycles['libgcc']:14.3e} "
                       f"{cycles['fpu']:11.3e}")
                 csv_rows.append(
                     (f"estimator_serve/{algo}/{pname}/b{bucket}", us_q,

@@ -1,10 +1,20 @@
-"""Paper Fig. 9 / Table 2 reproduction: FP backend comparison.
+"""Paper Fig. 9 / Table 2 reproduction: FP backend comparison, plus the
+unified backend-rung table (Figs. 9-11 / Tables 2-3 style).
 
 Analytic: per-kernel op censuses x per-backend cost vectors, seeded from the
 literature then refit against the paper's libgcc column only; the OTHER
 columns (RVfplib, FPU) and all cross-backend speedup ratios are then
 predictions. Wall-clock: µs/call of the JAX kernels on this host (validates
 the code runs; says nothing about PULP).
+
+The rung table stacks every representation rung the repo can cost into
+one latency+energy ladder: the four analytic backends (libgcc / rvfplib /
+fpu / cortex-m4, Table-2-refit vectors x op censuses x the
+``paper_tables.BACKEND_ENERGY`` pJ/cycle seeds) above the MEASURED tiers
+from CALIBRATION.json (fp32-ref / fused / bf16 / int8 / grouped us/query
+from the committed sweeps, converted to equivalent cycles through the
+calibration's us_per_cycle scale).  ``benchmarks/report.py
+--paper-tables`` prints the same table from the committed artifacts.
 """
 from __future__ import annotations
 
@@ -14,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.paper_tables import HEADLINE, TABLE2_CYCLES
+from benchmarks.paper_tables import BACKEND_ENERGY, HEADLINE, TABLE2_CYCLES
 from repro.core.precision import (
     BACKENDS,
     PAPER_CENSUSES,
@@ -23,6 +33,11 @@ from repro.core.precision import (
 )
 
 FIT_KERNELS = ("svm", "lr", "gnb", "knn")
+# the unified table's analytic rungs (cortex-m4 is an entry HERE, not a
+# separate benchmark's private comparison) and its per-kernel rows
+ANALYTIC_RUNGS = ("libgcc", "rvfplib", "fpu", "cortex-m4")
+RUNG_KERNELS = ("svm", "lr", "gnb", "knn", "kmeans_iter", "rf")
+RUNG_ITERS = {"kmeans_iter": 40.0}   # Table 2 costs the full 40-iter fit
 
 
 def calibrate():
@@ -60,6 +75,75 @@ def headline_ratios(fitted):
            for k in FIT_KERNELS]
     out["fpu_max_speedup"] = (float(np.max(fpu)), HEADLINE["fpu_max_speedup"])
     return out
+
+
+def analytic_rung_rows(fitted) -> list:
+    """Latency+energy rows for the four analytic backends: Table-2-refit
+    cycles x the BACKEND_ENERGY clock and pJ/cycle seeds."""
+    rows = []
+    for rung in ANALYTIC_RUNGS:
+        vec = fitted.get(rung, BACKENDS[rung]) if fitted else BACKENDS[rung]
+        e = BACKEND_ENERGY[rung]
+        for kname in RUNG_KERNELS:
+            it = RUNG_ITERS.get(kname, 1.0)
+            cycles = predicted_cycles(PAPER_CENSUSES[kname], vec) * it
+            rows.append({
+                "rung": rung, "kernel": kname.replace("_iter", ""),
+                "kind": "analytic", "cycles": cycles,
+                "us": cycles / e["clk_mhz"],
+                "energy_uj": cycles * e["pj_per_cycle"] / 1e6,
+            })
+    return rows
+
+
+def measured_rung_rows(calibration_path=None) -> list:
+    """Latency+energy rows for the MEASURED tiers in CALIBRATION.json:
+    best us/query per (tier, algorithm), converted to equivalent cycles
+    through the calibration's us_per_cycle scale so the measured rungs
+    share an axis with the analytic ones.  Empty when no calibration has
+    been fit yet."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks import report
+
+    path = Path(calibration_path) if calibration_path else report.CALIBRATION
+    if not path.exists():
+        return []
+    entries = report.load_bench(path, "calibration")["entries"]
+    if not entries:
+        return []
+    entry = entries[-1]
+    upc = (entry.get("summary") or {}).get("us_per_cycle")
+    best = {}
+    for r in entry["results"]:
+        key = (r["tier"], r["algorithm"])
+        if key not in best or r["measured_us"] < best[key]["measured_us"]:
+            best[key] = r
+    rows = []
+    for (tier, algo), r in sorted(best.items()):
+        e = BACKEND_ENERGY.get(tier, BACKEND_ENERGY["fused"])
+        cycles = r["measured_us"] / upc if upc else float("nan")
+        rows.append({
+            "rung": tier, "kernel": algo, "kind": "measured",
+            "cycles": cycles, "us": r["measured_us"],
+            "energy_uj": cycles * e["pj_per_cycle"] / 1e6
+            if upc else float("nan"),
+            "bucket": r["bucket"], "path": r["path"],
+        })
+    return rows
+
+
+def print_rung_table(rows: list) -> None:
+    print("\n== Backend rungs (analytic Table-2 fits + measured tiers) ==")
+    if not rows:
+        print("-- no rows (no calibration fit yet?) --")
+        return
+    print(f"{'rung':10s} {'kernel':7s} {'kind':9s} {'cycles':>11s} "
+          f"{'us':>11s} {'energy_uJ':>10s}")
+    for r in rows:
+        print(f"{r['rung']:10s} {r['kernel']:7s} {r['kind']:9s} "
+              f"{r['cycles']:11.3e} {r['us']:11.2f} {r['energy_uj']:10.3f}")
 
 
 def wallclock_us():
@@ -125,6 +209,14 @@ def run(csv_rows: list):
     for k, v in us.items():
         csv_rows.append((f"fp_backends/{k}", v,
                          f"paper_libgcc_cycles={TABLE2_CYCLES['libgcc'][k]:.3g}"))
+    rungs = analytic_rung_rows(fitted) + measured_rung_rows()
+    print_rung_table(rungs)
+    for r in rungs:
+        if r["kind"] == "measured":
+            csv_rows.append((f"backend_rung/{r['rung']}/{r['kernel']}",
+                             r["us"],
+                             f"energy_uj={r['energy_uj']:.3f};"
+                             f"bucket={r['bucket']};path={r['path']}"))
     return fitted
 
 

@@ -43,23 +43,15 @@ def _fit(algo, X, y, pname, path):
                        policy=get_policy(pname), path=path)
 
 
-def _arm_path(algo: str, est, bucket: int, d: int) -> str:
+def _arm_path(algo: str, est, bucket: int) -> str:
     """Which executable path actually serves this arm at this shape."""
     if est.quantized:
         return "quant"
     from repro.kernels import dispatch
-    if algo == "knn":
-        kw = dict(N=est.params.A.shape[0], d=d, Q=bucket, k=est.k)
-    elif algo == "kmeans":
-        kw = dict(N=bucket, d=d, K=est.params.centroids.shape[0])
-    elif algo == "gnb":
-        kw = dict(B=bucket, d=d, C=est.params.mu.shape[0])
-    else:
-        kw = {}
-    op = {"knn": "distance_topk", "kmeans": "distance_argmin",
-          "gnb": "scores", "gmm": "responsibilities",
-          "rf": "forest_votes"}[algo]
-    return dispatch.resolve(algo, op, path=est.path, **kw).name
+    return dispatch.resolve(
+        algo, dispatch.HOT_OPS[algo], path=est.path,
+        **dispatch.hot_shape_kw(algo, est.serve_cost_shape(),
+                                bucket)).name
 
 
 def _bench(fn, params, batch, iters: int) -> float:
@@ -107,9 +99,10 @@ def run(csv_rows: list, quick: bool = False):
             for bucket in buckets:
                 batch = jnp.asarray(Q[:bucket])
                 us_q = _bench(fn, est.params, batch, iters)
-                pth = _arm_path(algo, est, bucket, d)
+                pth = _arm_path(algo, est, bucket)
                 rec = {"algorithm": algo, "arm": arm, "bucket": bucket,
                        "path": pth, "us_per_query": us_q,
+                       "shape": est.serve_cost_shape(),
                        "label_agreement": agree[arm]}
                 results.append(rec)
                 print(f"{algo:7s} {arm:10s} {bucket:6d} {pth:6s} "

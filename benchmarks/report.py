@@ -29,6 +29,8 @@ BENCH_ANN = Path(__file__).resolve().parents[1] / \
     "BENCH_ann.json"
 BENCH_TENANTS = Path(__file__).resolve().parents[1] / \
     "BENCH_tenants.json"
+CALIBRATION = Path(__file__).resolve().parents[1] / \
+    "CALIBRATION.json"
 
 # Required keys per BENCH accumulator: every entry must carry the
 # envelope, every result record the per-kind keys.  The trajectory files
@@ -51,6 +53,8 @@ _RESULT_KEYS = {
             "recall_at_k", "k"),
     "tenants": ("algorithm", "n_tenants", "resident_frac", "bucket",
                 "us_per_query_grouped", "us_per_query_loop"),
+    "calibration": ("tier", "algorithm", "op", "bucket", "path",
+                    "measured_us", "predicted_us", "rel_err"),
 }
 
 
@@ -157,16 +161,18 @@ def perf_compare_table(cells, tags) -> str:
     return "\n".join(lines)
 
 
-def _append_entry(results, path: Path, kind: str) -> dict:
+def _append_entry(results, path: Path, kind: str, **extra) -> dict:
     """Append one timestamped measurement entry to a BENCH_*.json
     accumulator.  An existing file is schema-checked first — silently
     resetting a corrupt trajectory would drop history and skew every
-    report built on it."""
+    report built on it.  ``extra`` keys land on the entry envelope
+    (the calibration artifact carries its refit vectors there)."""
     import time as _time
     entry = {
         "timestamp": _time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": _backend_name(),
         "results": results,
+        **extra,
     }
     data = load_bench(path, kind) if path.exists() else {"entries": []}
     data["entries"].append(entry)
@@ -220,6 +226,32 @@ def write_tenants_entry(results, path: Path = BENCH_TENANTS) -> dict:
     separate per-model launches, per residency fraction) to
     BENCH_tenants.json."""
     return _append_entry(results, path, "tenants")
+
+
+def write_calibration_entry(results, *, vectors, summary,
+                            path: Path = CALIBRATION) -> dict:
+    """Append one calibration fit (per-(tier, algorithm, bucket)
+    predicted-vs-measured rows + the refit us-per-op vectors and fit
+    summary on the envelope) to CALIBRATION.json — the artifact
+    ``CostModel.from_calibration`` and ``REPRO_CALIBRATION`` consume."""
+    return _append_entry(results, path, "calibration",
+                         vectors=vectors, summary=summary)
+
+
+def calibration_table(path: Path = CALIBRATION) -> str:
+    if not path.exists():
+        return "(no CALIBRATION.json yet — run python -m repro.core.calibrate)"
+    data = load_bench(path, "calibration")
+    lines = ["| when | tier | algo | bucket | path | measured us/q | "
+             "predicted us/q | rel err |",
+             "|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            lines.append(
+                f"| {e['timestamp']} | {r['tier']} | {r['algorithm']} | "
+                f"{r['bucket']} | {r['path']} | {r['measured_us']:.1f} | "
+                f"{r['predicted_us']:.1f} | {r['rel_err']:+.0%} |")
+    return "\n".join(lines)
 
 
 def tenants_table(path: Path = BENCH_TENANTS) -> str:
@@ -399,7 +431,27 @@ def main():
                     help="run the multi-tenant grouped-vs-loop sweep "
                          "(ModelStore + vmapped group launch per tenant "
                          "count) and append an entry to BENCH_tenants.json")
+    ap.add_argument("--paper-tables", action="store_true",
+                    help="print the unified backend-rung table (analytic "
+                         "Table-2 fits + measured CALIBRATION.json tiers, "
+                         "latency + energy) and the calibration fit table "
+                         "from the committed artifacts — no benchmarks run")
     args = ap.parse_args()
+    if args.paper_tables:
+        from benchmarks.fp_backends import (
+            analytic_rung_rows, calibrate, measured_rung_rows)
+        fitted, _ = calibrate()
+        rows = analytic_rung_rows(fitted) + measured_rung_rows()
+        print("### Backend rungs (analytic + measured, latency + energy)\n")
+        print("| rung | kernel | kind | cycles | us | energy_uJ |")
+        print("|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['rung']} | {r['kernel']} | {r['kind']} | "
+                  f"{r['cycles']:.3e} | {r['us']:.2f} | "
+                  f"{r['energy_uj']:.3f} |")
+        print("\n### Calibration (predicted vs measured)\n")
+        print(calibration_table())
+        return
     if args.tenants:
         from benchmarks.tenant_sweep import run as run_tenants
         write_tenants_entry(run_tenants([], quick=True))

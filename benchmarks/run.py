@@ -48,6 +48,18 @@ def main() -> None:
     report.write_tenants_entry(tenants)         # grouped-vs-loop (§11)
     roofline.run(csv_rows)                      # deliverable (g)
 
+    # close the loop (DESIGN.md §12): refit the cost model against the
+    # sweep entries this run just appended and persist CALIBRATION.json
+    from repro.core import calibrate
+    fit = calibrate.calibrate(write=True)
+    print("\n== Calibration refit (CALIBRATION.json) ==")
+    for tier, ts in fit["summary"]["tiers"].items():
+        print(f"   {tier:9s} median |rel err| "
+              f"{ts['median_abs_rel_err']:.0%} over {ts['n']} rows")
+        csv_rows.append((f"calibration/{tier}", 0.0,
+                         f"median_abs_rel_err="
+                         f"{ts['median_abs_rel_err']:.3f};n={ts['n']}"))
+
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")

@@ -150,6 +150,7 @@ def run(csv_rows: list, quick: bool = False):
                        "resident_frac": frac, "bucket": BUCKET,
                        "us_per_query_grouped": us_g,
                        "us_per_query_loop": us_l,
+                       "shape": store.template.serve_cost_shape(),
                        "speedup": us_l / max(us_g, 1e-9)}
                 results.append(rec)
                 print(f"{algo:5s} {G:4d} {frac:8.2f} {BUCKET:6d} "

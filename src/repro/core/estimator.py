@@ -165,6 +165,9 @@ class _EstimatorBase:
                  path: Optional[str] = None):
         self.policy = policy
         self.path = path
+        self.bn = None             # fused-kernel row-block override (the
+        #                            engine autotuner sets it on copies;
+        #                            None = the analytic VMEM autotune)
         self._params: Optional[NamedTuple] = None
         self.mesh = None           # set by fit_sharded
         self.mesh_axis = "data"
@@ -407,14 +410,14 @@ class KNNEstimator(_EstimatorBase):
                 return classes, nbr
 
             return qfn
-        policy, path = self.policy, self.path
+        policy, path, bn = self.policy, self.path, getattr(self, "bn", None)
 
         def fn(params: _knn.KNNModel, X):
             X = policy.cast(X) if policy else X
             model = _knn.KNNModel(A=params.A, labels=params.labels,
                                   n_class=n_class)
-            return _knn.knn_classify_batch(model, X, k, policy=policy,
-                                           path=path)
+            return _knn.knn_classify_batch(model, X, k, bn=bn,
+                                           policy=policy, path=path)
 
         return fn
 
@@ -493,12 +496,13 @@ class KMeansEstimator(_EstimatorBase):
                 return ids, lat.astype(jnp.float32) * params.dequant
 
             return qfn
-        policy, path = self.policy, self.path
+        policy, path, bn = self.policy, self.path, getattr(self, "bn", None)
 
         def fn(params: _kmeans.KMeansState, X):
             X = policy.cast(X) if policy else X
             dist, ids = dispatch.distance_argmin(X, params.centroids,
-                                                 policy=policy, path=path)
+                                                 policy=policy, path=path,
+                                                 bn=bn)
             return ids, dist
 
         return fn

@@ -27,8 +27,8 @@ FPU" observation (§5.2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -243,6 +243,9 @@ class StrategyCost:
         return self.compute + self.overhead
 
 
+SERVE_CENSUS_ALGOS = ("knn", "kmeans", "gnb", "gmm", "rf", "ann")
+
+
 def serve_census(algorithm: str, shape: Dict[str, int] = None) -> Census:
     """Per-QUERY op census of one serve inference (the fit-side loops and
     their convergence checks do not run at serve time, so K-Means/GMM get
@@ -287,7 +290,10 @@ def serve_census(algorithm: str, shape: Dict[str, int] = None) -> Census:
                       "mul": C * d + lut + R * d, "cmp": C * k + L + R,
                       "elem": C * d + lut + R * d, "ielem": 2 * L * m},
             sequential={"cmp": k, "elem": k})
-    raise KeyError(f"no serve census for {algorithm!r}")
+    raise ValueError(
+        f"no serve census for {algorithm!r} — known: "
+        f"{sorted(SERVE_CENSUS_ALGOS)}; add a census entry to "
+        "core/precision.py::serve_census before costing it")
 
 
 def merge_elems(algorithm: str, shape: Dict[str, int] = None,
@@ -313,7 +319,181 @@ def merge_elems(algorithm: str, shape: Dict[str, int] = None,
         # dispatch.resolve_strategy filters this candidate back out
         rounds = max(1, (n_shards - 1).bit_length())
         return 2.0 * s.get("k", 4) * rounds
-    raise KeyError(f"no merge model for {algorithm!r}")
+    raise ValueError(
+        f"no merge model for {algorithm!r} — known: "
+        f"{sorted(SERVE_CENSUS_ALGOS)}; add a merge term to "
+        "core/precision.py::merge_elems before costing it")
+
+
+# Calibration tiers (core/calibrate.py): each maps a (policy, path) pair
+# onto one refit us-per-op vector / one family of measured us-per-query rows.
+CALIBRATION_TIERS = ("fp32-ref", "fused", "bf16", "int8", "grouped")
+
+
+def tier_for(policy_name: str = "fp32", *, quantized: bool = False,
+             path: str = None, grouped: bool = False) -> str:
+    """Map a (policy, path, grouping) triple onto its calibration tier."""
+    if grouped:
+        return "grouped"
+    if quantized or policy_name == "int8":
+        return "int8"
+    if policy_name == "bf16":
+        return "bf16"
+    return "fp32-ref" if path == "ref" else "fused"
+
+
+@dataclass
+class CostModel:
+    """The one object every cost decision consults (DESIGN.md §12).
+
+    Analytic by default: ``BackendCosts`` cycles x op censuses plus the
+    Eq. 15 overhead constants — exactly the open-loop model the selectors
+    always used.  Calibrated when built from a CALIBRATION.json entry
+    (core/calibrate.py): measured us-per-query rows and refit per-tier
+    us-per-op vectors replace the datasheet numbers wherever a measurement
+    exists, and ``us_per_cycle`` rescales the launch/collective constants
+    into the same units; anything unmeasured falls back to analytic.
+    """
+
+    backend: BackendCosts = None
+    # tier -> us-per-op vector over OPS (refit by core/calibrate.py)
+    vectors: Dict[str, np.ndarray] = field(default_factory=dict)
+    # tier -> fitted per-launch overhead (us), amortised over the bucket —
+    # interpret-mode dispatch cost the per-op census cannot express
+    launch_us: Dict[str, float] = field(default_factory=dict)
+    # (algorithm, tier) -> sorted [(bucket, best measured us/query)]
+    query_us: Dict[Tuple[str, str], List[Tuple[int, float]]] = \
+        field(default_factory=dict)
+    # (algorithm, bucket) -> {path: us/query} over the fp32 tiers — the
+    # rows the path selector consults
+    path_us: Dict[Tuple[str, int], Dict[str, float]] = \
+        field(default_factory=dict)
+    us_per_cycle: Optional[float] = None   # rescales Eq. 15 constants
+    source: str = "analytic"
+
+    def __post_init__(self):
+        if self.backend is None:
+            self.backend = BACKENDS["fpu"]
+
+    @property
+    def calibrated(self) -> bool:
+        return bool(self.query_us or self.path_us or self.vectors)
+
+    # -- construction -------------------------------------------------
+    @classmethod
+    def analytic(cls, backend: BackendCosts = None) -> "CostModel":
+        return cls(backend=backend)
+
+    @classmethod
+    def from_calibration(cls, entry) -> "CostModel":
+        """Build from a CALIBRATION.json entry dict, or a path to the
+        artifact (latest entry wins)."""
+        if not isinstance(entry, dict):
+            import json
+            with open(entry) as fh:
+                entry = json.load(fh)["entries"][-1]
+        vectors = {tier: np.array([vec[op] for op in OPS], dtype=np.float64)
+                   for tier, vec in entry.get("vectors", {}).items()}
+        launch_us = {tier: float(vec.get("launch_us", 0.0))
+                     for tier, vec in entry.get("vectors", {}).items()}
+        query_us: Dict[Tuple[str, str], Dict[int, float]] = {}
+        path_us: Dict[Tuple[str, int], Dict[str, float]] = {}
+        for rec in entry["results"]:
+            algo, tier = rec["algorithm"], rec["tier"]
+            b, us = int(rec["bucket"]), float(rec["measured_us"])
+            rows = query_us.setdefault((algo, tier), {})
+            if b not in rows or us < rows[b]:
+                rows[b] = us
+            if tier in ("fp32-ref", "fused"):
+                paths = path_us.setdefault((algo, b), {})
+                p = rec["path"]
+                if p not in paths or us < paths[p]:
+                    paths[p] = us
+        summary = entry.get("summary", {})
+        return cls(vectors=vectors,
+                   launch_us=launch_us,
+                   query_us={k: sorted(v.items())
+                             for k, v in query_us.items()},
+                   path_us=path_us,
+                   us_per_cycle=summary.get("us_per_cycle"),
+                   source="calibrated")
+
+    # -- queries ------------------------------------------------------
+    @staticmethod
+    def _nearest(rows: List[Tuple[int, float]], bucket: int) -> float:
+        """Measured us/query at the log-nearest measured bucket."""
+        b = max(int(bucket), 1)
+        return min(rows, key=lambda r: abs(np.log(max(r[0], 1) / b)))[1]
+
+    def serve_us(self, algorithm: str, *, shape: Dict[str, int] = None,
+                 tier: str = "fused", bucket: int = 1) -> Optional[float]:
+        """Calibrated per-query us estimate; None when uncalibrated for
+        this (algorithm, tier)."""
+        rows = self.query_us.get((algorithm, tier))
+        if rows:
+            return self._nearest(rows, bucket)
+        vec = self.vectors.get(tier)
+        if vec is not None:
+            return (float(serve_census(algorithm, shape).vector() @ vec)
+                    + self.launch_us.get(tier, 0.0) / max(int(bucket), 1))
+        return None
+
+    def preferred_path(self, algorithm: str,
+                       bucket: int = None) -> Optional[str]:
+        """Measured-fastest fp32 path near ``bucket``, or None when fewer
+        than two paths were measured there — the analytic shape selector
+        keeps deciding in that case, so an uncalibrated model is inert."""
+        buckets = [b for (a, b) in self.path_us if a == algorithm]
+        if not buckets:
+            return None
+        if bucket is None:
+            b = max(buckets)
+        else:
+            ref = max(int(bucket), 1)
+            b = min(buckets, key=lambda x: abs(np.log(max(x, 1) / ref)))
+        paths = self.path_us[(algorithm, b)]
+        if len(paths) < 2:
+            return None
+        return min(paths, key=paths.get)
+
+    def strategy_costs(self, algorithm: str, *, bucket: int, n_shards: int,
+                       shape: Dict[str, int] = None,
+                       quantized: bool = False,
+                       tier: str = None) -> Dict[str, StrategyCost]:
+        """Eq. 15 costs per applicable partition strategy.
+
+        ``quantized`` drops "reference": the int8 arms derive their
+        lattices from the model-side operand, so a model partition changes
+        the lattice per shard (core/cluster.py documents this per arm).
+        Calibrated models swap the analytic per-query cycle weight for the
+        measured us/query at the nearest bucket and rescale the overhead
+        constants by ``us_per_cycle``; otherwise the numbers are identical
+        to the historical ``serve_strategy_costs``."""
+        tier = tier or ("int8" if quantized else "fused")
+        w = unit = None
+        if self.calibrated and self.us_per_cycle:
+            w = self.serve_us(algorithm, shape=shape, tier=tier,
+                              bucket=bucket)
+            unit = self.us_per_cycle
+        if w is None:
+            w = predicted_cycles(serve_census(algorithm, shape),
+                                 self.backend)
+            unit = 1.0
+        costs = {"single": StrategyCost("single", compute=bucket * w,
+                                        overhead=0.0)}
+        if n_shards > 1:
+            per_shard = -(-bucket // n_shards)     # ceil: whole query rows
+            costs["query"] = StrategyCost(
+                "query", compute=per_shard * w,
+                overhead=SHARD_LAUNCH_CYCLES * unit)
+            if not quantized:
+                moved = bucket * merge_elems(algorithm, shape, n_shards)
+                costs["reference"] = StrategyCost(
+                    "reference", compute=bucket * w / n_shards,
+                    overhead=(SHARD_LAUNCH_CYCLES
+                              + COLLECTIVE_LAUNCH_CYCLES) * unit
+                    + moved * COLLECTIVE_ELEM_CYCLES * unit)
+        return costs
 
 
 def serve_strategy_costs(algorithm: str, *, bucket: int, n_shards: int,
@@ -321,26 +501,10 @@ def serve_strategy_costs(algorithm: str, *, bucket: int, n_shards: int,
                          backend: BackendCosts = None,
                          quantized: bool = False
                          ) -> Dict[str, StrategyCost]:
-    """Modelled per-bucket cycles for every applicable partition strategy.
-
-    ``quantized`` drops "reference": the int8 arms derive their lattices
-    from the model-side operand, so a model partition changes the lattice
-    per shard (core/cluster.py documents this per arm)."""
-    backend = backend or BACKENDS["fpu"]
-    w = predicted_cycles(serve_census(algorithm, shape), backend)
-    costs = {"single": StrategyCost("single", compute=bucket * w,
-                                    overhead=0.0)}
-    if n_shards > 1:
-        per_shard = -(-bucket // n_shards)     # ceil: whole query rows
-        costs["query"] = StrategyCost(
-            "query", compute=per_shard * w, overhead=SHARD_LAUNCH_CYCLES)
-        if not quantized:
-            moved = bucket * merge_elems(algorithm, shape, n_shards)
-            costs["reference"] = StrategyCost(
-                "reference", compute=bucket * w / n_shards,
-                overhead=SHARD_LAUNCH_CYCLES + COLLECTIVE_LAUNCH_CYCLES
-                + moved * COLLECTIVE_ELEM_CYCLES)
-    return costs
+    """Analytic Eq. 15 costs (back-compat wrapper over ``CostModel``)."""
+    return CostModel.analytic(backend).strategy_costs(
+        algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
+        quantized=quantized)
 
 
 def pick_strategy(costs: Dict[str, StrategyCost]) -> str:

@@ -69,6 +69,44 @@ _CENSUS_KEY = {"knn": "knn", "kmeans": "kmeans_iter", "gnb": "gnb",
                "gmm": "gmm_iter", "rf": "rf", "lr": "lr", "svm": "svm",
                "ann": "knn"}
 
+# algorithm -> its serve-time hot op in the registry: the one op the
+# autotuner times and the sweeps record (the estimator's predict_batch hot
+# loop is exactly one dispatch through this op)
+HOT_OPS = {"knn": "distance_topk", "kmeans": "distance_argmin",
+           "gnb": "scores", "gmm": "responsibilities",
+           "rf": "forest_votes", "ann": "adc_topk"}
+
+
+def hot_shape_kw(algorithm: str, cost_shape: Dict[str, int],
+                 bucket: int) -> Dict[str, int]:
+    """Translate an estimator's ``serve_cost_shape()`` dict plus a batch
+    bucket into the shape kwargs ``resolve`` expects for its hot op — one
+    shared mapping so the engine autotuner and the benchmark sweeps name
+    shapes identically."""
+    s = dict(cost_shape or {})
+    if algorithm == "knn":
+        return {"N": s.get("N", 0), "d": s.get("d", 0), "Q": bucket,
+                "k": s.get("k", 1)}
+    if algorithm == "kmeans":
+        return {"N": bucket, "d": s.get("d", 0), "K": s.get("K", 1)}
+    if algorithm == "gnb":
+        return {"B": bucket, "d": s.get("d", 0), "C": s.get("C", 1)}
+    if algorithm == "gmm":
+        return {"B": bucket, "d": s.get("d", 0), "k": s.get("K", 1)}
+    if algorithm == "ann":
+        return {"Q": bucket, "L": s.get("L", 0), "m": s.get("m", 1),
+                "n_codes": s.get("n_codes", 256), "k": s.get("k", 1)}
+    return {}    # rf: the forest-vote op resolves shape-free
+
+
+def _bucket_hint(shape_kw: Dict[str, int]) -> Optional[int]:
+    """Batch-size hint from resolve()'s shape kwargs: the query-count axis
+    under each op's naming (kNN/ANN ``Q``, GNB/GMM ``B``, K-Means ``N``)."""
+    for key in ("Q", "B", "N"):
+        if key in shape_kw:
+            return int(shape_kw[key])
+    return None
+
 
 # ---------------------------------------------------------------------------
 # PrecisionPolicy — the §3.4 backend axis as a value threaded through layers
@@ -114,7 +152,14 @@ class PrecisionPolicy:
         """Analytic per-inference cycle cost of ``algorithm`` under this
         policy's cost backend (census x cycles-per-op, paper Eq. in §5.2)."""
         precision = _precision_mod()
-        census = precision.PAPER_CENSUSES[_CENSUS_KEY[algorithm]]
+        key = _CENSUS_KEY.get(algorithm)
+        if key is None or key not in precision.PAPER_CENSUSES:
+            raise ValueError(
+                f"no census for algorithm {algorithm!r} — known: "
+                f"{sorted(_CENSUS_KEY)}; add a census_* entry to "
+                "core/precision.py and map it in dispatch._CENSUS_KEY "
+                "before costing it")
+        census = precision.PAPER_CENSUSES[key]
         backend = precision.BACKENDS[self.cost_backend]
         return precision.predicted_cycles(census, backend, section)
 
@@ -188,13 +233,55 @@ def env_override() -> Optional[str]:
     return v
 
 
+# ---------------------------------------------------------------------------
+# Active cost model — analytic by default, calibrated when installed
+# ---------------------------------------------------------------------------
+#
+# One process-wide CostModel (core/precision.py) that both the path
+# selectors (resolve) and the strategy selector (resolve_strategy)
+# consult.  ``REPRO_CALIBRATION=<path to CALIBRATION.json>`` installs a
+# calibrated model at first use; ``set_cost_model`` installs one
+# programmatically (serve.py --calibration, tests).  The analytic model
+# is inert in ``resolve`` — ``preferred_path`` returns None without
+# measured rows — so uncalibrated behaviour is bit-identical to the
+# historical shape/VMEM selectors.
+
+CALIBRATION_ENV_VAR = "REPRO_CALIBRATION"
+_COST_MODEL = None
+_ENV_CALIBRATION_LOADED = False
+
+
+def set_cost_model(model) -> None:
+    """Install (or with None, clear) the process-wide CostModel."""
+    global _COST_MODEL, _ENV_CALIBRATION_LOADED
+    _COST_MODEL = model
+    _ENV_CALIBRATION_LOADED = model is not None
+
+
+def active_cost_model():
+    """The installed CostModel, loading ``REPRO_CALIBRATION`` once if set;
+    falls back to the shared analytic model."""
+    global _COST_MODEL, _ENV_CALIBRATION_LOADED
+    if _COST_MODEL is None and not _ENV_CALIBRATION_LOADED:
+        _ENV_CALIBRATION_LOADED = True
+        src = os.environ.get(CALIBRATION_ENV_VAR, "").strip()
+        if src:
+            _COST_MODEL = _precision_mod().CostModel.from_calibration(src)
+    if _COST_MODEL is None:
+        _COST_MODEL = _precision_mod().CostModel.analytic()
+    return _COST_MODEL
+
+
 def resolve(algorithm: str, op: str, *, path: Optional[str] = None,
             policy: Optional[PrecisionPolicy] = None,
-            budget: int = VMEM_BUDGET, **shape_kw) -> KernelPath:
+            budget: int = VMEM_BUDGET, cost_model=None,
+            **shape_kw) -> KernelPath:
     """Pick the executable path for ``(algorithm, op)`` at these shapes.
 
     Precedence: explicit ``path=`` > ``REPRO_BACKEND`` env (when that op
-    has the requested arm) > the op's shape/VMEM selector.
+    has the requested arm) > a calibrated cost model's measured-fastest
+    fp32 path near this batch bucket > the op's shape/VMEM selector.
+    The lossy "quant" arm is never picked implicitly, measured or not.
     """
     key = (algorithm, op)
     if key not in _PATHS:
@@ -211,12 +298,22 @@ def resolve(algorithm: str, op: str, *, path: Optional[str] = None,
         if env is not None and env in paths:
             chosen = env
         else:
-            sel = _SELECTORS.get(key)
-            if sel is not None:
-                chosen = sel(policy=policy or DEFAULT_POLICY,
-                             budget=budget, **shape_kw)
-            else:
-                chosen = next(n for n in PATH_NAMES if n in paths)
+            chosen = None
+            cm = cost_model if cost_model is not None else \
+                active_cost_model()
+            if cm.calibrated and not (policy is not None
+                                      and policy.quantized):
+                pref = cm.preferred_path(algorithm,
+                                         bucket=_bucket_hint(shape_kw))
+                if pref in paths and pref != "quant":
+                    chosen = pref
+            if chosen is None:
+                sel = _SELECTORS.get(key)
+                if sel is not None:
+                    chosen = sel(policy=policy or DEFAULT_POLICY,
+                                 budget=budget, **shape_kw)
+                else:
+                    chosen = next(n for n in PATH_NAMES if n in paths)
     return KernelPath(algorithm, op, chosen, paths[chosen])
 
 
@@ -624,16 +721,18 @@ def resolve_strategy(algorithm: str, *, bucket: int, n_shards: int,
                      strategy: Optional[str] = None,
                      policy: Optional[PrecisionPolicy] = None,
                      shape: Optional[Dict[str, int]] = None,
-                     quantized: Optional[bool] = None) -> str:
+                     quantized: Optional[bool] = None,
+                     cost_model=None) -> str:
     """Pick the serving partition strategy for one (algorithm, bucket,
     mesh) cell.
 
     Precedence mirrors ``resolve``: explicit ``strategy=`` >
-    ``REPRO_SHARD_STRATEGY`` env > the analytic cost model
-    (``core.precision.serve_strategy_costs`` — Eq. 15's t_par/c + t_seq
-    per partition).  Quantized arms (int8 policy or ``REPRO_BACKEND=quant``)
-    exclude "reference" from the model: the int8 lattices derive from the
-    model-side operand, which a model partition would chunk."""
+    ``REPRO_SHARD_STRATEGY`` env > the active CostModel (Eq. 15's
+    t_par/c + t_seq per partition — analytic by default, measured
+    us/query rows when calibrated).  Quantized arms (int8 policy or
+    ``REPRO_BACKEND=quant``) exclude "reference" from the model: the int8
+    lattices derive from the model-side operand, which a model partition
+    would chunk."""
     if strategy is not None and strategy != "auto":
         if strategy not in STRATEGY_NAMES:
             raise ValueError(f"strategy={strategy!r} is not one of "
@@ -646,10 +745,19 @@ def resolve_strategy(algorithm: str, *, bucket: int, n_shards: int,
     if quantized is None:
         quantized = ((policy is not None and policy.quantized)
                      or env_override() == "quant")
-    backend = precision.BACKENDS[(policy or DEFAULT_POLICY).cost_backend]
-    costs = precision.serve_strategy_costs(
-        algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
-        backend=backend, quantized=quantized)
+    cm = cost_model if cost_model is not None else active_cost_model()
+    if cm.calibrated:
+        base = (policy or DEFAULT_POLICY).name.split("@")[0]
+        costs = cm.strategy_costs(
+            algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
+            quantized=quantized,
+            tier=precision.tier_for(base, quantized=quantized))
+    else:
+        backend = precision.BACKENDS[
+            (policy or DEFAULT_POLICY).cost_backend]
+        costs = precision.serve_strategy_costs(
+            algorithm, bucket=bucket, n_shards=n_shards, shape=shape,
+            backend=backend, quantized=quantized)
     # the model only costs strategies the algorithm can execute: drop
     # candidates with no registered sharded arm (ANN has no "reference"
     # partition — its inverted lists address global row ids)

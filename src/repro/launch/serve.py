@@ -116,7 +116,15 @@ def serve_nonneural(args):
               f"{r['bytes_int8']}B int8 ({direction})")
     if args.stream:
         return serve_stream(args, engine, Q)
-    engine.warmup(Q)
+    engine.warmup(Q, autotune=args.autotune)
+    if args.autotune and engine.tuned:
+        arms = ", ".join(
+            f"{b}->{a.strategy}/{a.path or a.static_path}"
+            f"{f'/bn{a.bn}' if a.bn else ''}"
+            f" ({a.us:.0f}us vs static {a.static_us:.0f}us)"
+            + ("*" if a.differs else "")
+            for b, a in sorted(engine.tuned.items()))
+        print(f"[autotune] tuned arms (* = differs from static): {arms}")
     t0 = time.time()
     result = engine.classify(Q)
     jax.block_until_ready(result.classes)
@@ -262,7 +270,13 @@ def serve_stream(args, engine, Q):
     deterministic for a given --seed)."""
     from repro.serving import RequestScheduler, poisson_trace, replay_trace
 
-    engine.warmup_buckets(Q.shape[1])
+    engine.warmup_buckets(Q.shape[1], autotune=args.autotune)
+    if args.autotune and engine.tuned:
+        arms = ", ".join(
+            f"{b}->{a.strategy}/{a.path or a.static_path}"
+            + ("*" if a.differs else "")
+            for b, a in sorted(engine.tuned.items()))
+        print(f"[autotune] tuned arms (* = differs from static): {arms}")
     sched = RequestScheduler(engine, max_wait=args.max_wait,
                              cache_size=args.cache_size)
     counts = poisson_trace(args.rate, args.ticks, seed=args.seed)
@@ -314,6 +328,19 @@ def main(argv=None):
                          "query = batch rows sharded / replicated model, "
                          "reference = model axis sharded + merge "
                          "collective, single = one device")
+    ap.add_argument("--autotune", action="store_true",
+                    help="micro-time every registered arm (path / block "
+                         "size / sharding strategy) per warmed bucket and "
+                         "route launches through the measured winner "
+                         "instead of the analytic selector (paper §5.2 "
+                         "profile-then-optimize; DESIGN.md §12)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="CALIBRATION.json to load into the cost model so "
+                         "path and strategy selection use measured "
+                         "us-per-op vectors instead of the analytic "
+                         "literature-seeded ones (see "
+                         "repro.core.calibrate; also honoured via the "
+                         "REPRO_CALIBRATION env var)")
     ap.add_argument("--stream", action="store_true",
                     help="replay a Poisson-ish request stream through the "
                          "micro-batching RequestScheduler instead of one "
@@ -354,6 +381,11 @@ def main(argv=None):
     ap.add_argument("--dim", type=int, default=21)
     ap.add_argument("--classes", type=int, default=3)
     args = ap.parse_args(argv)
+    if args.calibration:
+        from repro.core.precision import CostModel
+        from repro.kernels import dispatch
+        dispatch.set_cost_model(CostModel.from_calibration(args.calibration))
+        print(f"[calibrate] cost model loaded from {args.calibration}")
     if args.algo == "lm":
         return serve_lm(args)
     if args.tenants > 1:

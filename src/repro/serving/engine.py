@@ -15,10 +15,12 @@ are microbatched.  ``KNNServeEngine`` survives as the kNN-typed facade.
 """
 from __future__ import annotations
 
+import copy as _copy
 import functools
 import itertools
-from dataclasses import dataclass
-from typing import Dict, Optional, Set, Tuple
+import time as _time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +68,33 @@ class GroupClassifyResult:
 # the cache key so identical query bytes against different engines or
 # policies can never cross-hit)
 _ENGINE_SEQ = itertools.count()
+
+
+@dataclass
+class TunedArm:
+    """One bucket's autotune verdict: the measured-fastest registered arm
+    next to what the static (analytic) selector would have run.
+
+    ``path=None`` / ``bn=None`` mean "registry default" — the winner may
+    legitimately BE the static choice, in which case routing through the
+    tuned arm is a no-op by construction."""
+
+    strategy: str
+    path: Optional[str]
+    bn: Optional[int]
+    us: float                 # winning measured us per launch
+    static_strategy: str
+    static_path: str
+    static_us: float
+    # every (strategy, path, bn, us) measured, for reports and tests
+    candidates: List[Tuple] = field(default_factory=list)
+
+    @property
+    def differs(self) -> bool:
+        """Did measurement overturn the static selector?"""
+        return (self.strategy != self.static_strategy
+                or (self.path is not None and self.path != self.static_path)
+                or self.bn is not None)
 
 
 class NonNeuralServeEngine:
@@ -152,7 +181,8 @@ class NonNeuralServeEngine:
         self._quantized = bool(wants_int8)
         self._cost_shape = estimator.serve_cost_shape()
         self.bucket_strategies: Dict[int, str] = {}
-        self._fns: Dict[str, object] = {}      # strategy -> jitted fn
+        self.tuned: Dict[int, TunedArm] = {}   # bucket -> autotune verdict
+        self._fns: Dict[Tuple, object] = {}    # (strategy, path, bn) -> jit
         self._placed: Dict[str, object] = {}   # strategy -> placed params
         # grouped (multi-tenant) launch state — DESIGN.md §11
         self.max_group = int(max_group)
@@ -193,15 +223,27 @@ class NonNeuralServeEngine:
             self.bucket_strategies[bucket] = s
         return s
 
-    def _fn_for(self, strategy: str):
-        fn = self._fns.get(strategy)
+    def _fn_for(self, strategy: str, path: Optional[str] = None,
+                bn: Optional[int] = None):
+        """The jitted executor for one (strategy, path, bn) arm.
+        ``path``/``bn`` override the estimator's own settings through a
+        shallow copy (the autotuner's knobs); None keeps them."""
+        key = (strategy, path, bn)
+        fn = self._fns.get(key)
         if fn is None:
+            est = self.estimator
+            if path is not None or bn is not None:
+                est = _copy.copy(est)
+                if path is not None:
+                    est.path = path
+                if bn is not None:
+                    est.bn = bn
             if self.mesh is None or strategy == "single":
-                fn = jax.jit(self.estimator.predict_batch_fn())
+                fn = jax.jit(est.predict_batch_fn())
             else:
-                fn = jax.jit(self.estimator.predict_batch_sharded_fn(
+                fn = jax.jit(est.predict_batch_sharded_fn(
                     self.mesh, self.mesh_axis, strategy))
-            self._fns[strategy] = fn
+            self._fns[key] = fn
         return fn
 
     def _params_for(self, strategy: str):
@@ -244,41 +286,167 @@ class NonNeuralServeEngine:
                               aux=self.estimator.empty_aux(), launches=0,
                               algorithm=self.algorithm)
 
-    def _warm_one(self, size: int, chunk) -> None:
+    def _choice(self, bucket: int) -> Tuple[str, Optional[str],
+                                            Optional[int]]:
+        """The (strategy, path, bn) arm serving this bucket: the autotuned
+        winner when ``warmup(autotune=True)`` measured one, else the static
+        route with registry-default path."""
+        arm = self.tuned.get(bucket)
+        if arm is not None:
+            return arm.strategy, arm.path, arm.bn
+        return self._route(bucket), None, None
+
+    # overridable seam: tests inject scripted timings to flip decisions
+    # deterministically, and the benchmark sweeps reuse the same probe
+    def _measure(self, fn, params, chunk, iters: int = 3) -> float:
+        """Min warm wall-clock (us) of one launch (first call compiles)."""
+        jax.block_until_ready(fn(params, chunk)[0])
+        best = float("inf")
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(params, chunk)[0])
+            best = min(best, _time.perf_counter() - t0)
+        return best * 1e6
+
+    def _static_arm(self, bucket: int) -> Tuple[str, str]:
+        """(strategy, path) the static selectors would run at this bucket."""
+        strategy = self._route(bucket)
+        op = dispatch.HOT_OPS.get(self.algorithm)
+        if self._quantized:
+            return strategy, "quant"
+        if op is None:
+            return strategy, self.estimator.path or "ref"
+        kw = dispatch.hot_shape_kw(self.algorithm, self._cost_shape, bucket)
+        return strategy, dispatch.resolve(
+            self.algorithm, op, path=self.estimator.path,
+            policy=self.estimator.policy, **kw).name
+
+    def _autotune_candidates(self, bucket: int):
+        """Registered (strategy, path, bn) arms worth timing at this
+        bucket.  Never the lossy "quant" arm; explicit ``path=`` /
+        ``REPRO_BACKEND`` / ``strategy=`` pins keep precedence by
+        collapsing their axis to the pinned value; every candidate comes
+        from the dispatch registries so ``bucket_launches ⊆ warmed``
+        holds for whatever wins."""
+        algo, op = self.algorithm, dispatch.HOT_OPS.get(self.algorithm)
+        # --- path axis
+        paths: List[Optional[str]] = [None]
+        if (op is not None and self.estimator.path is None
+                and not self._quantized
+                and dispatch.env_override() is None):
+            regd = dispatch.registered().get((algo, op), ())
+            paths = [p for p in regd if p != "quant"] or [None]
+        # --- strategy axis
+        if self.mesh is None:
+            strategies = ["single"]
+        elif self.strategy is not None and self.strategy != "auto":
+            strategies = [self.strategy]
+        elif dispatch.strategy_env_override() is not None:
+            strategies = [dispatch.strategy_env_override()]
+        else:
+            cands = {st for (a, _, st) in dispatch.sharded_registered()
+                     if a == algo}
+            if self._quantized:
+                cands.discard("reference")
+            strategies = ["single"] + sorted(cands)
+        # --- bn axis: fused-kernel row blocking (kNN / K-Means only)
+        bn_paths = {"fused"}
+        arms = [(self._route(bucket), None, None)]   # the static arm
+        for s in strategies:
+            for p in paths:
+                # sharded strategies keep the per-shard registry default:
+                # the path axis is a single-device knob (per-shard shapes
+                # re-select anyway) and the cross product would explode
+                # warmup compile time
+                if s != "single" and p is not None:
+                    continue
+                arms.append((s, p, None))
+                if algo in ("knn", "kmeans") and p in bn_paths:
+                    for bn in (64, 256):
+                        arms.append((s, p, bn))
+        seen, uniq = set(), []
+        for arm in arms:
+            if arm not in seen:
+                seen.add(arm)
+                uniq.append(arm)
+        return uniq
+
+    def _autotune_bucket(self, size: int, chunk) -> TunedArm:
+        """Micro-time every registered arm for one bucket, record the
+        winner in ``self.tuned``, and route this bucket through it."""
+        static_strategy, static_path = self._static_arm(size)
+        measured, static_us = [], None
+        for s, p, bn in self._autotune_candidates(size):
+            try:
+                us = self._measure(self._fn_for(s, p, bn),
+                                   self._params_for(s), chunk)
+            except Exception:     # unbuildable arm (e.g. no sharded fn)
+                continue
+            measured.append((s, p, bn, us))
+            if (s == static_strategy and bn is None
+                    and (p is None or p == static_path)):
+                static_us = us if static_us is None else min(static_us, us)
+        if not measured:          # nothing ran: keep the static route
+            return None
+        s, p, bn, us = min(measured, key=lambda m: m[3])
+        arm = TunedArm(strategy=s, path=p, bn=bn, us=us,
+                       static_strategy=static_strategy,
+                       static_path=static_path,
+                       static_us=static_us if static_us is not None else us,
+                       candidates=measured)
+        self.tuned[size] = arm
+        self.bucket_strategies[size] = s
+        return arm
+
+    def _warm_one(self, size: int, chunk, autotune: bool = False) -> None:
         """Compile one bucket through the jitted fn DIRECTLY — warmup must
         never land in ``bucket_launches``, which counts production launches
         for capacity accounting."""
         pad = size - chunk.shape[0]
         if pad:
             chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-        s = self._route(size)
+        if autotune:
+            if self._autotune_bucket(size, chunk) is not None:
+                self.warmed.add(size)
+                return
+        s, p, bn = self._choice(size)
         jax.block_until_ready(
-            self._fn_for(s)(self._params_for(s), chunk)[0])
+            self._fn_for(s, p, bn)(self._params_for(s), chunk)[0])
         self.warmed.add(size)
 
-    def warmup(self, X) -> int:
+    def warmup(self, X, *, autotune: bool = False) -> int:
         """Compile every bucket a classify(X) call would hit (including the
         smaller trailing-chunk bucket) so jit compiles never land inside a
         caller's timed window.  Returns the number of buckets warmed.
-        Compile-time launches do NOT count into ``bucket_launches``."""
+        Compile-time launches do NOT count into ``bucket_launches``.
+
+        ``autotune=True`` additionally micro-times every registered arm
+        (paths, block sizes, partition strategies) per bucket and routes
+        production launches through the measured winner (``self.tuned``) —
+        the paper's profile-then-optimize loop (§5.2) at warmup time.
+        Explicit ``path=``/``REPRO_BACKEND``/``strategy=`` pins keep
+        precedence."""
         X = jnp.asarray(X)
         sizes = {self._bucket(min(self.max_batch, X.shape[0] - lo))
                  for lo in range(0, X.shape[0], self.max_batch)}
         for size in sorted(sizes):
-            self._warm_one(size, X[:size])
+            self._warm_one(size, X[:size], autotune=autotune)
         return len(sizes)
 
-    def warmup_buckets(self, d: int, *, dtype=jnp.float32) -> int:
+    def warmup_buckets(self, d: int, *, dtype=jnp.float32,
+                       autotune: bool = False) -> int:
         """Compile EVERY bucket ``classify`` can ever route a (B, d) batch
         to — what a request-stream scheduler needs so no jit compile can
         land mid-stream (scheduler.py coalesces only into ``warmed``).
-        Returns the number of buckets warmed."""
+        Returns the number of buckets warmed.  ``autotune=True`` as in
+        ``warmup``."""
         sizes, b = set(), 1
         while b < 2 * self.max_batch:
             sizes.add(self._bucket(b))
             b *= 2
         for size in sorted(sizes):
-            self._warm_one(size, jnp.zeros((size, d), dtype))
+            self._warm_one(size, jnp.zeros((size, d), dtype),
+                           autotune=autotune)
         return len(sizes)
 
     def classify(self, X) -> ClassifyResult:
@@ -294,8 +462,8 @@ class NonNeuralServeEngine:
             pad = bucket - chunk.shape[0]
             if pad:
                 chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-            s = self._route(bucket)
-            cls, aux = self._fn_for(s)(self._params_for(s), chunk)
+            s, p, bn = self._choice(bucket)
+            cls, aux = self._fn_for(s, p, bn)(self._params_for(s), chunk)
             classes.append(cls[: bucket - pad])
             auxes.append(aux[: bucket - pad])
             self.bucket_launches[bucket] = \

@@ -1,0 +1,253 @@
+"""Calibration loop (core/calibrate.py + precision.CostModel): synthetic
+round-trips and the decision flips that justify the whole subsystem —
+a calibrated model must CHANGE what the selectors pick when the measured
+rows contradict the analytic story, and must be inert when absent.
+
+All host-side arithmetic — no devices, no kernels compiled.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate, precision
+from repro.kernels import dispatch
+
+KNN_SHAPE = {"N": 1024, "d": 32, "k": 8}
+
+
+def _synthetic_rows(true_vec, tier="fused", path="fused"):
+    """Bench rows whose measured_us comes exactly from a known us-per-op
+    vector, over enough distinct shapes to constrain the refit."""
+    rows = []
+    shapes = [
+        ("knn", {"N": n, "d": d, "k": 4})
+        for n, d in [(200, 8), (400, 16), (800, 24), (1600, 32)]
+    ] + [
+        ("gnb", {"C": c, "d": d}) for c, d in [(3, 8), (5, 16), (10, 32)]
+    ] + [
+        ("kmeans", {"K": k, "d": d}) for k, d in [(2, 8), (4, 16), (8, 32)]
+    ]
+    for i, (algo, shape) in enumerate(shapes):
+        census = precision.serve_census(algo, shape)
+        us = float(census.vector() @ true_vec)
+        rows.append({"tier": tier, "algorithm": algo,
+                     "op": dispatch.HOT_OPS[algo],
+                     "bucket": 8 * (1 + i % 3), "path": path,
+                     "measured_us": us, "shape": shape})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: known vector -> synthetic rows -> refit -> small error
+
+
+def test_fit_tier_recovers_synthetic_vector_predictions():
+    true_vec = precision.BACKENDS["fpu"].vector() * 0.017
+    rows = _synthetic_rows(true_vec)
+    fitted, launch_us, pred = calibrate.fit_tier(rows, iters=2000)
+    y = np.array([r["measured_us"] for r in rows])
+    rel = np.abs(pred - y) / y
+    assert np.median(rel) < 0.05, rel
+    # synthetic rows carry no launch overhead: the fitted term stays small
+    assert launch_us < 0.05 * float(y.min()) * 8 + 1e-6
+
+
+def test_fit_calibration_summary_and_vectors():
+    true_vec = precision.BACKENDS["fpu"].vector() * 0.017
+    rows = _synthetic_rows(true_vec)
+    fit = calibrate.fit_calibration(rows, iters=2000)
+    assert set(fit["vectors"]) == {"fused"}
+    assert set(fit["vectors"]["fused"]) == set(precision.OPS) | {"launch_us"}
+    ts = fit["summary"]["tiers"]["fused"]
+    assert ts["n"] == len(rows)
+    assert ts["median_abs_rel_err"] < 0.05
+    # exact-fpu-proportional rows: us_per_cycle is the scale itself
+    assert fit["summary"]["us_per_cycle"] == pytest.approx(0.017, rel=0.05)
+
+
+def test_single_row_tier_keeps_scaled_seed():
+    true_vec = precision.BACKENDS["fpu"].vector() * 0.5
+    rows = _synthetic_rows(true_vec)[:1]
+    fitted, launch_us, pred = calibrate.fit_tier(rows)
+    assert launch_us == 0.0
+    assert pred[0] == pytest.approx(rows[0]["measured_us"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Artifact round-trip through the schema-checked accumulator
+
+
+def test_calibration_artifact_roundtrip(tmp_path):
+    report = calibrate._report()
+    rows = _synthetic_rows(precision.BACKENDS["fpu"].vector() * 0.01)
+    fit = calibrate.fit_calibration(rows, iters=500)
+    path = tmp_path / "CALIBRATION.json"
+    report.write_calibration_entry(fit["results"], vectors=fit["vectors"],
+                                   summary=fit["summary"], path=path)
+    # load_bench schema-checks every result row
+    loaded = report.load_bench(path, "calibration")
+    entry = loaded["entries"][-1]
+    assert entry["vectors"].keys() == fit["vectors"].keys()
+    cm = precision.CostModel.from_calibration(str(path))
+    assert cm.calibrated and cm.source == "calibrated"
+    assert cm.us_per_cycle == pytest.approx(fit["summary"]["us_per_cycle"])
+    # serve_us answers from the measured rows at the nearest bucket
+    assert cm.serve_us("knn", tier="fused", bucket=8) > 0
+
+
+def test_malformed_artifact_rejected(tmp_path):
+    report = calibrate._report()
+    path = tmp_path / "CALIBRATION.json"
+    bad = {"entries": [{"timestamp": "x", "backend": "cpu",
+                        "results": [{"tier": "fused"}]}]}
+    path.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="missing"):
+        report.load_bench(path, "calibration")
+
+
+# ---------------------------------------------------------------------------
+# Decision flips: measured rows overturn the analytic selectors
+
+
+def _flip_model(ref_fast=True):
+    """A calibrated model whose fp32 path rows say ref beats fused (or
+    vice versa) at bucket 32."""
+    fast, slow = (50.0, 200.0)
+    entry = {"results": [
+        {"tier": "fp32-ref", "algorithm": "knn", "op": "distance_topk",
+         "bucket": 32, "path": "ref",
+         "measured_us": fast if ref_fast else slow,
+         "predicted_us": 0.0, "rel_err": 0.0},
+        {"tier": "fused", "algorithm": "knn", "op": "distance_topk",
+         "bucket": 32, "path": "fused",
+         "measured_us": slow if ref_fast else fast,
+         "predicted_us": 0.0, "rel_err": 0.0},
+    ]}
+    return precision.CostModel.from_calibration(entry)
+
+
+def test_preferred_path_flips_resolve():
+    shape = dict(N=4096, d=32, Q=32, k=8)
+    analytic = dispatch.resolve("knn", "distance_topk", **shape)
+    assert analytic.name == "fused"     # shape selector's verdict
+    cm = _flip_model(ref_fast=True)
+    assert cm.preferred_path("knn", bucket=32) == "ref"
+    got = dispatch.resolve("knn", "distance_topk", cost_model=cm, **shape)
+    assert got.name == "ref"
+    # measured agreement with the selector changes nothing
+    cm2 = _flip_model(ref_fast=False)
+    got2 = dispatch.resolve("knn", "distance_topk", cost_model=cm2, **shape)
+    assert got2.name == "fused"
+
+
+def test_analytic_model_is_inert_in_resolve():
+    shape = dict(N=4096, d=32, Q=32, k=8)
+    cm = precision.CostModel.analytic()
+    assert not cm.calibrated
+    assert cm.preferred_path("knn", bucket=32) is None
+    got = dispatch.resolve("knn", "distance_topk", cost_model=cm, **shape)
+    assert got.name == "fused"
+
+
+def test_explicit_path_outranks_calibration():
+    shape = dict(N=4096, d=32, Q=32, k=8)
+    cm = _flip_model(ref_fast=True)
+    got = dispatch.resolve("knn", "distance_topk", path="fused",
+                           cost_model=cm, **shape)
+    assert got.name == "fused"
+
+
+def test_calibrated_strategy_flip():
+    # analytic regime (test_strategy_dispatch): bucket=1 x 8 shards ->
+    # "reference".  Calibrated with a large us_per_cycle the Eq. 15
+    # launch/collective constants dominate at bucket=1 and "single" wins.
+    analytic = dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                         shape=KNN_SHAPE)
+    assert analytic == "reference"
+    entry = {"results": [
+        {"tier": "fused", "algorithm": "knn", "op": "distance_topk",
+         "bucket": 1, "path": "fused", "measured_us": 10.0,
+         "predicted_us": 0.0, "rel_err": 0.0}],
+        "summary": {"us_per_cycle": 1.0}}
+    cm = precision.CostModel.from_calibration(entry)
+    costs = cm.strategy_costs("knn", bucket=1, n_shards=8, shape=KNN_SHAPE)
+    assert costs["single"].total < costs["reference"].total
+    got = dispatch.resolve_strategy("knn", bucket=1, n_shards=8,
+                                    shape=KNN_SHAPE, cost_model=cm)
+    assert got == "single"
+
+
+def test_env_var_loads_calibration(tmp_path, monkeypatch):
+    report = calibrate._report()
+    rows = _synthetic_rows(precision.BACKENDS["fpu"].vector() * 0.01)
+    fit = calibrate.fit_calibration(rows, iters=200)
+    path = tmp_path / "CALIBRATION.json"
+    report.write_calibration_entry(fit["results"], vectors=fit["vectors"],
+                                   summary=fit["summary"], path=path)
+    monkeypatch.setenv(dispatch.CALIBRATION_ENV_VAR, str(path))
+    dispatch.set_cost_model(None)       # drop cache, allow env reload
+    try:
+        cm = dispatch.active_cost_model()
+        assert cm.calibrated and cm.source == "calibrated"
+    finally:
+        monkeypatch.delenv(dispatch.CALIBRATION_ENV_VAR)
+        dispatch.set_cost_model(None)
+        dispatch._ENV_CALIBRATION_LOADED = False
+
+
+# ---------------------------------------------------------------------------
+# collect_rows joins the accumulators (and skips shape-less records)
+
+
+def test_collect_rows_skips_shapeless_records(tmp_path, monkeypatch):
+    report = calibrate._report()
+    est_path = tmp_path / "BENCH_estimators.json"
+    monkeypatch.setattr(report, "BENCH_ESTIMATORS", est_path)
+    monkeypatch.setattr(report, "BENCH_QUANT", tmp_path / "BENCH_quant.json")
+    monkeypatch.setattr(report, "BENCH_TENANTS",
+                        tmp_path / "BENCH_tenants.json")
+    report.write_estimators_entry([
+        {"algorithm": "knn", "policy": "fp32", "bucket": 8, "path": "fused",
+         "us_per_query": 12.0, "shards": 1,
+         "shape": {"N": 100, "d": 8, "k": 4}},
+        {"algorithm": "gnb", "policy": "fp32", "bucket": 8, "path": "ref",
+         "us_per_query": 5.0, "shards": 1},          # no shape -> skipped
+    ], path=est_path)
+    rows = calibrate.collect_rows(report)
+    assert len(rows) == 1
+    assert rows[0]["algorithm"] == "knn"
+    assert rows[0]["tier"] == "fused"
+
+
+# ---------------------------------------------------------------------------
+# Loud-failure regressions: unknown algorithms name the missing census
+
+
+def test_serve_census_unknown_algorithm_raises():
+    with pytest.raises(ValueError, match="no serve census for 'dbscan'"):
+        precision.serve_census("dbscan", {})
+
+
+def test_merge_elems_unknown_algorithm_raises():
+    with pytest.raises(ValueError, match="no merge model for 'dbscan'"):
+        precision.merge_elems("dbscan", {})
+
+
+def test_serve_strategy_costs_unknown_algorithm_raises():
+    with pytest.raises(ValueError, match="serve census"):
+        precision.serve_strategy_costs("dbscan", bucket=8, n_shards=8)
+
+
+def test_estimated_cycles_unknown_algorithm_raises():
+    policy = dispatch.get_policy("fp32")
+    with pytest.raises(ValueError, match="no census for algorithm 'dbscan'"):
+        policy.estimated_cycles("dbscan")
+
+
+def test_tier_for_mapping():
+    assert precision.tier_for("fp32", path="ref") == "fp32-ref"
+    assert precision.tier_for("fp32", path="fused") == "fused"
+    assert precision.tier_for("bf16") == "bf16"
+    assert precision.tier_for("fp32", quantized=True) == "int8"
+    assert precision.tier_for("fp32", grouped=True) == "grouped"
