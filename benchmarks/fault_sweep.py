@@ -1,0 +1,248 @@
+"""Fault-injection A/B: the committed ChaosPlan replayed with graceful
+degradation OFF vs ON.
+
+Per algorithm, one seeded ``ChaosPlan`` (runtime/chaos.py "mixed": burst
+overload + straggler ticks; the tenant cell adds NaN-poisoned updates
+and eviction storms) is replayed twice through identical schedulers —
+the only difference is the robustness layer:
+
+  * OFF — admission control + deadline shedding only: overload turns
+    into expiry sheds (the honest baseline; an unbounded queue would
+    just convert every shed into a deadline miss).
+  * ON — the same, plus the brownout ladder (fp32 -> int8 -> ANN
+    siblings, serving/degrade.py; store mode: group-launch splitting +
+    per-tenant circuit breakers).
+
+The claim under test is the paper's latency/energy tradeoff applied to
+overload: cheaper representations clear the backlog within the same
+per-drain budget, so ``miss_plus_shed_rate`` must DROP when the ladder
+is armed, while the answers served from degraded tiers keep >=
+``AGREEMENT_FLOOR`` label agreement against the exact fp32 oracle (the
+same bound the committed BENCH_quant / BENCH_ann sweeps pin).
+
+Results accumulate in BENCH_faults.json via benchmarks/report.py.
+
+  PYTHONPATH=src python -m benchmarks.fault_sweep [--quick]
+"""
+from __future__ import annotations
+
+import sys
+from collections import Counter
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ALGORITHMS = ("knn", "gnb", "kmeans")
+ALGORITHMS_QUICK = ("knn", "gnb")
+TICKS, TICKS_QUICK = 64, 48
+RATE = 6.0                    # arrivals/tick ~ 0.75x one drain's capacity
+MAX_BATCH = 16
+MAX_WAIT = 2
+DEADLINE = 6                  # ticks; bursts overrun it without brownout
+MAX_QUEUE = 256
+SEED = 0
+N_TENANTS = 6
+AGREEMENT_FLOOR = 0.95        # brownout rows must agree with fp32 oracle
+
+
+def _agreement(sched, ids, oracle, n_queries, per_tier=False):
+    """Label agreement of SERVED predictions vs the exact oracle, overall
+    and (optionally) per brownout tier.  Request ids are in submission
+    order and replay_trace cycles queries, so id index j maps to oracle
+    row ``j % n_queries``."""
+    hits: Counter = Counter()
+    tot: Counter = Counter()
+    for j, rid in enumerate(ids):
+        r = sched.results[rid]
+        if r.shed or r.cache_hit:
+            continue
+        key = r.tier if per_tier else "all"
+        tot[key] += 1
+        hits[key] += int(r.prediction) == int(oracle[j % n_queries])
+    if not per_tier:
+        return hits["all"] / tot["all"] if tot["all"] else float("nan")
+    return {k: hits[k] / tot[k] for k in tot}
+
+
+def _single_cell(algo, X, y, Q, ticks, degrade_on):
+    from repro.core.estimator import make_fitted
+    from repro.runtime.chaos import ChaosInjector, ChaosPlan
+    from repro.serving import (DegradePolicy, NonNeuralServeEngine,
+                               RequestScheduler, build_ladder,
+                               poisson_trace, replay_trace)
+
+    est = make_fitted(algo, X, y, n_groups=int(y.max()) + 1)
+    engine = NonNeuralServeEngine(est, max_batch=MAX_BATCH)
+    engine.warmup_buckets(X.shape[1])
+    degrade = None
+    if degrade_on:
+        degrade = DegradePolicy(build_ladder(engine, X.shape[1]),
+                                deadline=DEADLINE)
+    sched = RequestScheduler(engine, max_wait=MAX_WAIT,
+                             max_queue=MAX_QUEUE, shed_expired=True,
+                             degrade=degrade)
+    plan = ChaosPlan.preset("mixed", seed=SEED, ticks=ticks)
+    counts = poisson_trace(RATE, ticks, seed=SEED + 1)
+    ids = replay_trace(sched, Q, counts, deadline=DEADLINE,
+                       chaos=ChaosInjector(plan))
+    # no mid-stream compile, per tier, under every injected fault
+    for tier, per in sched.stats.tier_bucket_launches.items():
+        assert set(per) <= set(sched.tier_warmed[tier]), (algo, tier)
+    oracle = np.asarray(est.predict_batch(Q)[0])
+    s = sched.stats.summary()
+    rec = {
+        "algorithm": algo, "mode": "single", "plan": "mixed",
+        "seed": SEED, "ticks": ticks, "degrade": bool(degrade_on),
+        "completed": s["completed"], "shed": s["shed"],
+        "shed_rate": s["shed_rate"],
+        "miss_rate": s["deadline_miss_rate"],
+        "miss_plus_shed_rate": s["miss_plus_shed_rate"],
+        "label_agreement": _agreement(sched, ids, oracle, len(Q)),
+        "tier_agreement": _agreement(sched, ids, oracle, len(Q),
+                                     per_tier=True),
+        "downshifts": sched.stats.downshifts,
+        "tier_served": dict(sched.stats.tier_served),
+        "shed_reasons": dict(sched.stats.shed_reasons),
+    }
+    return rec
+
+
+def _tenant_cell(algo, d, n_class, Q, ticks, degrade_on):
+    from repro.core.estimator import make_fitted
+    from repro.data.datasets import class_blobs
+    from repro.runtime.chaos import ChaosInjector, ChaosPlan
+    from repro.serving import (BreakerConfig, DegradePolicy, ModelStore,
+                               RequestScheduler, poisson_trace,
+                               replay_trace)
+
+    store = ModelStore()
+    fits = []
+    for t in range(N_TENANTS):
+        Xt, yt = class_blobs(n=120, d=d, n_class=n_class, seed=t)
+        est = make_fitted(algo, Xt, yt, n_groups=n_class)
+        store.register(t, est)
+        fits.append(est)
+    engine = store.make_engine(max_batch=MAX_BATCH, max_group=8)
+    stacked, _ = store.group([0])
+    engine.warmup_groups(stacked, d)
+    degrade = breaker = None
+    if degrade_on:
+        degrade = DegradePolicy(None, deadline=DEADLINE)
+        breaker = BreakerConfig()
+    sched = RequestScheduler(engine, store=store, max_wait=MAX_WAIT,
+                             max_queue=MAX_QUEUE, shed_expired=True,
+                             degrade=degrade, breaker=breaker)
+    plan = ChaosPlan.preset("storm", seed=SEED, ticks=ticks,
+                            n_tenants=N_TENANTS)
+    counts = poisson_trace(RATE, ticks, seed=SEED + 1)
+    mids = list(range(N_TENANTS))
+    ids = replay_trace(sched, Q, counts, deadline=DEADLINE,
+                       model_ids=mids,
+                       chaos=ChaosInjector(plan, store=store))
+    assert set(engine.group_launches) <= engine.warmed_groups, algo
+    # every poisoned update was refused; published generations stayed put
+    assert store.poisoned_rejections == len(plan.nan_events), \
+        (store.poisoned_rejections, plan.nan_events)
+    assert all(store.generation(m) == 0 for m in mids)
+    # per-tenant oracle on the cycled (query, tenant) pairing
+    oracles = [np.asarray(e.predict_batch(Q)[0]) for e in fits]
+    hits = tot = 0
+    for j, rid in enumerate(ids):
+        r = sched.results[rid]
+        if r.shed or r.cache_hit:
+            continue
+        tot += 1
+        hits += int(r.prediction) == \
+            int(oracles[j % N_TENANTS][j % len(Q)])
+    s = sched.stats.summary()
+    rec = {
+        "algorithm": algo, "mode": "tenant", "plan": "storm",
+        "seed": SEED, "ticks": ticks, "degrade": bool(degrade_on),
+        "completed": s["completed"], "shed": s["shed"],
+        "shed_rate": s["shed_rate"],
+        "miss_rate": s["deadline_miss_rate"],
+        "miss_plus_shed_rate": s["miss_plus_shed_rate"],
+        "label_agreement": hits / tot if tot else float("nan"),
+        "tier_agreement": {},
+        "downshifts": sched.stats.downshifts,
+        "tier_served": dict(sched.stats.tier_served),
+        "shed_reasons": dict(sched.stats.shed_reasons),
+        "poisoned_rejections": store.poisoned_rejections,
+        "breaker_opens": sum(e.kind == "breaker_open"
+                             for e in sched.events),
+    }
+    return rec
+
+
+def run(csv_rows: list, quick: bool = False):
+    from repro.data.datasets import class_blobs
+
+    algos = ALGORITHMS_QUICK if quick else ALGORITHMS
+    ticks = TICKS_QUICK if quick else TICKS
+    n, d, n_class = (200, 8) if quick else (320, 12), 8 if quick else 12, 3
+    n = n[0] if isinstance(n, tuple) else n
+
+    X, y = class_blobs(n=n + 64, d=d, n_class=n_class)
+    X, Q = X[:n], X[n:]
+    y = y[:n]
+    results = []
+    print("\n== Fault-injection A/B (chaos replay, degrade off vs on) ==")
+    print(f"{'algo':7s} {'mode':7s} {'degrade':>7s} {'done':>5s} "
+          f"{'shed':>5s} {'miss+shed':>9s} {'agree':>6s} {'tiers'}")
+    for algo in algos:
+        for degrade_on in (False, True):
+            rec = _single_cell(algo, X, y, Q, ticks, degrade_on)
+            results.append(rec)
+            print(f"{algo:7s} {'single':7s} "
+                  f"{'on' if degrade_on else 'off':>7s} "
+                  f"{rec['completed']:5d} {rec['shed']:5d} "
+                  f"{rec['miss_plus_shed_rate']:9.3f} "
+                  f"{rec['label_agreement']:6.3f} "
+                  f"{rec['tier_served']}")
+            csv_rows.append(
+                (f"fault_sweep/{algo}/single/"
+                 f"{'on' if degrade_on else 'off'}",
+                 rec["miss_plus_shed_rate"],
+                 f"shed={rec['shed']};agree={rec['label_agreement']:.3f}"))
+    # one tenant cell (gnb: cheapest grouped arm) — NaN + storm + breaker
+    for degrade_on in (False, True):
+        rec = _tenant_cell("gnb", d, n_class, Q, ticks, degrade_on)
+        results.append(rec)
+        print(f"{'gnb':7s} {'tenant':7s} "
+              f"{'on' if degrade_on else 'off':>7s} "
+              f"{rec['completed']:5d} {rec['shed']:5d} "
+              f"{rec['miss_plus_shed_rate']:9.3f} "
+              f"{rec['label_agreement']:6.3f} "
+              f"{rec['tier_served']}")
+        csv_rows.append(
+            (f"fault_sweep/gnb/tenant/{'on' if degrade_on else 'off'}",
+             rec["miss_plus_shed_rate"],
+             f"shed={rec['shed']};nan={rec['poisoned_rejections']}"))
+    # the headline claim, asserted where it is measured: armed brownout
+    # strictly cuts miss+shed on the overloaded single-model cells while
+    # degraded tiers keep oracle agreement
+    for algo in algos:
+        off = next(r for r in results if r["algorithm"] == algo
+                   and r["mode"] == "single" and not r["degrade"])
+        on = next(r for r in results if r["algorithm"] == algo
+                  and r["mode"] == "single" and r["degrade"])
+        assert on["miss_plus_shed_rate"] < off["miss_plus_shed_rate"] \
+            or off["miss_plus_shed_rate"] == 0.0, (algo, off, on)
+        for tier, agree in on["tier_agreement"].items():
+            assert agree >= AGREEMENT_FLOOR, (algo, tier, agree)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import report
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    report.write_faults_entry(run([], quick=args.quick))
+    print("\n### Fault-injection A/B (graceful degradation)\n")
+    print(report.faults_table())

@@ -29,6 +29,8 @@ BENCH_ANN = Path(__file__).resolve().parents[1] / \
     "BENCH_ann.json"
 BENCH_TENANTS = Path(__file__).resolve().parents[1] / \
     "BENCH_tenants.json"
+BENCH_FAULTS = Path(__file__).resolve().parents[1] / \
+    "BENCH_faults.json"
 CALIBRATION = Path(__file__).resolve().parents[1] / \
     "CALIBRATION.json"
 
@@ -55,6 +57,9 @@ _RESULT_KEYS = {
                 "us_per_query_grouped", "us_per_query_loop"),
     "calibration": ("tier", "algorithm", "op", "bucket", "path",
                     "measured_us", "predicted_us", "rel_err"),
+    "faults": ("algorithm", "mode", "plan", "degrade", "completed",
+               "shed", "shed_rate", "miss_rate", "miss_plus_shed_rate",
+               "label_agreement"),
 }
 
 
@@ -228,6 +233,14 @@ def write_tenants_entry(results, path: Path = BENCH_TENANTS) -> dict:
     return _append_entry(results, path, "tenants")
 
 
+def write_faults_entry(results, path: Path = BENCH_FAULTS) -> dict:
+    """Append one chaos A/B sweep (the committed ChaosPlan replayed with
+    graceful degradation off vs on, per algorithm and serving mode:
+    miss+shed rate, brownout-tier label agreement vs the exact fp32
+    oracle, downshift counts) to BENCH_faults.json."""
+    return _append_entry(results, path, "faults")
+
+
 def write_calibration_entry(results, *, vectors, summary,
                             path: Path = CALIBRATION) -> dict:
     """Append one calibration fit (per-(tier, algorithm, bucket)
@@ -270,6 +283,27 @@ def tenants_table(path: Path = BENCH_TENANTS) -> str:
                 f"{r['n_tenants']} | {r['resident_frac']:.2f} | "
                 f"{r['bucket']} | {r['us_per_query_grouped']:.1f} | "
                 f"{r['us_per_query_loop']:.1f} | {speed:.2f}x |")
+    return "\n".join(lines)
+
+
+def faults_table(path: Path = BENCH_FAULTS) -> str:
+    if not path.exists():
+        return "(no BENCH_faults.json yet — run benchmarks/fault_sweep.py)"
+    data = load_bench(path, "faults")
+    lines = ["| when | algo | mode | plan | degrade | completed | shed | "
+             "miss+shed | agreement | downshifts | tiers |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for e in data["entries"]:
+        for r in e["results"]:
+            tiers = ", ".join(f"{k}:{v}" for k, v in sorted(
+                r.get("tier_served", {}).items())) or "—"
+            lines.append(
+                f"| {e['timestamp']} | {r['algorithm']} | {r['mode']} | "
+                f"{r['plan']} | {'on' if r['degrade'] else 'off'} | "
+                f"{r['completed']} | {r['shed']} | "
+                f"{r['miss_plus_shed_rate']:.3f} | "
+                f"{r['label_agreement']:.3f} | {r.get('downshifts', 0)} | "
+                f"{tiers} |")
     return "\n".join(lines)
 
 
@@ -431,6 +465,11 @@ def main():
                     help="run the multi-tenant grouped-vs-loop sweep "
                          "(ModelStore + vmapped group launch per tenant "
                          "count) and append an entry to BENCH_tenants.json")
+    ap.add_argument("--faults", action="store_true",
+                    help="replay the committed ChaosPlan with graceful "
+                         "degradation off vs on (admission control, "
+                         "deadline shedding, brownout ladder, breakers) "
+                         "and append an entry to BENCH_faults.json")
     ap.add_argument("--paper-tables", action="store_true",
                     help="print the unified backend-rung table (analytic "
                          "Table-2 fits + measured CALIBRATION.json tiers, "
@@ -451,6 +490,12 @@ def main():
                   f"{r['energy_uj']:.3f} |")
         print("\n### Calibration (predicted vs measured)\n")
         print(calibration_table())
+        return
+    if args.faults:
+        from benchmarks.fault_sweep import run as run_faults
+        write_faults_entry(run_faults([], quick=True))
+        print("\n### Fault-injection A/B (graceful degradation)\n")
+        print(faults_table())
         return
     if args.tenants:
         from benchmarks.tenant_sweep import run as run_tenants

@@ -23,9 +23,9 @@ def main() -> None:
     csv_rows: list = []
 
     from benchmarks import ann_sweep, cortex_m4, estimator_sweep
-    from benchmarks import fp_backends, kernel_blocks, parallel_speedup
-    from benchmarks import quant_ab, report, roofline, serving_load, sorting
-    from benchmarks import tenant_sweep
+    from benchmarks import fault_sweep, fp_backends, kernel_blocks
+    from benchmarks import parallel_speedup, quant_ab, report, roofline
+    from benchmarks import serving_load, sorting, tenant_sweep
 
     fitted = fp_backends.run(csv_rows)          # Fig. 9 / Table 2
     parallel_speedup.run(csv_rows, fitted)      # Fig. 10 / Table 3
@@ -46,6 +46,8 @@ def main() -> None:
     report.write_ann_entry(ann)                 # recall@k vs latency (§10)
     tenants = tenant_sweep.run(csv_rows, quick=args.quick)
     report.write_tenants_entry(tenants)         # grouped-vs-loop (§11)
+    faults = fault_sweep.run(csv_rows, quick=args.quick)
+    report.write_faults_entry(faults)           # chaos degrade A/B (§13)
     roofline.run(csv_rows)                      # deliverable (g)
 
     # close the loop (DESIGN.md §12): refit the cost model against the

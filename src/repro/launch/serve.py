@@ -217,6 +217,49 @@ def serve_tenants(args):
     return res
 
 
+def _chaos_injector(args, store=None, n_tenants: int = 0):
+    """--chaos PLAN: a named preset (runtime.chaos.PRESETS) seeded with
+    --seed, or a path to a ChaosPlan JSON (the committed CI traces)."""
+    if not args.chaos:
+        return None
+    from repro.runtime.chaos import PRESETS, ChaosInjector, ChaosPlan
+    if args.chaos in PRESETS:
+        plan = ChaosPlan.preset(args.chaos, seed=args.seed,
+                                ticks=args.ticks, n_tenants=n_tenants)
+    else:
+        with open(args.chaos) as f:
+            plan = ChaosPlan.from_json(f.read())
+    print(f"[chaos] plan={args.chaos} seed={plan.seed} "
+          f"stragglers={len(plan.straggler_ticks)} "
+          f"nan={len(plan.nan_events)} storms={len(plan.storm_ticks)} "
+          f"bursts={len(plan.burst)}")
+    return ChaosInjector(plan, store=store)
+
+
+def _print_robustness(sched):
+    s = sched.stats.summary()
+    if sched.stats.shed or sched.stats.downshifts or sched.stats.upshifts:
+        print(f"[robust] shed={s['shed']} ({dict(sched.stats.shed_reasons)})"
+              f"  shed_rate={s['shed_rate']:.3f}  "
+              f"miss+shed={s['miss_plus_shed_rate']:.3f}  "
+              f"downshifts={s['downshifts']} "
+              f"upshifts={sched.stats.upshifts}  "
+              f"tiers={dict(sched.stats.tier_launches)}")
+    from collections import Counter
+    kinds = Counter(e.kind for e in sched.events)
+    if kinds:
+        print(f"[robust] events: "
+              + ", ".join(f"{k}={n}" for k, n in sorted(kinds.items())))
+    # degradation must never be the thing that compiles: every launched
+    # bucket sits in the INIT-TIME warmed snapshot of its own tier
+    # (grouped schedulers record launch FOOTPRINTS per split level; their
+    # no-compile invariant is the warmed_groups check the caller runs)
+    if sched.store is None:
+        for tier, per in sched.stats.tier_bucket_launches.items():
+            assert set(per) <= set(sched.tier_warmed.get(tier, ())), \
+                (tier, sorted(per), sorted(sched.tier_warmed.get(tier, ())))
+
+
 def serve_tenant_stream(args, store, engine, Q):
     """--tenants --stream: cross-tenant Poisson arrivals coalesced by the
     store-mode RequestScheduler into (model-group x bucket) grouped
@@ -229,13 +272,23 @@ def serve_tenant_stream(args, store, engine, Q):
     ids = list(range(G))
     stacked, _gens = store.group(ids)
     engine.warmup_groups(stacked, d)
+    degrade = None
+    breaker = None
+    if args.degrade:
+        from repro.serving import BreakerConfig, DegradePolicy
+        degrade = DegradePolicy(None, deadline=args.deadline)
+        breaker = BreakerConfig()
     sched = RequestScheduler(engine, max_wait=args.max_wait,
-                             cache_size=args.cache_size, store=store)
+                             cache_size=args.cache_size, store=store,
+                             max_queue=args.max_queue,
+                             shed_expired=args.degrade, degrade=degrade,
+                             breaker=breaker)
+    chaos = _chaos_injector(args, store=store, n_tenants=G)
     counts = poisson_trace(args.rate, args.ticks, seed=args.seed)
     flat = np.asarray(Q).reshape(-1, d)
     t0 = time.time()
     rids = replay_trace(sched, flat, counts, deadline=args.deadline,
-                        model_ids=ids)
+                        model_ids=ids, chaos=chaos)
     dt = time.time() - t0
     s = sched.stats.summary()
     print(f"[tenants/stream] algo={args.algo} G={G} rate={args.rate} "
@@ -258,6 +311,7 @@ def serve_tenant_stream(args, store, engine, Q):
         print(f"{mid:>6} {ts['served']:>6} {ts['p50']:>5.0f} "
               f"{ts['p95']:>5.0f} {ts['occupancy']:>9.2f} "
               f"{ts['hit_rate']:>8.2f}")
+    _print_robustness(sched)
     assert set(engine.group_launches) <= engine.warmed_groups, \
         "stream compiled a new (group, bucket) cell mid-flight"
     return sched.stats
@@ -277,23 +331,37 @@ def serve_stream(args, engine, Q):
             + ("*" if a.differs else "")
             for b, a in sorted(engine.tuned.items()))
         print(f"[autotune] tuned arms (* = differs from static): {arms}")
+    degrade = None
+    if args.degrade:
+        from repro.serving import DegradePolicy, build_ladder
+        tiers = build_ladder(engine, Q.shape[1])
+        degrade = DegradePolicy(tiers, deadline=args.deadline)
+        print(f"[degrade] ladder: "
+              + " -> ".join(f"{t.name} (x{t.capacity_factor})"
+                            for t in tiers))
     sched = RequestScheduler(engine, max_wait=args.max_wait,
-                             cache_size=args.cache_size)
+                             cache_size=args.cache_size,
+                             max_queue=args.max_queue,
+                             shed_expired=args.degrade, degrade=degrade)
+    chaos = _chaos_injector(args)
     counts = poisson_trace(args.rate, args.ticks, seed=args.seed)
     t0 = time.time()
-    ids = replay_trace(sched, Q, counts, deadline=args.deadline)
+    ids = replay_trace(sched, Q, counts, deadline=args.deadline,
+                       chaos=chaos)
     dt = time.time() - t0
     s = sched.stats.summary()
     print(f"[stream] algo={args.algo} policy={args.policy} "
           f"shards={engine.n_shards} rate={args.rate} ticks={args.ticks} "
           f"max_wait={args.max_wait} cache={args.cache_size}")
+    n_strag = sum(e.kind.startswith("straggler_") for e in sched.events)
     print(f"[stream] served {len(ids)} requests in {dt:.3f}s wall "
           f"({s['launches']} launches, buckets={engine.bucket_launches}, "
-          f"straggler events={len(sched.events)})")
+          f"straggler events={n_strag})")
     print(f"[stream] latency ticks p50={s['p50']:.0f} p95={s['p95']:.0f} "
           f"p99={s['p99']:.0f}  throughput={s['throughput']:.2f} req/tick  "
           f"occupancy={s['occupancy']:.2f}  hit_rate={s['hit_rate']:.2f}  "
           f"deadline_miss={s['deadline_miss_rate']:.2f}")
+    _print_robustness(sched)
     assert set(engine.bucket_launches) <= sched.warmed, \
         "stream compiled a new bucket mid-flight"
     return sched.stats
@@ -357,6 +425,22 @@ def main(argv=None):
                     help="--stream per-request SLO in drain ticks")
     ap.add_argument("--seed", type=int, default=0,
                     help="--stream arrival-trace rng seed")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="--stream admission-control bound: submits "
+                         "beyond this many queued requests shed with "
+                         "reason=queue_full (default unbounded)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="--stream graceful degradation: deadline-"
+                         "enforced shedding plus the brownout ladder "
+                         "(fp32 -> int8 -> ANN siblings of the same "
+                         "model; --tenants streams split the grouped "
+                         "launch and arm per-tenant circuit breakers "
+                         "instead; serving/degrade.py)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="--stream deterministic fault injection: a "
+                         "preset name (burst, straggler, storm, mixed) "
+                         "seeded with --seed, or a path to a ChaosPlan "
+                         "JSON (runtime/chaos.py)")
     ap.add_argument("--nprobe", type=int, default=4,
                     help="--algo ann: IVF cells probed per query (more = "
                          "higher recall, more ADC work)")

@@ -1,1 +1,5 @@
-from repro.runtime import elastic, fault_tolerance, straggler  # noqa: F401
+from repro.runtime import chaos  # noqa: F401
+from repro.runtime import elastic, events, fault_tolerance, \
+    straggler  # noqa: F401
+from repro.runtime.chaos import ChaosInjector, ChaosPlan  # noqa: F401
+from repro.runtime.events import Event, event  # noqa: F401

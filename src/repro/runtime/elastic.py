@@ -18,6 +18,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.configs.base import MeshConfig
+from repro.runtime.events import Event, event
 
 
 @dataclass(frozen=True)
@@ -25,6 +26,22 @@ class ElasticPlan:
     mesh: MeshConfig
     microbatch_multiplier: int   # extra grad-accum steps vs. the full mesh
     dropped_chips: int
+
+
+def replan_event(plan: Optional["ElasticPlan"], tick: int,
+                 source: str = "elastic") -> Event:
+    """The typed ``elastic_replan`` event for one replan outcome — the
+    same runtime/events.py vocabulary the scheduler's straggler
+    escalations and the chaos harness emit into, so a consumer can read
+    "evict verdict -> replan" off ONE stream instead of correlating
+    ad-hoc tuples across modules.  ``plan=None`` (capacity below one
+    model group) is recorded as ``feasible=False``."""
+    if plan is None:
+        return event("elastic_replan", tick, source, feasible=False)
+    return event("elastic_replan", tick, source, feasible=True,
+                 data=plan.mesh.data, model=plan.mesh.model,
+                 pods=plan.mesh.pods, dropped=plan.dropped_chips,
+                 microbatch_multiplier=plan.microbatch_multiplier)
 
 
 def plan_mesh(available_chips: int, target: MeshConfig,

@@ -1,0 +1,86 @@
+"""One typed event vocabulary for the runtime and serving layers.
+
+Before this module, three layers kept their own ad-hoc event encodings:
+``FaultTolerantRunner.events`` held bare tuples (``("restored", step)``),
+``RequestScheduler.events`` held a different tuple shape
+(``(action, tick, ratio)``), and ``runtime/elastic.py`` had no event at
+all even though an evict verdict is exactly when a replan happens.  The
+chaos harness (runtime/chaos.py) and the degradation ladder
+(serving/degrade.py) both need to ASSERT on these streams — "a straggler
+escalation downshifted the tier", "the breaker opened before the shed" —
+which is only tractable when every producer speaks one typed vocabulary.
+
+``Event`` is deliberately a flat NamedTuple (kind, tick, source, detail):
+chaos replays must be bit-deterministic, and NamedTuple equality over a
+detail tuple of sorted (key, value) pairs gives identical streams
+``==``-comparable with no custom machinery.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+# The closed vocabulary.  Producers MUST use one of these kinds —
+# ``event()`` raises on anything else, which is what retired the ad-hoc
+# dicts: a typo'd kind fails at emit time, not in a consumer's filter.
+EVENT_KINDS = frozenset({
+    # straggler escalation ladder (runtime/straggler.py verdicts)
+    "straggler_watch", "straggler_checkpoint", "straggler_evict",
+    # fault-tolerant runner lifecycle (runtime/fault_tolerance.py)
+    "step_failure", "restored",
+    # elastic capacity replanning (runtime/elastic.py)
+    "elastic_replan",
+    # admission control / deadline shedding (serving/scheduler.py)
+    "shed",
+    # per-tenant circuit breaker transitions (serving/degrade.py)
+    "breaker_open", "breaker_half_open", "breaker_close",
+    # brownout degradation ladder (serving/degrade.py)
+    "degrade_down", "degrade_up",
+    # model-store health checks (serving/model_store.py rejections)
+    "nan_rejected",
+    # injected faults (runtime/chaos.py) — one per ChaosPlan fault kind
+    "chaos_burst", "chaos_straggler", "chaos_nan", "chaos_eviction_storm",
+})
+
+
+class Event(NamedTuple):
+    """One typed event: what happened (``kind``), when (``tick`` — drain
+    ticks for serving events, step counter for training events), which
+    layer said so (``source``), and a deterministic detail payload
+    (sorted ``(key, value)`` pairs, so two identical replays produce
+    ``==`` streams)."""
+
+    kind: str
+    tick: int
+    source: str
+    detail: Tuple[Tuple[str, object], ...] = ()
+
+    def get(self, key: str, default=None):
+        for k, v in self.detail:
+            if k == key:
+                return v
+        return default
+
+
+def event(kind: str, tick: int, source: str, **detail) -> Event:
+    """Build a vocabulary-checked ``Event``; raises ``ValueError`` on a
+    kind outside ``EVENT_KINDS`` (the typed-stream contract)."""
+    if kind not in EVENT_KINDS:
+        raise ValueError(
+            f"event kind {kind!r} is not in the shared vocabulary "
+            f"(runtime/events.py EVENT_KINDS); add it there or fix the "
+            f"producer — ad-hoc kinds are how the pre-PR-10 streams "
+            f"diverged")
+    return Event(kind=kind, tick=int(tick), source=source,
+                 detail=tuple(sorted(detail.items())))
+
+
+def straggler_event(verdict, tick: int, source: str) -> Event:
+    """Map a ``StragglerVerdict`` non-ok action onto the vocabulary."""
+    assert verdict.action != "ok", "only non-ok verdicts become events"
+    return event(f"straggler_{verdict.action}", tick, source,
+                 host=verdict.host, ratio=round(float(verdict.ratio), 6))
+
+
+def kinds(events, *wanted: str):
+    """The sub-stream of ``events`` whose kind is in ``wanted``."""
+    return [e for e in events if e.kind in wanted]

@@ -16,6 +16,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 from repro.checkpoint import Checkpointer
+from repro.runtime.events import event, straggler_event
 from repro.runtime.straggler import StepTimer
 
 
@@ -41,7 +42,7 @@ class FaultTolerantRunner:
         step, restored = self.ckpt.restore_latest(like, sharding)
         if step is None:
             return state
-        self.events.append(("restored", step))
+        self.events.append(event("restored", step, "runner"))
         return RunState(step=step, params=restored["params"],
                         opt_state=restored["opt_state"])
 
@@ -60,15 +61,23 @@ class FaultTolerantRunner:
                     # the post-step params belong to step+1: labelling them
                     # with the pre-step counter makes a restore replay an
                     # already-applied update (double-applied step)
-                    self.events.append(("straggler_checkpoint",
-                                        new_state.step))
+                    self.events.append(
+                        straggler_event(verdict, new_state.step, "runner"))
+                    self.checkpoint(new_state)
+                elif verdict.action == "evict":
+                    # an evicted host means capacity loss — record the
+                    # escalation in the SAME typed stream the elastic
+                    # replanner (runtime/elastic.py) consumes
+                    self.events.append(
+                        straggler_event(verdict, new_state.step, "runner"))
                     self.checkpoint(new_state)
                 elif new_state.step % self.ckpt_every == 0:
                     self.checkpoint(new_state)
                 return new_state
             except Exception as e:  # transient device failure path
                 attempt += 1
-                self.events.append(("step_failure", state.step, repr(e)[:200]))
+                self.events.append(event("step_failure", state.step,
+                                         "runner", error=repr(e)[:200]))
                 if attempt > self.max_retries:
                     raise
                 restored = self.maybe_restore(state)

@@ -8,6 +8,13 @@ collective. Mitigation at scale is host-side:
     ``patience`` consecutive records. Fleet-relative comparison matters: a
     consistently slow host has a perfectly stable self-history, so z-scores
     against its own past never fire.
+  - Single-host degeneracy: with ONE host the fleet median IS that host's
+    own EWMA, so the ratio is identically 1.0 and ``ratio_threshold`` can
+    never fire — which silently disabled straggler detection for every
+    single-host serving scheduler.  A lone host is therefore compared
+    against a warmup-calibrated baseline instead: the mean of its first
+    ``warmup`` recorded step times, frozen once warmup completes.  A
+    second host joining switches the comparison back to the fleet median.
   - The advised action escalates: watch -> preemptive checkpoint -> evict
     (feeding runtime/elastic.plan_mesh with the reduced chip count).
 
@@ -28,6 +35,8 @@ class HostStats:
     var: float = 0.0
     n: int = 0
     flagged_streak: int = 0
+    warmup_sum: float = 0.0      # sum of the first ``warmup`` step times
+    baseline: float = 0.0        # frozen warmup mean (single-host denom)
 
 
 @dataclass
@@ -59,8 +68,18 @@ class StepTimer:
             st.ewma = step_time
         st.ewma += self.alpha * (step_time - st.ewma)
         st.n += 1
-        med = self._fleet_median()
-        ratio = st.ewma / med if med > 0 else 1.0
+        if st.n <= self.warmup:
+            st.warmup_sum += step_time
+            if st.n == self.warmup:
+                st.baseline = st.warmup_sum / self.warmup
+        if len(self.hosts) == 1:
+            # single-host degeneracy fix: the fleet median IS this host's
+            # EWMA (ratio would be identically 1.0) — compare against the
+            # frozen warmup-calibrated baseline instead
+            ratio = st.ewma / st.baseline if st.baseline > 0 else 1.0
+        else:
+            med = self._fleet_median()
+            ratio = st.ewma / med if med > 0 else 1.0
         if ratio > self.threshold and st.n > self.warmup:
             st.flagged_streak += 1
         else:

@@ -6,7 +6,18 @@ from repro.serving.engine import (  # noqa: F401
     NonNeuralServeEngine,
     ServeEngine,
 )
-from repro.serving.model_store import ModelStore  # noqa: F401
+from repro.serving.degrade import (  # noqa: F401
+    BreakerConfig,
+    CircuitBreaker,
+    DegradePolicy,
+    DegradeTier,
+    build_ladder,
+)
+from repro.serving.model_store import (  # noqa: F401
+    ModelStore,
+    PoisonedParamsError,
+    validate_finite,
+)
 from repro.serving.scheduler import (  # noqa: F401
     RequestResult,
     RequestScheduler,

@@ -1,0 +1,336 @@
+"""Brownout degradation ladder + per-tenant circuit breakers.
+
+The repo already BUILT the degradation ladder — it just never used it
+under pressure: fp32-fused -> int8 (``BENCH_quant.json``: 3.9x cheaper at
+>=98% label agreement) -> IVF-PQ ANN (``BENCH_ann.json``: 12-31x cheaper
+at recall 1.0 with refine) are progressively cheaper *registered* serving
+arms over the same fitted model.  PULP-NN's framing (arXiv:1908.11263)
+is exactly this tradeoff: under a fixed latency/energy budget you drop
+representation fidelity, not requests.  So when the scheduler's rolling
+latency headroom against the deadline collapses (Eq. 15's budget term
+going negative), the correct overload response is to *downshift tiers* —
+serve slightly-approximate answers fast — rather than to miss deadlines
+or shed traffic, and to recover hysteretically once headroom returns.
+
+``DegradePolicy`` is that controller.  Two modes:
+
+  * **Tiered (single-model)** — a ladder of ``DegradeTier``s, each a
+    warmed ``NonNeuralServeEngine`` over a cheaper representation of the
+    SAME fitted model (``engine.sibling(policy="int8")``; an ANN sibling
+    for exact kNN via ``ann_sibling``).  A tier's ``capacity_factor``
+    scales the requests-per-drain budget: the cheaper kernel clears a
+    backlog proportionally faster within the same per-drain latency
+    budget (factors seeded from the committed BENCH speedups, rounded
+    down to powers of two).
+  * **Group-split (multi-tenant)** — no alternate representations (the
+    grouped launch serves store-resident params), so degradation splits
+    the (model-group x bucket) launch: level L caps the group bucket at
+    ``gmax >> L``, shrinking the admission pin-set a thrashing
+    ``ModelStore`` must hold resident at once.
+
+Downshift triggers (any one, evaluated once per drain): queue
+backpressure over the occupancy threshold, a deadline-shed this drain, a
+non-ok ``StepTimer`` straggler verdict, an eviction storm
+(model-store thrash), or rolling-p95 headroom below ``down_headroom``.
+Recovery is hysteretic: ``hold`` consecutive calm drains AND a
+``cooldown`` since the last shift before stepping back up — one level at
+a time, so a marginal system oscillates between adjacent tiers instead
+of slamming between the extremes.
+
+``CircuitBreaker`` is the per-tenant failure isolator: repeated failures
+(NaN-poisoned updates rejected by the store's health check, repeated
+deadline sheds) open the breaker, which sheds that tenant's requests
+with a typed reason instead of letting one sick tenant stall the shared
+drain; after ``cooldown`` ticks one half-open probe is admitted, and a
+served probe closes the breaker.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.events import Event, event
+
+
+# --------------------------------------------------------------- breakers
+
+@dataclass
+class BreakerConfig:
+    """Per-tenant circuit-breaker policy: ``fail_threshold`` consecutive
+    failures open the breaker; after ``cooldown`` ticks one half-open
+    probe is admitted."""
+
+    fail_threshold: int = 3
+    cooldown: int = 8
+
+
+class CircuitBreaker:
+    """closed -> open -> half_open -> closed, driven by drain ticks.
+
+    ``allow``/``success``/``failure`` return the transition's event KIND
+    (``"breaker_open"`` / ``"breaker_half_open"`` / ``"breaker_close"``)
+    or None, so the scheduler — which knows the tick and the tenant —
+    emits the typed event into its shared stream."""
+
+    def __init__(self, cfg: BreakerConfig):
+        self.cfg = cfg
+        self.state = "closed"
+        self.failures = 0
+        self.opened_tick = 0
+        self.probe_outstanding = False
+
+    def allow(self, tick: int):
+        """May a request for this tenant enter the queue at ``tick``?"""
+        if self.state == "closed":
+            return True, None
+        if self.state == "open":
+            if tick - self.opened_tick >= self.cfg.cooldown:
+                self.state = "half_open"
+                self.probe_outstanding = True
+                return True, "breaker_half_open"
+            return False, None
+        # half_open: exactly one probe in flight at a time
+        if self.probe_outstanding:
+            return False, None
+        self.probe_outstanding = True
+        return True, None
+
+    def success(self, tick: int) -> Optional[str]:
+        if self.state == "half_open":
+            self.state = "closed"
+            self.failures = 0
+            self.probe_outstanding = False
+            return "breaker_close"
+        self.failures = 0
+        return None
+
+    def failure(self, tick: int) -> Optional[str]:
+        if self.state == "half_open":
+            self.state = "open"
+            self.opened_tick = tick
+            self.probe_outstanding = False
+            return "breaker_open"
+        if self.state == "open":
+            return None
+        self.failures += 1
+        if self.failures >= self.cfg.fail_threshold:
+            self.state = "open"
+            self.opened_tick = tick
+            return "breaker_open"
+        return None
+
+
+# ----------------------------------------------------------------- ladder
+
+class DegradeTier(NamedTuple):
+    """One rung: a warmed engine over a cheaper representation of the
+    same model, with the per-drain request budget it affords."""
+
+    name: str                 # "full" | "int8" | "ann" | ...
+    engine: object            # NonNeuralServeEngine
+    capacity_factor: int = 1  # requests-per-drain multiplier vs tier 0
+
+
+# capacity a cheaper tier affords per drain, seeded from the committed
+# sweeps (BENCH_quant.json: int8 3.9x vs fp32-fused; BENCH_ann.json:
+# 12-31x with refine) rounded DOWN to powers of two — understating the
+# speedup keeps the per-drain latency budget honest
+CAPACITY_FACTORS = {"int8": 4, "ann": 8}
+
+
+def ann_sibling(engine, *, nprobe: int = 4, refine: Optional[int] = None,
+                max_batch: Optional[int] = None):
+    """An IVF-PQ ANN engine over the SAME reference set an exact-kNN
+    engine serves — the bottom brownout rung.  The index is fit from the
+    fitted params (``A``/``labels``), so no training data is re-supplied;
+    ``refine`` defaults to 8k (exact re-rank keeps the committed >=0.95
+    label-agreement bound, DESIGN.md §10)."""
+    from repro.core.estimator import ANNKNNEstimator
+    from repro.serving.engine import NonNeuralServeEngine
+
+    est = engine.estimator
+    if est.algorithm != "knn" or est.quantized:
+        raise ValueError(
+            f"ann_sibling needs an unquantized exact-kNN engine (the ANN "
+            f"index is fit from params.A/labels); got "
+            f"{est.algorithm!r}" + (" (int8)" if est.quantized else ""))
+    A = np.asarray(est.params.A, np.float32)
+    labels = np.asarray(est.params.labels)
+    ann = ANNKNNEstimator(k=est.k, n_class=int(est.params.n_class),
+                          nprobe=nprobe,
+                          refine=8 * est.k if refine is None else refine)
+    ann.fit(A, labels)
+    return NonNeuralServeEngine(ann, max_batch=max_batch
+                                or engine.max_batch)
+
+
+def build_ladder(engine, d: int, *, rungs: Sequence[str] = ("int8", "ann"),
+                 capacity_factors=None, nprobe: int = 4,
+                 refine: Optional[int] = None) -> List[DegradeTier]:
+    """The brownout ladder for one engine: tier 0 is the engine itself,
+    then one tier per applicable rung (``int8`` for any unquantized
+    estimator via ``engine.sibling(policy="int8")``; ``ann`` for exact
+    kNN only).  EVERY tier is warmed over the full bucket lattice here,
+    up front — the scheduler only coalesces into warmed buckets, so a
+    mid-overload downshift must never be the thing that triggers a jit
+    compile (``bucket_launches ⊆ warmed`` holds per tier)."""
+    factors = dict(CAPACITY_FACTORS)
+    factors.update(capacity_factors or {})
+    tiers = [DegradeTier("full", engine, 1)]
+    est = engine.estimator
+    for rung in rungs:
+        if rung == "int8":
+            if est.quantized:
+                continue          # already the int8 representation
+            if est.algorithm == "ann":
+                continue          # PQ codes ARE the int8 form
+            f = int(factors["int8"])
+            sib = engine.sibling(policy="int8",
+                                 max_batch=engine.max_batch * f)
+            tiers.append(DegradeTier("int8", sib, f))
+        elif rung == "ann":
+            if est.algorithm != "knn" or est.quantized:
+                continue
+            f = int(factors["ann"])
+            sib = ann_sibling(engine, nprobe=nprobe, refine=refine,
+                              max_batch=engine.max_batch * f)
+            tiers.append(DegradeTier("ann", sib, f))
+        else:
+            raise ValueError(f"unknown brownout rung {rung!r} "
+                             f"(known: int8, ann)")
+    for tier in tiers:
+        if not tier.engine.warmed:
+            tier.engine.warmup_buckets(d)
+    return tiers
+
+
+# ----------------------------------------------------------------- policy
+
+class DegradePolicy:
+    """Hysteretic brownout controller, observed once per drain tick.
+
+    ``tiers`` (single-model mode) is a ``build_ladder`` result; tier 0
+    MUST be the scheduler's own engine.  ``tiers=None`` (multi-tenant
+    mode) degrades by group-splitting instead: ``group_shift`` caps the
+    model-group bucket at ``gmax >> level`` up to ``split_levels``.
+
+    Downshift is immediate on any trigger (modulo ``cooldown``); upshift
+    needs ``hold`` consecutive calm drains — the hysteresis that keeps a
+    marginal system from flapping.  Every shift is returned as a typed
+    ``degrade_down``/``degrade_up`` event for the scheduler's stream and
+    counted in ``ServingStats``.
+    """
+
+    def __init__(self, tiers: Optional[Sequence[DegradeTier]] = None, *,
+                 deadline: Optional[int] = None, window: int = 32,
+                 down_headroom: float = 0.25, up_headroom: float = 0.5,
+                 pressure_threshold: float = 0.75, thrash_evictions: int = 8,
+                 hold: int = 4, cooldown: int = 2, split_levels: int = 2):
+        if tiers is not None:
+            assert len(tiers) >= 1, "a ladder needs at least tier 0"
+            assert tiers[0].capacity_factor == 1, \
+                "tier 0 is the undegraded engine (capacity_factor 1)"
+        self.tiers = list(tiers) if tiers is not None else None
+        self.max_level = (len(self.tiers) - 1 if self.tiers is not None
+                          else int(split_levels))
+        self.deadline = deadline
+        self.window = int(window)
+        self.down_headroom = float(down_headroom)
+        self.up_headroom = float(up_headroom)
+        self.pressure_threshold = float(pressure_threshold)
+        self.thrash_evictions = int(thrash_evictions)
+        self.hold = int(hold)
+        self.cooldown = int(cooldown)
+        self.level = 0
+        self._recent: deque = deque(maxlen=self.window)  # served latencies
+        self._good = 0
+        self._last_shift = -10**9
+
+    # ------------------------------------------------------------ signals
+
+    def tier_name(self, level: Optional[int] = None) -> str:
+        level = self.level if level is None else level
+        if self.tiers is not None:
+            return self.tiers[level].name
+        return f"split{1 << level}" if level else "full"
+
+    @property
+    def current(self) -> Optional[DegradeTier]:
+        return self.tiers[self.level] if self.tiers is not None else None
+
+    @property
+    def group_shift(self) -> int:
+        """Right-shift applied to the group bucket in split mode."""
+        return self.level if self.tiers is None else 0
+
+    def note_latency(self, queue_ticks: int) -> None:
+        """Feed one served request's latency into the rolling window."""
+        self._recent.append(int(queue_ticks))
+
+    def _p95(self) -> Optional[float]:
+        if len(self._recent) < 4:
+            return None           # too few samples to call a tail
+        vals = sorted(self._recent)
+        rank = max(1, int(np.ceil(0.95 * len(vals))))
+        return float(vals[rank - 1])
+
+    def headroom(self) -> Optional[float]:
+        """(deadline - rolling p95) / deadline — the Eq. 15 budget slack
+        the downshift trigger watches; None without a deadline or enough
+        samples."""
+        if self.deadline is None:
+            return None
+        p95 = self._p95()
+        if p95 is None:
+            return None
+        return (self.deadline - p95) / self.deadline
+
+    # ----------------------------------------------------------- observe
+
+    def observe(self, tick: int, *, pressure: float = 0.0,
+                straggler: bool = False, sheds: int = 0,
+                evictions: int = 0) -> List[Event]:
+        """One control step (call once per drain).  Returns the typed
+        shift events (possibly empty) for the scheduler's stream."""
+        head = self.headroom()
+        reasons = []
+        if pressure >= self.pressure_threshold:
+            reasons.append("backpressure")
+        if straggler:
+            reasons.append("straggler")
+        if sheds > 0:
+            reasons.append("shed")
+        if evictions >= self.thrash_evictions:
+            reasons.append("thrash")
+        if head is not None and head < self.down_headroom:
+            reasons.append("headroom")
+        evs: List[Event] = []
+        if reasons:
+            self._good = 0
+            if self.level < self.max_level \
+                    and tick - self._last_shift >= self.cooldown:
+                self.level += 1
+                self._last_shift = tick
+                self._recent.clear()   # old-tier latencies are stale
+                evs.append(event(
+                    "degrade_down", tick, "degrade", level=self.level,
+                    tier=self.tier_name(), trigger=",".join(reasons)))
+            return evs
+        calm = (pressure < 0.5 * self.pressure_threshold
+                and (head is None or head >= self.up_headroom))
+        if not calm:
+            self._good = 0
+            return evs
+        self._good += 1
+        if self.level > 0 and self._good >= self.hold \
+                and tick - self._last_shift >= self.cooldown:
+            self.level -= 1
+            self._last_shift = tick
+            self._good = 0
+            self._recent.clear()
+            evs.append(event("degrade_up", tick, "degrade",
+                             level=self.level, tier=self.tier_name()))
+        return evs

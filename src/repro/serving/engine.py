@@ -198,6 +198,26 @@ class NonNeuralServeEngine:
     def sharded(self) -> bool:
         return self.mesh is not None
 
+    def sibling(self, *, policy: Optional[str] = None, estimator=None,
+                max_batch: Optional[int] = None) -> "NonNeuralServeEngine":
+        """An engine over a cheaper representation of the SAME fitted
+        model — the brownout-ladder constructor (serving/degrade.py).
+        ``policy="int8"`` serves the estimator's ``quantized_copy``;
+        ``estimator=`` substitutes an alternate arm (e.g. an ANN index
+        over an exact kNN's reference set).  Siblings share this
+        engine's bucket geometry unless ``max_batch`` widens it (a
+        cheaper tier may absorb a larger per-drain budget).  Single-
+        device only: a degraded tier must never be the first thing to
+        touch a mesh mid-overload."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "brownout siblings are single-device — shard the primary "
+                "engine, degrade locally")
+        est = self.estimator if estimator is None else estimator
+        return NonNeuralServeEngine(
+            est, max_batch=int(max_batch or self.max_batch),
+            policy=policy, max_group=self.max_group)
+
     def _bucket(self, b: int) -> int:
         size = 1
         while size < b:

@@ -48,6 +48,39 @@ from repro.core import random_forest as _rf
 from repro.serving import quant as _q
 
 
+class PoisonedParamsError(ValueError):
+    """A registration/update carried non-finite (NaN/Inf) params.  The
+    publish is REFUSED — the previous generation keeps serving — and the
+    offending leaf is named by its jax keystr path so the producer (a
+    broken refit, a corrupted checkpoint, an injected chaos fault) is
+    attributable from the error alone."""
+
+    def __init__(self, leaf_path: str, model_id=None):
+        self.leaf_path = leaf_path
+        self.model_id = model_id
+        who = f"model {model_id!r}: " if model_id is not None else ""
+        super().__init__(
+            f"{who}non-finite (NaN/Inf) values in params leaf "
+            f"{leaf_path!r} — rejecting the slot; the previous generation "
+            f"keeps serving (a poisoned tenant must never answer queries)")
+
+
+def validate_finite(params, model_id=None) -> None:
+    """Health check on a param pytree: every float leaf must be finite.
+    Raises ``PoisonedParamsError`` naming the first offending leaf path.
+    Runs one blocking reduction per float leaf — tenant models are tiny
+    (that is the point of the zoo), so this is noise next to the
+    quantize/stack work an update already does."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    for path, leaf in leaves:
+        if not hasattr(leaf, "dtype") or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        if not bool(jnp.all(jnp.isfinite(leaf))):
+            raise PoisonedParamsError(jax.tree_util.keystr(path),
+                                      model_id=model_id)
+
+
 class _Slot(NamedTuple):
     """One tenant's published state.  Immutable: ``update``/evict/admit
     build a full replacement and swap it in with one dict assignment, so
@@ -93,6 +126,12 @@ class ModelStore:
         self._node_capacity = 0          # RF node-axis normalization target
         self._group_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._group_cache_entries = int(group_cache_entries)
+        # health/thrash accounting (serving/degrade.py reads the eviction
+        # and admission counters to detect model-store thrash; the chaos
+        # harness asserts on poisoned_rejections)
+        self.evictions = 0
+        self.admissions = 0
+        self.poisoned_rejections = 0
 
     # ------------------------------------------------------------- intro
 
@@ -212,6 +251,7 @@ class ModelStore:
         if model_id in self._slots:
             raise ValueError(f"model {model_id!r} already registered — "
                              f"use update() to hot-swap a refit")
+        self._health_check(estimator, model_id)
         params = self._normalize(estimator)
         if self._template is None:
             self._template = copy.copy(estimator)
@@ -229,10 +269,23 @@ class ModelStore:
         generation."""
         if model_id not in self._slots:
             raise KeyError(f"model {model_id!r} is not registered")
+        self._health_check(estimator, model_id)
         params = self._normalize(estimator)
         gen = self._slots[model_id].generation + 1
         self._publish(model_id, params, generation=gen)
         return gen
+
+    def _health_check(self, estimator, model_id) -> None:
+        """Reject NaN/Inf-poisoned params BEFORE anything publishes (or
+        mutates the fleet signature): the previous generation must keep
+        serving, so the rejection happens before the atomic swap and
+        before any RF capacity growth the poisoned fit could trigger."""
+        assert estimator.fitted, "fit the estimator before registering it"
+        try:
+            validate_finite(estimator.params, model_id=model_id)
+        except PoisonedParamsError:
+            self.poisoned_rejections += 1
+            raise
 
     def _publish(self, model_id, params, *, generation: int) -> None:
         slot = _Slot(generation=generation, params=params, qparams=None,
@@ -281,6 +334,7 @@ class ModelStore:
         self._lru.pop(model_id, None)
         self._slots[model_id] = slot._replace(params=None, qparams=qparams,
                                               resident_bytes=0)
+        self.evictions += 1
 
     def admit(self, model_id) -> None:
         """Promote a tenant back to residency: dequantize the at-rest
@@ -291,6 +345,12 @@ class ModelStore:
             self._lru.move_to_end(model_id)
             return
         params = _q.dequantize_params(slot.qparams, dtype=jnp.float32)
+        # the at-rest payload passed the publish-time health check, but a
+        # finite fp32 tensor is also finite on the int8 lattice and back —
+        # re-checking here catches payloads corrupted AFTER publish (the
+        # chaos harness's at-rest corruption fault)
+        validate_finite(params, model_id=model_id)
+        self.admissions += 1
         tp = self._template_params()
         params = jax.tree.map(
             lambda p, t: p.astype(t.dtype)

@@ -15,8 +15,36 @@ coalescing window) and request deadlines are tick counts, so a replayed
 trace is bit-deterministic and the SLO accounting in ``ServingStats``
 (p50/p95/p99 latency, throughput, bucket occupancy, cache hit-rate) can
 be checked against a hand-computed trace.  Wall-clock appears only in
-``batch_time`` (the launch duration), which feeds the per-drain
-``runtime/straggler.StepTimer`` watch/checkpoint/evict escalation.
+``batch_time`` (the launch duration, read from an injectable ``clock``
+so a chaos harness can replace it with virtual time), which feeds the
+per-drain ``runtime/straggler.StepTimer`` watch/checkpoint/evict
+escalation.
+
+Overload is a first-class outcome, not an error path.  Three graceful-
+degradation mechanisms, all OFF by default so the unloaded fast path is
+unchanged:
+
+  * **Admission control** (``max_queue``) — a full queue sheds new
+    arrivals at submit time with an explicit
+    ``RequestResult(shed=True, reason="queue_full")`` instead of growing
+    an unbounded backlog whose every entry will miss its deadline.
+  * **Deadline-enforced shedding** (``shed_expired``) — each drain first
+    drops queued requests that would ALREADY miss their deadline if
+    launched now (``reason="expired"``): spending a bucket slot on a
+    request whose answer nobody is waiting for starves the requests that
+    can still make it.
+  * **Brownout** (``degrade=DegradePolicy(...)``) — under sustained
+    pressure the drain reroutes through progressively cheaper warmed
+    tiers of the SAME model (fp32 -> int8 -> ANN, serving/degrade.py),
+    each with a larger per-drain request budget; multi-tenant schedulers
+    split the (model-group x bucket) launch instead.  Per-tenant
+    ``CircuitBreaker``s shed tenants whose updates keep failing the
+    model store's NaN health check (``reason="breaker_open"``).
+
+Shed requests complete immediately (``prediction=None``) and are
+accounted separately from served traffic: ``ServingStats`` reports
+``shed``/``shed_rate``/``miss_plus_shed_rate`` and never mixes sheds
+into the latency percentiles.
 
 Bucket occupancy (valid rows / bucket rows per launch) is the serving
 analogue of the paper's §5.3 core-utilization analysis: a launch with a
@@ -27,26 +55,38 @@ from __future__ import annotations
 import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional
 
 import jax
 import numpy as np
 
+from repro.runtime.events import Event, event, straggler_event
 from repro.runtime.straggler import StepTimer
+from repro.serving.degrade import BreakerConfig, CircuitBreaker, \
+    DegradePolicy
 from repro.serving.engine import NonNeuralServeEngine
+
+#: shed reasons a RequestResult may carry
+SHED_REASONS = ("queue_full", "expired", "breaker_open")
 
 
 @dataclass
 class RequestResult:
-    """One completed request: prediction + evidence + SLO accounting."""
+    """One completed request: prediction + evidence + SLO accounting.
+    A SHED request completes with ``prediction=None``, ``shed=True`` and
+    a ``reason`` from ``SHED_REASONS``; ``tier`` names the brownout tier
+    that served a non-shed request ("full" when undegraded)."""
     request_id: int
-    prediction: Any            # scalar class / cluster id
+    prediction: Any            # scalar class / cluster id; None if shed
     aux: Any                   # per-query algorithm evidence row
     queue_time: int            # drain ticks from submit to completion
     batch_time: float          # wall-clock seconds of the serving launch
     bucket: int                # bucket the launch ran in (0 = cache hit)
     deadline_missed: bool
     cache_hit: bool = False
+    shed: bool = False
+    reason: Optional[str] = None
+    tier: str = "full"
 
 
 @dataclass
@@ -57,6 +97,17 @@ class _Pending:
     deadline: Optional[int]    # relative ticks, None = no SLO
     cache_key: Optional[Any]   # (engine/tenant fingerprint, dtype, bytes)
     model_id: Any = None       # tenant routing key (store-mode schedulers)
+
+
+class _TierState(NamedTuple):
+    """A brownout tier as the scheduler routes to it: the warmed-bucket
+    snapshot and per-drain request budget are frozen at init (same
+    no-compile-mid-stream rule as the primary engine)."""
+    name: str
+    engine: NonNeuralServeEngine
+    capacity: int              # requests per drain at this tier
+    warmed: frozenset
+    cache_ok: bool             # only exact tier-0 results may be cached
 
 
 class ServingStats:
@@ -71,6 +122,11 @@ class ServingStats:
     the SLO a served request experiences is independent of how many
     lookups the cache absorbed.  Hit traffic is reported separately
     through ``hit_rate`` (hits still count into ``completed``).
+
+    Shed requests are accounted separately again (``shed``,
+    ``shed_reasons``): they never enter ``completed`` or the latency
+    pool, so an all-shed window reads nan percentiles and zero
+    throughput with a non-zero ``shed`` count — it does not raise.
     """
 
     def __init__(self):
@@ -83,29 +139,58 @@ class ServingStats:
         self.occupancies: List[float] = []  # valid rows / bucket, per launch
         self.bucket_launches: Dict[int, int] = {}
         self.batch_times: List[float] = []
+        self.shed = 0
+        self.shed_reasons: Dict[str, int] = {}
+        self.tier_launches: Dict[str, int] = {}
+        self.tier_bucket_launches: Dict[str, Dict[int, int]] = {}
+        self.tier_served: Dict[str, int] = {}
+        self.downshifts = 0
+        self.upshifts = 0
 
     def observe_tick(self) -> None:
         self.ticks += 1
 
-    def observe_launch(self, bucket: int, n_valid: int,
-                       batch_time: float) -> None:
+    def observe_launch(self, bucket: int, n_valid: int, batch_time: float,
+                       tier: Optional[str] = None) -> None:
         self.launches += 1
         self.occupancies.append(n_valid / bucket)
         self.bucket_launches[bucket] = \
             self.bucket_launches.get(bucket, 0) + 1
         self.batch_times.append(batch_time)
+        if tier is not None:
+            self.tier_launches[tier] = self.tier_launches.get(tier, 0) + 1
+            per = self.tier_bucket_launches.setdefault(tier, {})
+            per[bucket] = per.get(bucket, 0) + 1
 
     def observe(self, r: RequestResult) -> None:
+        if r.shed:
+            self.shed += 1
+            reason = r.reason or "unknown"
+            self.shed_reasons[reason] = \
+                self.shed_reasons.get(reason, 0) + 1
+            return
         self.completed += 1
         self.cache_hits += r.cache_hit
         self.deadline_misses += r.deadline_missed
         if not r.cache_hit:
             self.latencies.append(r.queue_time)
+            self.tier_served[r.tier] = self.tier_served.get(r.tier, 0) + 1
+
+    def observe_shift(self, down: bool) -> None:
+        if down:
+            self.downshifts += 1
+        else:
+            self.upshifts += 1
 
     @property
     def served(self) -> int:
         """Requests that went through a launch (completed minus hits)."""
         return self.completed - self.cache_hits
+
+    @property
+    def finished(self) -> int:
+        """Everything that got an outcome: served, hit, or shed."""
+        return self.completed + self.shed
 
     def percentile(self, q: float) -> float:
         """Nearest-rank percentile of SERVED-request latency, in ticks."""
@@ -123,6 +208,19 @@ class ServingStats:
     def deadline_miss_rate(self) -> float:
         return self.deadline_misses / self.completed if self.completed \
             else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / self.finished if self.finished else 0.0
+
+    @property
+    def miss_plus_shed_rate(self) -> float:
+        """SLO-failure rate a client sees: a shed and a missed deadline
+        are the same broken promise, so the headline overload metric
+        charges both against everything that finished."""
+        if not self.finished:
+            return 0.0
+        return (self.deadline_misses + self.shed) / self.finished
 
     @property
     def throughput(self) -> float:
@@ -147,6 +245,10 @@ class ServingStats:
             "occupancy": self.mean_occupancy,
             "hit_rate": self.hit_rate,
             "deadline_miss_rate": self.deadline_miss_rate,
+            "shed": self.shed,
+            "shed_rate": self.shed_rate,
+            "miss_plus_shed_rate": self.miss_plus_shed_rate,
+            "downshifts": self.downshifts,
         }
 
 
@@ -170,17 +272,42 @@ class RequestScheduler:
         tenants into a single (model-group x bucket) vmapped launch
         (``engine.classify_group``), with per-tenant ``ServingStats`` in
         ``tenant_stats``.
+      * ``max_queue`` — admission-control bound: submits beyond it shed
+        with ``reason="queue_full"`` (None = unbounded, the default).
+      * ``shed_expired`` — drop queued requests that would already miss
+        their deadline BEFORE spending a launch slot on them
+        (``reason="expired"``; off by default).
+      * ``degrade`` — a ``serving.degrade.DegradePolicy``: brownout tier
+        routing (single-model; ``DegradePolicy(build_ladder(...))``) or
+        group-launch splitting (store mode; ``DegradePolicy(None)``).
+      * ``breaker`` — a ``serving.degrade.BreakerConfig`` enabling
+        per-tenant circuit breakers (store mode): repeated failures
+        (expiry sheds, ``record_failure`` health rejections) open the
+        tenant's breaker and its submits shed with
+        ``reason="breaker_open"`` until a half-open probe succeeds.
+      * ``clock`` — the wall-clock source for ``batch_time`` (default
+        ``time.perf_counter``); runtime/chaos.py injects a deterministic
+        virtual clock here so straggler verdicts — and therefore the
+        whole RequestResult stream — replay bit-identically.
 
     The engine must be warmed first (``engine.warmup_buckets(d)`` /
     ``engine.warmup(X)``; store mode: ``engine.warmup_groups``): drains
     coalesce ONLY into warmed buckets / (group, bucket) cells, so a
-    steady-state stream never triggers a jit compile.
+    steady-state stream never triggers a jit compile.  Brownout tiers
+    obey the same rule — every tier engine is warmed up front
+    (``build_ladder``) and launches only into its init-time warmed
+    snapshot, so ``bucket_launches ⊆ warmed`` holds PER TIER even when a
+    downshift lands mid-overload.
     """
 
     def __init__(self, engine: NonNeuralServeEngine, *, max_wait: int = 4,
                  max_batch: Optional[int] = None, cache_size: int = 0,
                  timer: Optional[StepTimer] = None, host: int = 0,
-                 store=None):
+                 store=None, max_queue: Optional[int] = None,
+                 shed_expired: bool = False,
+                 degrade: Optional[DegradePolicy] = None,
+                 breaker: Optional[BreakerConfig] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.store = store
         if store is None:
             assert engine.warmed, \
@@ -220,8 +347,42 @@ class RequestScheduler:
         self.stats = ServingStats()
         self.tenant_stats: Dict[Any, ServingStats] = {}
         self.results: Dict[int, RequestResult] = {}
-        self.events: List[tuple] = []      # straggler escalations per drain
+        self.events: List[Event] = []   # typed runtime/events.py stream
         self._next_id = 0
+        # ---- robustness layer (all off by default) ----
+        self.max_queue = int(max_queue) if max_queue is not None else None
+        self.shed_expired = bool(shed_expired)
+        self.clock = clock if clock is not None else time.perf_counter
+        self.breaker_config = breaker
+        self.breakers: Dict[Any, CircuitBreaker] = {}
+        self.degrade = degrade
+        self._tiers: Optional[List[_TierState]] = None
+        self._last_evictions = getattr(store, "evictions", 0) \
+            if store is not None else 0
+        if degrade is not None and degrade.tiers is not None:
+            assert store is None, \
+                "store-mode degradation splits the group launch — build " \
+                "the policy with DegradePolicy(tiers=None)"
+            assert degrade.tiers[0].engine is engine, \
+                "tier 0 of the ladder must be the scheduler's own engine"
+            self._tiers = []
+            for t in degrade.tiers:
+                assert t.engine.warmed, \
+                    f"brownout tier {t.name!r} is not warmed — degrading " \
+                    f"must never be the thing that triggers a jit compile"
+                capacity = min(self.max_batch * t.capacity_factor,
+                               t.engine.max_batch)
+                tcap = capacity + (-capacity) % t.engine.n_shards
+                warmed = frozenset(b for b in t.engine.warmed if b <= tcap)
+                assert warmed, (t.name, t.engine.warmed, capacity)
+                self._tiers.append(_TierState(
+                    t.name, t.engine, capacity, warmed,
+                    cache_ok=t.engine is engine))
+        self._tier0 = _TierState("full", engine, self.max_batch,
+                                 self.warmed, cache_ok=True)
+        #: per-tier init-time warmed snapshots, for invariant checks
+        self.tier_warmed: Dict[str, frozenset] = \
+            {t.name: t.warmed for t in (self._tiers or [self._tier0])}
 
     # ------------------------------------------------------------ submit
 
@@ -251,10 +412,52 @@ class RequestScheduler:
             st = self.tenant_stats[model_id] = ServingStats()
         return st
 
+    def _record_shed(self, rid: int, reason: str, queue_time: int,
+                     model_id=None) -> RequestResult:
+        res = RequestResult(request_id=rid, prediction=None, aux=None,
+                            queue_time=queue_time, batch_time=0.0,
+                            bucket=0, deadline_missed=False, shed=True,
+                            reason=reason)
+        self.results[rid] = res
+        self.stats.observe(res)
+        detail = {"reason": reason, "request": rid}
+        if model_id is not None:
+            self._tenant_stats(model_id).observe(res)
+            detail["model"] = str(model_id)
+        self.events.append(event("shed", self.tick, "scheduler", **detail))
+        return res
+
+    def _breaker_failure(self, model_id, reason: str) -> None:
+        br = self.breakers.setdefault(
+            model_id, CircuitBreaker(self.breaker_config))
+        kind = br.failure(self.tick)
+        if kind:
+            self.events.append(event(kind, self.tick, "scheduler",
+                                     model=str(model_id), reason=reason))
+
+    def record_failure(self, model_id, *, reason: str = "health") -> None:
+        """Report an out-of-band tenant failure into its circuit breaker
+        — e.g. a ``ModelStore.update`` rejected by the NaN health check
+        (``PoisonedParamsError``).  Enough consecutive failures open the
+        breaker and that tenant's submits shed until a probe succeeds."""
+        if self.breaker_config is None or model_id is None:
+            return
+        self._breaker_failure(model_id, reason)
+
     def _submit_one(self, row: np.ndarray, deadline: Optional[int],
                     model_id=None) -> int:
         rid = self._next_id
         self._next_id += 1
+        if model_id is not None and self.breaker_config is not None:
+            br = self.breakers.get(model_id)
+            if br is not None:
+                allowed, kind = br.allow(self.tick)
+                if kind:
+                    self.events.append(event(kind, self.tick, "scheduler",
+                                             model=str(model_id)))
+                if not allowed:
+                    self._record_shed(rid, "breaker_open", 0, model_id)
+                    return rid
         key = self._cache_key(row, model_id)
         if key is not None and key in self._cache:
             self._cache.move_to_end(key)
@@ -267,6 +470,9 @@ class RequestScheduler:
             if model_id is not None:
                 self._tenant_stats(model_id).observe(res)
             return rid
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._record_shed(rid, "queue_full", 0, model_id)
+            return rid
         self.queue.append(_Pending(request_id=rid, x=row,
                                    submit_tick=self.tick,
                                    deadline=deadline, cache_key=key,
@@ -278,7 +484,9 @@ class RequestScheduler:
         (``(B, d)`` -> list of ids).  ``deadline`` is an SLO in drain
         ticks relative to now; a request completing later than that is
         counted as a deadline miss (it is still served).  ``model_id``
-        routes to one of a store-mode scheduler's tenants."""
+        routes to one of a store-mode scheduler's tenants.  The result
+        for a returned id may already be a shed (admission control /
+        open breaker) — check ``results[rid].shed``."""
         if self.store is not None:
             if model_id is None:
                 raise ValueError("tenant scheduler: submit(x, model_id=...) "
@@ -296,71 +504,140 @@ class RequestScheduler:
 
     # ------------------------------------------------------------- drain
 
-    def _pick_bucket(self, n: int) -> int:
+    def _pick_bucket(self, n: int, warmed=None) -> int:
         """The largest power-of-two bucket that fits: the smallest WARMED
         bucket covering all ``n`` coalesced requests (padding the tail), or
         the biggest warmed bucket when the queue overflows it (the rest
         waits — backpressure).  Never a size outside the init-time warmed
-        snapshot, so no jit compile can land mid-stream."""
-        warmed = sorted(self.warmed)
+        snapshot (of the CURRENT brownout tier, when degraded), so no jit
+        compile can land mid-stream."""
+        warmed = sorted(self.warmed if warmed is None else warmed)
         covering = [b for b in warmed if b >= n]
         return covering[0] if covering else warmed[-1]
 
+    def _current_tier(self) -> _TierState:
+        if self._tiers is not None and self.degrade is not None:
+            return self._tiers[self.degrade.level]
+        return self._tier0
+
+    def _shed_expired_now(self) -> List[RequestResult]:
+        """Deadline-enforced shedding, run BEFORE bucket selection: a
+        queued request that would already exceed its deadline if launched
+        this tick is dropped (reason="expired") instead of wasting a
+        bucket slot to produce an answer that is late by construction."""
+        if not self.shed_expired or not self.queue:
+            return []
+        out: List[RequestResult] = []
+        kept: Deque[_Pending] = deque()
+        while self.queue:
+            p = self.queue.popleft()
+            if p.deadline is not None \
+                    and self.tick - p.submit_tick > p.deadline:
+                out.append(self._record_shed(
+                    p.request_id, "expired",
+                    self.tick - p.submit_tick, p.model_id))
+                if p.model_id is not None \
+                        and self.breaker_config is not None:
+                    self._breaker_failure(p.model_id, "expired")
+            else:
+                kept.append(p)
+        self.queue = kept
+        return out
+
+    def _observe_degrade(self, *, straggler: bool, sheds: int) -> None:
+        """One brownout control step per drain: pressure is queue depth
+        over what the CURRENT tier can clear within the coalescing window
+        (and over ``max_queue`` when bounded — the occupancy-based
+        backpressure threshold), thrash is the store's eviction delta
+        since the last drain."""
+        if self.degrade is None:
+            return
+        cap = self._current_tier().capacity
+        pressure = len(self.queue) / max(1.0, cap * max(1, self.max_wait))
+        if self.max_queue:
+            pressure = max(pressure, len(self.queue) / self.max_queue)
+        evictions = 0
+        if self.store is not None:
+            now = self.store.evictions
+            evictions = now - self._last_evictions
+            self._last_evictions = now
+        for e in self.degrade.observe(self.tick, pressure=pressure,
+                                      straggler=straggler, sheds=sheds,
+                                      evictions=evictions):
+            self.events.append(e)
+            self.stats.observe_shift(e.kind == "degrade_down")
+
+    def _note_verdict(self, verdict) -> bool:
+        if verdict.action != "ok":
+            self.events.append(
+                straggler_event(verdict, self.tick, "scheduler"))
+            return True
+        return False
+
     def drain(self, force: bool = False) -> List[RequestResult]:
-        """One scheduler tick: coalesce + launch if the window expired (or
-        ``force``), else keep coalescing.  Returns completed requests.
-        Store-mode schedulers coalesce ACROSS tenants into one
+        """One scheduler tick: shed expired work, coalesce + launch on
+        the CURRENT brownout tier if the window expired (or ``force``),
+        else keep coalescing.  Returns completed requests (served AND
+        shed).  Store-mode schedulers coalesce ACROSS tenants into one
         (model-group x bucket) vmapped launch instead."""
         if self.store is not None:
             return self._drain_grouped(force)
         self.tick += 1
         self.stats.observe_tick()
-        if not self.queue:
-            return []
-        ready = (force
-                 or len(self.queue) >= self.max_batch
-                 or self.tick - self.queue[0].submit_tick >= self.max_wait)
+        out: List[RequestResult] = list(self._shed_expired_now())
+        sheds_now = len(out)
+        ready = self.queue and (
+            force
+            or len(self.queue) >= self.max_batch
+            or self.tick - self.queue[0].submit_tick >= self.max_wait)
         if not ready:
-            return []
-        n = min(len(self.queue), self.max_batch)
-        bucket = self._pick_bucket(n)
+            self._observe_degrade(straggler=False, sheds=sheds_now)
+            return out
+        tier = self._current_tier()
+        n = min(len(self.queue), tier.capacity)
+        bucket = self._pick_bucket(n, tier.warmed)
         taken = [self.queue.popleft() for _ in range(min(n, bucket))]
         batch = np.stack([p.x for p in taken])
         if batch.shape[0] < bucket:      # pad so the engine reuses the
             batch = np.concatenate(      # compiled bucket-sized executable
                 [batch, np.zeros((bucket - batch.shape[0], batch.shape[1]),
                                  batch.dtype)])
-        t0 = time.perf_counter()
-        res = self.engine.classify(batch)
+        t0 = self.clock()
+        res = tier.engine.classify(batch)
         jax.block_until_ready(res.classes)
-        batch_time = time.perf_counter() - t0
+        batch_time = self.clock() - t0
 
         verdict = self.timer.record(self.host, batch_time)
-        if verdict.action != "ok":
-            self.events.append((verdict.action, self.tick, verdict.ratio))
-        self.stats.observe_launch(bucket, len(taken), batch_time)
+        straggling = self._note_verdict(verdict)
+        self.stats.observe_launch(bucket, len(taken), batch_time,
+                                  tier=tier.name)
 
         classes = np.asarray(res.classes)
         aux = np.asarray(res.aux)
-        out = []
         for i, p in enumerate(taken):
             queue_time = self.tick - p.submit_tick
             missed = p.deadline is not None and queue_time > p.deadline
             r = RequestResult(request_id=p.request_id,
                               prediction=classes[i], aux=aux[i],
                               queue_time=queue_time, batch_time=batch_time,
-                              bucket=bucket, deadline_missed=missed)
+                              bucket=bucket, deadline_missed=missed,
+                              tier=tier.name)
             self.results[p.request_id] = r
             self.stats.observe(r)
-            if p.cache_key is not None:
+            if self.degrade is not None:
+                self.degrade.note_latency(queue_time)
+            if p.cache_key is not None and tier.cache_ok:
                 # copy the rows: views would pin the launch's whole
-                # bucket-sized arrays for the cache entry's lifetime
+                # bucket-sized arrays for the cache entry's lifetime;
+                # degraded-tier answers are approximations and must never
+                # be replayed as exact results once the tier recovers
                 self._cache[p.cache_key] = (classes[i].copy(),
                                             aux[i].copy())
                 self._cache.move_to_end(p.cache_key)
                 while len(self._cache) > self.cache_size:
                     self._cache.popitem(last=False)
             out.append(r)
+        self._observe_degrade(straggler=straggling, sheds=sheds_now)
         return out
 
     def _drain_grouped(self, force: bool) -> List[RequestResult]:
@@ -370,19 +647,25 @@ class RequestScheduler:
         the next drain, backpressure), snapshot the model group from the
         store (generation-consistent: an update() racing this drain either
         lands entirely before the snapshot or entirely after), and run ONE
-        vmapped (model-group x bucket) launch."""
+        vmapped (model-group x bucket) launch.  Under degradation the
+        group bucket is split (``gmax >> level``): a smaller pin-set per
+        launch is what relieves a thrashing ModelStore."""
         self.tick += 1
         self.stats.observe_tick()
         for st in self.tenant_stats.values():
             st.observe_tick()
-        if not self.queue:
-            return []
-        ready = (force
-                 or len(self.queue) >= self.max_batch
-                 or self.tick - self.queue[0].submit_tick >= self.max_wait)
+        out: List[RequestResult] = list(self._shed_expired_now())
+        sheds_now = len(out)
+        ready = self.queue and (
+            force
+            or len(self.queue) >= self.max_batch
+            or self.tick - self.queue[0].submit_tick >= self.max_wait)
         if not ready:
-            return []
+            self._observe_degrade(straggler=False, sheds=sheds_now)
+            return out
         gmax = max(g for g, _ in self.warmed_groups)
+        if self.degrade is not None:
+            gmax = max(1, gmax >> self.degrade.group_shift)
         bmax = max(b for _, b in self.warmed_groups)
         budget = min(len(self.queue), self.max_batch)
         taken_by: "OrderedDict[Any, List[_Pending]]" = OrderedDict()
@@ -421,26 +704,29 @@ class RequestScheduler:
         for gi, mid in enumerate(ids):
             for bi, p in enumerate(taken_by[mid]):
                 Xg[gi, bi] = p.x
-        t0 = time.perf_counter()
+        t0 = self.clock()
         res = self.engine.classify_group(stacked, Xg)
         jax.block_until_ready(res.classes)
-        batch_time = time.perf_counter() - t0
+        batch_time = self.clock() - t0
 
         verdict = self.timer.record(self.host, batch_time)
-        if verdict.action != "ok":
-            self.events.append((verdict.action, self.tick, verdict.ratio))
+        straggling = self._note_verdict(verdict)
         # global occupancy is valid rows over the whole launch footprint
         # (group lanes x bucket rows) — the multi-tenant analogue of the
         # paper's §5.3 core-utilization accounting
-        self.stats.observe_launch(gb * bucket, count, batch_time)
+        tname = self.degrade.tier_name() if self.degrade is not None \
+            else None
+        self.stats.observe_launch(gb * bucket, count, batch_time,
+                                  tier=tname)
 
         classes = np.asarray(res.classes)
         aux = np.asarray(res.aux)
-        out = []
         for gi, mid in enumerate(ids):
             rows = taken_by[mid]
             tstats = self._tenant_stats(mid)
             tstats.observe_launch(bucket, len(rows), batch_time)
+            br = self.breakers.get(mid) \
+                if self.breaker_config is not None else None
             for bi, p in enumerate(rows):
                 queue_time = self.tick - p.submit_tick
                 missed = p.deadline is not None and queue_time > p.deadline
@@ -448,10 +734,18 @@ class RequestScheduler:
                                   prediction=classes[gi, bi],
                                   aux=aux[gi, bi], queue_time=queue_time,
                                   batch_time=batch_time, bucket=bucket,
-                                  deadline_missed=missed)
+                                  deadline_missed=missed,
+                                  tier=tname or "full")
                 self.results[p.request_id] = r
                 self.stats.observe(r)
                 tstats.observe(r)
+                if self.degrade is not None:
+                    self.degrade.note_latency(queue_time)
+                if br is not None:
+                    kind = br.success(self.tick)
+                    if kind:
+                        self.events.append(event(
+                            kind, self.tick, "scheduler", model=str(mid)))
                 if p.cache_key is not None:
                     self._cache[p.cache_key] = (classes[gi, bi].copy(),
                                                 aux[gi, bi].copy())
@@ -459,6 +753,7 @@ class RequestScheduler:
                     while len(self._cache) > self.cache_size:
                         self._cache.popitem(last=False)
                 out.append(r)
+        self._observe_degrade(straggler=straggling, sheds=sheds_now)
         return out
 
     def flush(self) -> List[RequestResult]:
@@ -480,16 +775,27 @@ def poisson_trace(rate: float, ticks: int, seed: int = 0) -> np.ndarray:
 
 def replay_trace(scheduler: RequestScheduler, queries: np.ndarray,
                  counts, *, deadline: Optional[int] = None,
-                 model_ids=None) -> List[int]:
+                 model_ids=None, chaos=None) -> List[int]:
     """Open-loop replay: at each tick submit ``counts[t]`` queries (cycling
     the rows of ``queries``) then drain once; flush the tail at the end.
     ``model_ids`` (store-mode schedulers) cycles tenants round-robin over
-    the arrivals.  Returns the request ids in submission order."""
+    the arrivals.  ``chaos`` (a ``runtime.chaos.ChaosInjector``) attaches
+    a deterministic virtual clock and injects the plan's faults — burst
+    arrivals, straggler ticks, NaN-poisoned updates, eviction storms —
+    at their scripted ticks, so the whole replay (RequestResult stream
+    included) is bit-reproducible.  Returns the request ids in
+    submission order."""
     queries = np.asarray(queries, np.float32)
+    if chaos is not None:
+        chaos.attach(scheduler)
     ids: List[int] = []
     i = 0
-    for c in counts:
-        for _ in range(int(c)):
+    for t, c in enumerate(counts):
+        c = int(c)
+        if chaos is not None:
+            c += chaos.extra_arrivals(t)
+            chaos.apply(scheduler, t)
+        for _ in range(c):
             mid = model_ids[i % len(model_ids)] if model_ids else None
             ids.append(scheduler.submit(queries[i % len(queries)],
                                         deadline=deadline, model_id=mid))

@@ -1,0 +1,206 @@
+"""Deterministic fault injection (runtime/chaos.py) end to end: plan
+generation/serialization, bit-identical replay, the per-tier no-compile
+invariant under faults, NaN-poisoned updates never serving, breaker
+lifecycles driven through the scheduler, and the degrade-on-vs-off A/B
+the CI chaos smoke pins."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.runtime.chaos import ChaosInjector, ChaosPlan, PRESETS
+from repro.serving import (
+    BreakerConfig,
+    DegradePolicy,
+    ModelStore,
+    NonNeuralServeEngine,
+    RequestScheduler,
+    build_ladder,
+    poisson_trace,
+    replay_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=160, d=8, n_class=3)
+
+
+def _engine(algo, X, y, max_batch=8):
+    eng = NonNeuralServeEngine(E.make_fitted(algo, X, y, n_groups=3),
+                               max_batch=max_batch)
+    eng.warmup_buckets(X.shape[1])
+    return eng
+
+
+def _result_key(r):
+    pred = None if r.prediction is None else int(r.prediction)
+    return (r.request_id, r.shed, r.reason, pred, r.tier, r.bucket,
+            r.queue_time, r.deadline_missed, r.batch_time)
+
+
+# ------------------------------------------------------------------ plans
+
+def test_plan_generation_deterministic_and_json_roundtrip():
+    a = ChaosPlan.preset("mixed", seed=3, ticks=64, n_tenants=4)
+    b = ChaosPlan.preset("mixed", seed=3, ticks=64, n_tenants=4)
+    assert a == b                                   # seeded, not sampled
+    assert a != ChaosPlan.preset("mixed", seed=4, ticks=64, n_tenants=4)
+    assert ChaosPlan.from_json(a.to_json()) == a
+    assert a.straggler_ticks and a.nan_events and a.burst
+    # warmup ticks stay clean so baselines calibrate before faults land
+    lo = min(8, 64 // 4)
+    faulty = (set(a.straggler_ticks) | set(a.storm_ticks)
+              | {t for t, _ in a.nan_events} | {t for t, _ in a.burst})
+    assert min(faulty) >= lo
+    with pytest.raises(ValueError, match="unknown chaos preset"):
+        ChaosPlan.preset("nope")
+    assert set(PRESETS) == {"burst", "straggler", "storm", "mixed"}
+
+
+# ------------------------------------------------------- replay identity
+
+def _chaos_replay(X, y, degrade_on):
+    eng = _engine("gnb", X, y)
+    degrade = DegradePolicy(build_ladder(eng, X.shape[1]), deadline=4) \
+        if degrade_on else None
+    sched = RequestScheduler(eng, max_wait=2, max_queue=64,
+                             shed_expired=True, degrade=degrade)
+    plan = ChaosPlan.preset("mixed", seed=0, ticks=24)
+    ids = replay_trace(sched, X[:40], poisson_trace(4.0, 24, seed=1),
+                       deadline=4, chaos=ChaosInjector(plan))
+    return sched, ids
+
+
+def test_chaos_replay_is_bit_deterministic(blobs):
+    """Same plan, fresh scheduler: the full RequestResult stream AND the
+    typed event stream replay identically — batch_time included, because
+    the injector's virtual clock owns time."""
+    X, y = blobs
+    s1, ids1 = _chaos_replay(X, y, degrade_on=True)
+    s2, ids2 = _chaos_replay(X, y, degrade_on=True)
+    assert ids1 == ids2
+    assert [_result_key(s1.results[i]) for i in ids1] == \
+        [_result_key(s2.results[i]) for i in ids2]
+    assert s1.events == s2.events                   # typed NamedTuples
+    assert s1.events, "the mixed plan must actually inject faults"
+    assert any(e.kind == "chaos_burst" for e in s1.events)
+    assert any(e.kind == "chaos_straggler" for e in s1.events)
+
+
+def test_no_compile_per_tier_under_faults(blobs):
+    """bucket_launches ⊆ warmed must hold PER brownout tier under every
+    injected fault: a mid-overload downshift must never be the thing
+    that triggers a jit compile."""
+    X, y = blobs
+    sched, _ = _chaos_replay(X, y, degrade_on=True)
+    assert sched.stats.downshifts > 0               # the plan bit
+    assert set(sched.stats.tier_bucket_launches) > {"full"}
+    for tier, per in sched.stats.tier_bucket_launches.items():
+        assert set(per) <= set(sched.tier_warmed[tier]), tier
+    for t in sched.degrade.tiers:
+        assert t.engine.warmed >= set(
+            sched.stats.tier_bucket_launches.get(t.name, {}))
+
+
+def test_degrade_on_beats_degrade_off(blobs):
+    """The acceptance A/B on a fixed trace: armed brownout strictly cuts
+    miss+shed vs admission/shedding alone, and every request still gets
+    an outcome."""
+    X, y = blobs
+    off, ids_off = _chaos_replay(X, y, degrade_on=False)
+    on, ids_on = _chaos_replay(X, y, degrade_on=True)
+    assert off.stats.miss_plus_shed_rate > 0        # the trace overloads
+    assert on.stats.miss_plus_shed_rate < off.stats.miss_plus_shed_rate
+    assert on.stats.finished == off.stats.finished == len(ids_on)
+    assert on.stats.tier_served.get("int8", 0) > 0  # brownout did the work
+
+
+# ------------------------------------------------------ store-level chaos
+
+def _tenant_fixture(X, y, *, breaker=None, degrade=None, max_wait=2):
+    store = ModelStore()
+    for t in range(3):
+        store.register(t, E.make_fitted("gnb", X, y, n_groups=3))
+    eng = store.make_engine(max_batch=8, max_group=4)
+    eng.warmup_groups(store.group([0])[0], X.shape[1])
+    sched = RequestScheduler(eng, store=store, max_wait=max_wait,
+                             shed_expired=True, degrade=degrade,
+                             breaker=breaker)
+    return store, sched
+
+
+def test_nan_injection_never_serves_poison(blobs):
+    """A NaN-poisoned update is rejected by the store health check: the
+    previous generation keeps serving, predictions stay finite, and the
+    rejection lands as typed nan_rejected events naming the leaf."""
+    X, y = blobs
+    store, sched = _tenant_fixture(X, y)
+    plan = ChaosPlan(seed=0, ticks=12, nan_events=((2, 0), (5, 1), (8, 0)))
+    ids = replay_trace(sched, X[:30], poisson_trace(3.0, 12, seed=2),
+                       model_ids=[0, 1, 2],
+                       chaos=ChaosInjector(plan, store=store))
+    assert store.poisoned_rejections == 3
+    assert [store.generation(t) for t in range(3)] == [0, 0, 0]
+    served = [sched.results[i] for i in ids if not sched.results[i].shed]
+    assert served
+    assert all(np.isfinite(np.asarray(r.aux, np.float64)).all()
+               for r in served)
+    rej = [e for e in sched.events if e.kind == "nan_rejected"]
+    assert len(rej) == 3 and all(e.get("leaf") for e in rej)
+
+
+def test_eviction_storm_recovers_and_splits(blobs):
+    """Storm ticks evict every resident tenant; the drain re-admits on
+    demand and the split-mode policy downshifts on the eviction delta,
+    keeping group launches inside the warmed cells."""
+    X, y = blobs
+    degrade = DegradePolicy(None, deadline=4, thrash_evictions=2,
+                            split_levels=2)
+    store, sched = _tenant_fixture(X, y, degrade=degrade)
+    plan = ChaosPlan(seed=0, ticks=12, storm_ticks=(3, 5, 7))
+    ids = replay_trace(sched, X[:30], poisson_trace(4.0, 12, seed=2),
+                       model_ids=[0, 1, 2],
+                       chaos=ChaosInjector(plan, store=store))
+    assert sum(e.kind == "chaos_eviction_storm" for e in sched.events) == 3
+    assert sched.stats.downshifts > 0
+    assert set(sched.stats.tier_served) > {"full"}  # split tiers served
+    assert set(sched.engine.group_launches) <= sched.engine.warmed_groups
+    assert all(not sched.results[i].shed
+               or sched.results[i].reason in ("expired",) for i in ids)
+
+
+def test_breaker_lifecycle_through_scheduler(blobs):
+    """Repeated expiry sheds open a tenant's breaker (its submits shed
+    with reason breaker_open while others serve); after cooldown a probe
+    is admitted and a served probe closes it — all visible as typed
+    events in one stream."""
+    X, y = blobs
+    store, sched = _tenant_fixture(
+        X, y, breaker=BreakerConfig(fail_threshold=2, cooldown=3),
+        max_wait=8)
+    for i in range(2):                              # two expiry failures
+        sched.submit(X[i], deadline=0, model_id=0)
+        sched.drain()                               # tick: 1 > 0 -> shed
+    assert [e.kind for e in sched.events
+            if e.kind.startswith("breaker")] == ["breaker_open"]
+    rid = sched.submit(X[2], deadline=4, model_id=0)
+    assert sched.results[rid].reason == "breaker_open"   # shed at submit
+    ok = sched.submit(X[3], deadline=4, model_id=1)      # others unharmed
+    assert ok not in sched.results
+    sched.drain(force=True)
+    while sched.tick < 5:                           # breaker cooldown
+        sched.drain()
+    probe = sched.submit(X[4], deadline=8, model_id=0)
+    assert probe not in sched.results               # probe admitted
+    sched.drain(force=True)
+    assert not sched.results[probe].shed
+    kinds = [e.kind for e in sched.events if e.kind.startswith("breaker")]
+    assert kinds == ["breaker_open", "breaker_half_open", "breaker_close"]
+    assert sched.stats.shed_reasons["breaker_open"] == 1
+    assert sched.tenant_stats[0].shed == 3          # 2 expired + 1 breaker

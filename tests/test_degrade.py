@@ -1,0 +1,224 @@
+"""Brownout ladder + circuit breakers (serving/degrade.py) and the
+scheduler's shed accounting: breaker state machine, hysteretic
+tier-shift policy, ladder construction/warming, degraded-tier cache
+hygiene, and the all-shed-window stats contract."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from conftest import synth_blobs
+from repro.core import estimator as E
+from repro.serving import (
+    BreakerConfig,
+    CircuitBreaker,
+    DegradePolicy,
+    NonNeuralServeEngine,
+    RequestScheduler,
+    build_ladder,
+)
+from repro.serving.degrade import CAPACITY_FACTORS, ann_sibling
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return synth_blobs(n=160, d=8, n_class=3)
+
+
+def _engine(algo, X, y, max_batch=8):
+    eng = NonNeuralServeEngine(E.make_fitted(algo, X, y, n_groups=3),
+                               max_batch=max_batch)
+    eng.warmup_buckets(X.shape[1])
+    return eng
+
+
+# ------------------------------------------------------- circuit breaker
+
+def test_breaker_open_half_open_close():
+    br = CircuitBreaker(BreakerConfig(fail_threshold=3, cooldown=4))
+    assert br.allow(0) == (True, None)
+    assert br.failure(1) is None
+    assert br.failure(2) is None
+    assert br.failure(3) == "breaker_open"          # threshold reached
+    assert br.allow(4) == (False, None)             # open: rejected
+    assert br.allow(6) == (False, None)             # cooldown not elapsed
+    ok, kind = br.allow(7)                          # 7 - 3 >= cooldown
+    assert ok and kind == "breaker_half_open"
+    assert br.allow(7) == (False, None)             # one probe at a time
+    assert br.success(8) == "breaker_close"
+    assert br.state == "closed" and br.failures == 0
+    assert br.allow(9) == (True, None)
+
+
+def test_breaker_failed_probe_reopens():
+    br = CircuitBreaker(BreakerConfig(fail_threshold=1, cooldown=2))
+    assert br.failure(0) == "breaker_open"
+    ok, kind = br.allow(2)
+    assert ok and kind == "breaker_half_open"
+    assert br.failure(3) == "breaker_open"          # probe died -> reopen
+    assert br.allow(4) == (False, None)             # cooldown restarts at 3
+
+
+# ------------------------------------------------- hysteretic tier policy
+
+def test_policy_down_immediate_up_hysteretic():
+    pol = DegradePolicy(None, hold=3, cooldown=2, split_levels=2)
+    evs = pol.observe(1, pressure=0.9)              # over threshold -> down
+    assert pol.level == 1 and [e.kind for e in evs] == ["degrade_down"]
+    assert evs[0].get("trigger") == "backpressure"
+    assert pol.observe(2, pressure=0.9) == []       # cooldown blocks
+    evs = pol.observe(3, pressure=0.9)
+    assert pol.level == 2 and evs[0].get("tier") == "split4"
+    assert pol.observe(4, pressure=0.9) == []       # already at max level
+    # recovery: `hold` consecutive calm drains, not one
+    assert pol.observe(5, pressure=0.0) == []
+    assert pol.observe(6, pressure=0.0) == []
+    evs = pol.observe(7, pressure=0.0)
+    assert pol.level == 1 and [e.kind for e in evs] == ["degrade_up"]
+    # a single noisy drain resets the calm streak
+    pol.observe(8, pressure=0.0)
+    pol.observe(9, pressure=0.6)                    # calm needs < 0.5*thr
+    pol.observe(10, pressure=0.0)
+    assert pol.observe(11, pressure=0.0) == [] and pol.level == 1
+    assert pol.observe(12, pressure=0.0) != [] and pol.level == 0
+
+
+def test_policy_headroom_trigger_and_stale_window():
+    pol = DegradePolicy(None, deadline=4, down_headroom=0.25, hold=1,
+                        cooldown=0, split_levels=1)
+    for q in (4, 4, 4, 4):                          # p95=4 -> headroom 0
+        pol.note_latency(q)
+    assert pol.headroom() == 0.0
+    evs = pol.observe(1, pressure=0.0)
+    assert pol.level == 1 and evs[0].get("trigger") == "headroom"
+    # the shift cleared the window: old-tier latencies must not keep the
+    # policy pinned down once the cheap tier serves fast
+    assert pol.headroom() is None
+    for q in (1, 1, 1, 1):
+        pol.note_latency(q)
+    pol.observe(2, pressure=0.0)
+    assert pol.level == 0
+
+
+def test_policy_straggler_shed_and_thrash_triggers():
+    for kw, trigger in (({"straggler": True}, "straggler"),
+                        ({"sheds": 2}, "shed"),
+                        ({"evictions": 99}, "thrash")):
+        pol = DegradePolicy(None, cooldown=0, split_levels=1)
+        (ev,) = pol.observe(1, pressure=0.0, **kw)
+        assert ev.get("trigger") == trigger, kw
+
+
+# ---------------------------------------------------------------- ladder
+
+def test_build_ladder_knn_full_int8_ann(blobs):
+    X, y = blobs
+    eng = _engine("knn", X, y)
+    tiers = build_ladder(eng, X.shape[1])
+    assert [t.name for t in tiers] == ["full", "int8", "ann"]
+    assert tiers[0].engine is eng and tiers[0].capacity_factor == 1
+    assert tiers[1].capacity_factor == CAPACITY_FACTORS["int8"]
+    assert tiers[1].engine.estimator.quantized
+    assert tiers[2].engine.estimator.algorithm == "ann"
+    for t in tiers:                                 # warmed up front
+        assert t.engine.warmed and t.engine.bucket_launches == {}
+    # a cheaper tier's bucket lattice covers its larger per-drain budget
+    assert max(tiers[1].engine.warmed) >= 8 * CAPACITY_FACTORS["int8"]
+
+
+def test_build_ladder_non_knn_skips_ann(blobs):
+    X, y = blobs
+    tiers = build_ladder(_engine("gnb", X, y), X.shape[1])
+    assert [t.name for t in tiers] == ["full", "int8"]
+
+
+def test_ann_sibling_rejects_non_knn(blobs):
+    X, y = blobs
+    with pytest.raises(ValueError, match="exact-kNN"):
+        ann_sibling(_engine("gnb", X, y))
+
+
+def test_ann_sibling_label_agreement(blobs):
+    """The bottom rung serves the SAME reference set: refined IVF-PQ must
+    agree with exact kNN on >= 95% of labels (the committed bound)."""
+    X, y = blobs
+    eng = _engine("knn", X, y)
+    sib = ann_sibling(eng)
+    exact, _ = eng.estimator.predict_batch(X[:64])
+    approx, _ = sib.estimator.predict_batch(X[:64])
+    agree = float(np.mean(np.asarray(exact) == np.asarray(approx)))
+    assert agree >= 0.95, agree
+
+
+# ---------------------------------------------------- degraded-tier cache
+
+def test_degraded_tier_results_never_cached(blobs):
+    """Only exact tier-0 answers may enter the LRU: an int8 answer cached
+    during a brownout would keep serving as "exact" after recovery."""
+    X, y = blobs
+    eng = _engine("gnb", X, y)
+    pol = DegradePolicy(build_ladder(eng, X.shape[1]), hold=10**9)
+    sched = RequestScheduler(eng, max_wait=1, cache_size=8, degrade=pol)
+    pol.level = 1                                   # pin the int8 tier
+    sched.submit(X[0])
+    (r,) = sched.drain(force=True)
+    assert r.tier == "int8" and not r.cache_hit
+    sched.submit(X[0])                              # same bytes again
+    (r2,) = sched.drain(force=True)
+    assert not r2.cache_hit                         # nothing was cached
+    pol.level = 0
+    sched.submit(X[0])
+    (r3,) = sched.drain(force=True)
+    assert r3.tier == "full" and not r3.cache_hit
+    assert sched.results[sched.submit(X[0])].cache_hit   # tier 0 cached
+
+
+# -------------------------------------------------------- shed accounting
+
+def test_admission_control_sheds_queue_full(blobs):
+    X, y = blobs
+    sched = RequestScheduler(_engine("gnb", X, y), max_wait=2, max_queue=3)
+    ids = sched.submit(X[:5])
+    shed = [sched.results[i] for i in ids if i in sched.results]
+    assert [r.reason for r in shed] == ["queue_full", "queue_full"]
+    assert all(r.shed and r.prediction is None for r in shed)
+    assert sched.pending == 3
+    sched.flush()
+    assert sched.stats.completed == 3 and sched.stats.shed == 2
+    assert sched.stats.shed_reasons == {"queue_full": 2}
+    assert sched.stats.finished == 5
+    assert sched.stats.shed_rate == pytest.approx(2 / 5)
+
+
+def test_expired_requests_shed_before_launch(blobs):
+    X, y = blobs
+    sched = RequestScheduler(_engine("gnb", X, y), max_wait=4,
+                             shed_expired=True)
+    rid = sched.submit(X[0], deadline=1)
+    assert sched.drain() == []                      # tick 1: still live
+    (r,) = sched.drain()                            # tick 2: 2 > 1 -> shed
+    assert r.request_id == rid and r.reason == "expired"
+    assert r.queue_time == 2 and sched.pending == 0
+    assert sched.stats.launches == 0                # no slot was wasted
+    (ev,) = sched.events
+    assert ev.kind == "shed" and ev.get("reason") == "expired"
+
+
+def test_all_shed_window_stats_safe(blobs):
+    """Satellite contract: a window where EVERYTHING was shed reads nan
+    percentiles and zero throughput with non-zero shed counts — summary()
+    must not raise (the pre-PR stats divided by completed)."""
+    X, y = blobs
+    sched = RequestScheduler(_engine("gnb", X, y), max_wait=1, max_queue=0)
+    for i in range(4):
+        sched.submit(X[i], deadline=1)
+    sched.drain()
+    s = sched.stats.summary()
+    assert s["completed"] == 0 and s["shed"] == 4
+    assert np.isnan(s["p50"]) and np.isnan(s["p95"]) and np.isnan(s["p99"])
+    assert s["throughput"] == 0.0 and s["shed_rate"] == 1.0
+    assert s["miss_plus_shed_rate"] == 1.0
+    assert sched.stats.finished == 4

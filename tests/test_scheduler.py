@@ -209,4 +209,6 @@ def test_drain_feeds_straggler_escalation(blobs):
         sched.submit(X[i])
         sched.drain()
     assert Scripted.calls == 3
-    assert sched.events == [("checkpoint", 2, 9.9)]
+    # one typed Event (runtime/events.py vocabulary), not an ad-hoc tuple
+    assert [(e.kind, e.tick, e.get("ratio")) for e in sched.events] == \
+        [("straggler_checkpoint", 2, 9.9)]
